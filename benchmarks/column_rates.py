@@ -1,0 +1,43 @@
+"""Benchmark: per-in-channel rate distribution (paper Fig. 5).
+
+WaterSIC's defining property is UNEQUAL per-column rates: columns whose
+conditional innovation ℓ_ii is larger get more bits.  Reports the spread
+(min/median/max column entropy) for WaterSIC vs the uniform-rate GPTQ
+lattice at matched total rate.
+"""
+import time
+
+import numpy as np
+
+from repro.core import (column_entropies, gptq_via_zsic, plain_watersic,
+                        random_covariance)
+
+
+def run(rows_out):
+    rng = np.random.default_rng(0)
+    n, a = 64, 4096
+    sigma, _ = random_covariance(n, condition=300.0, seed=3)
+    w = rng.standard_normal((a, n))
+    t0 = time.time()
+    ws = plain_watersic(w, sigma, alpha=0.05)
+    gq = gptq_via_zsic(w, sigma, alpha=0.05)
+    us = (time.time() - t0) * 1e6 / 2
+    for name, out in (("watersic", ws), ("gptq", gq)):
+        ce = column_entropies(out["codes"])
+        rows_out.append((
+            f"column_rates/{name}", us,
+            f"min={ce.min():.3f};med={np.median(ce):.3f};"
+            f"max={ce.max():.3f};spread={ce.max()-ce.min():.3f}"))
+    # the paper's point: WaterSIC spread >> GPTQ spread at equal mean rate
+    ce_ws = column_entropies(ws["codes"])
+    ce_gq = column_entropies(gq["codes"])
+    rows_out.append(("column_rates/spread_ratio", us,
+                     f"ws_over_gptq="
+                     f"{(ce_ws.max()-ce_ws.min())/(ce_gq.max()-ce_gq.min()+1e-9):.2f}"))
+
+
+if __name__ == "__main__":
+    rows = []
+    run(rows)
+    for r in rows:
+        print(",".join(str(x) for x in r))

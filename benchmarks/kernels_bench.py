@@ -1,0 +1,65 @@
+"""Benchmark: kernel wrappers vs reference oracles (CPU wall-clock).
+
+On this CPU container the Pallas kernels run in interpret mode (Python
+emulation — NOT representative of TPU performance; the dry-run roofline
+gives the TPU story).  This benchmark times the XLA serving path
+(dequant_matmul_xla: the path the pjit'd decode graphs use) against the
+dequantize-then-matmul reference, plus the blocked ZSIC quantizer.
+"""
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import chol_lower, random_covariance, zsic_numpy
+from repro.kernels.dequant import dequant_matmul_ref, dequant_matmul_xla
+from repro.kernels.zsic import zsic_quantize
+
+
+def _time(f, *args, reps=20):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        f(*args).block_until_ready()
+    t0 = time.time()
+    for _ in range(reps):
+        out = f(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.time() - t0) / reps * 1e6
+
+
+def run(rows_out):
+    rng = np.random.default_rng(0)
+    m, k, n = 8, 1024, 1024  # decode-like: small batch, big weights
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    z = jnp.asarray(rng.integers(-8, 8, (n, k)), jnp.int8)
+    s = jnp.asarray(rng.random(k) * 0.1 + 0.01, jnp.float32)
+    t = jnp.asarray(rng.random(n) + 0.5, jnp.float32)
+    us_xla = _time(dequant_matmul_xla, x, z, s, t)
+    us_ref = _time(dequant_matmul_ref, x, z, s, t)
+    rows_out.append(("kernels/dequant_matmul_xla", us_xla,
+                     f"ref_us={us_ref:.0f};speedup={us_ref/us_xla:.2f}"))
+
+    nn, aa = 128, 256
+    sigma, _ = random_covariance(nn, condition=20.0, seed=1)
+    l = chol_lower(sigma)
+    w = rng.standard_normal((aa, nn))
+    y = (w @ l).astype(np.float32)
+    lf = l.astype(np.float32)
+    alphas = np.full(nn, 0.05, np.float32)
+    t0 = time.time()
+    z_np, _ = zsic_numpy(y, l, alphas)
+    us_np = (time.time() - t0) * 1e6
+    t0 = time.time()
+    z_k, _ = zsic_quantize(y, lf, alphas, block=64, block_rows=128,
+                           interpret=True)
+    us_k = (time.time() - t0) * 1e6
+    agree = float((np.asarray(z_k) == z_np).mean())
+    rows_out.append(("kernels/zsic_blocked_interpret", us_k,
+                     f"numpy_ref_us={us_np:.0f};agree={agree:.4f}"))
+
+
+if __name__ == "__main__":
+    rows = []
+    run(rows)
+    for r in rows:
+        print(",".join(str(x) for x in r))

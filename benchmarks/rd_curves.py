@@ -1,0 +1,76 @@
+"""Benchmark: rate-distortion tables (paper Tables 1/2 analogue).
+
+Trains a small in-repo LM on the synthetic corpus, PTQs it with WaterSIC /
+WaterSIC-FT / Huffman-GPTQ / RTN at multiple rates, reports perplexity.
+(WikiText-2 + Llama are not available offline; the table *structure* and
+method ordering are what this benchmark reproduces — see DESIGN.md §2.)
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.data import DataConfig, global_batch_for_step
+from repro.models import init_params, split_tree
+from repro.quant.pipeline import PTQConfig, model_ppl, quantize_model
+from repro.train import AdamWConfig, TrainState, adamw_init, make_train_step
+from repro.train.distill import finetune_rescalers
+
+_CACHE = {}
+
+
+def trained_model(steps=250):
+    if "model" in _CACHE:
+        return _CACHE["model"]
+    cfg = ArchConfig(name="bench-lm", family="dense", n_layers=3,
+                     d_model=96, n_heads=6, n_kv=2, d_ff=256, vocab=256,
+                     head_dim=16)
+    params, _ = split_tree(init_params(cfg, jax.random.PRNGKey(0)))
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=16)
+    opt = AdamWConfig(lr=2e-3, total_steps=steps, warmup_steps=steps // 20)
+    state = TrainState(params=params, opt=adamw_init(params), err=None)
+    step = jax.jit(make_train_step(cfg, opt))
+    for s in range(steps):
+        state, m = step(state, jax.tree.map(
+            jnp.asarray, global_batch_for_step(dcfg, s)))
+    calib = [global_batch_for_step(dcfg, 10_000 + i)["tokens"]
+             for i in range(2)]
+    evalb = [np.concatenate(
+        [global_batch_for_step(dcfg, 20_000 + i)["tokens"],
+         global_batch_for_step(dcfg, 20_000 + i)["targets"][:, -1:]],
+        axis=1) for i in range(2)]
+    _CACHE["model"] = (cfg, state.params, dcfg, calib, evalb)
+    return _CACHE["model"]
+
+
+def run(rows_out, rates=(1.5, 2.5), ft=True):
+    cfg, params, dcfg, calib, evalb = trained_model()
+    ppl_fp = model_ppl(cfg, params, evalb)
+    rows_out.append(("rd_curves/fp16", 0.0, f"ppl={ppl_fp:.3f}"))
+    for bits in rates:
+        for method in ("watersic", "hptq", "rtn"):
+            t0 = time.time()
+            qp, qlin, budget, _ = quantize_model(
+                cfg, params, calib, PTQConfig(target_bits=bits,
+                                              method=method))
+            ppl = model_ppl(cfg, qp, evalb)
+            us = (time.time() - t0) * 1e6
+            rows_out.append((f"rd_curves/{method}/{bits}b", us,
+                             f"ppl={ppl:.3f};rate={budget.realized_rate:.3f}"))
+            if ft and method == "watersic":
+                ftb = [global_batch_for_step(dcfg, 30_000 + i)["tokens"]
+                       for i in range(3)]
+                qp_ft, _, _ = finetune_rescalers(cfg, params, qp, qlin, ftb,
+                                                 steps=40, log_every=0)
+                ppl_ft = model_ppl(cfg, qp_ft, evalb)
+                rows_out.append((f"rd_curves/watersic-ft/{bits}b", us,
+                                 f"ppl={ppl_ft:.3f}"))
+
+
+if __name__ == "__main__":
+    rows = []
+    run(rows)
+    for r in rows:
+        print(",".join(str(x) for x in r))

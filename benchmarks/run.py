@@ -1,0 +1,41 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only theory_gap,codecs]
+
+Prints ``name,us_per_call,derived`` CSV rows (harness contract).
+Mapping to the paper:
+    theory_gap    — Theorem 3.3 gap table (the IT optimality claim)
+    rd_curves     — Tables 1/2 (PPL vs rate, WaterSIC[-FT]/HPTQ/RTN)
+    column_rates  — Fig. 5 (unequal per-in-channel rates)
+    codecs        — Table 6 (entropy vs Huffman/zlib/LZMA bits)
+    ablations     — Figs. 6-10 (LMMSE/rescalers/drift/residual)
+    kernels_bench — kernel wrappers vs oracles
+"""
+import argparse
+import importlib
+import sys
+import time
+
+MODULES = ["theory_gap", "column_rates", "codecs", "ablations",
+           "kernels_bench", "rd_curves"]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+    mods = args.only.split(",") if args.only else MODULES
+    rows = []
+    print("name,us_per_call,derived")
+    for m in mods:
+        mod = importlib.import_module(f"benchmarks.{m}")
+        t0 = time.time()
+        before = len(rows)
+        mod.run(rows)
+        for r in rows[before:]:
+            print(f"{r[0]},{r[1]:.1f},{r[2]}", flush=True)
+        print(f"# {m} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

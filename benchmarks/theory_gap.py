@@ -1,0 +1,40 @@
+"""Benchmark: Theorem 3.3 — measured rate gaps to the waterfilling bound.
+
+Paper claim: WaterSIC's high-rate gap is 0.255 bits uniformly over Σ_X;
+GPTQ's is 0.255 + ½log₂(AM/GM of ℓ_ii²), unbounded for ill-conditioned Σ.
+One row per covariance condition number (the paper's central theory table).
+"""
+import time
+
+import numpy as np
+
+from repro.core import (GAP_CUBE_BITS, chol_lower, column_entropies,
+                        gptq_gap_bits, gptq_via_zsic, high_rate_bound,
+                        plain_watersic, random_covariance)
+
+
+def run(rows_out):
+    rng = np.random.default_rng(0)
+    n, a = 48, 8192
+    for cond in (10.0, 100.0, 1000.0):
+        sigma, _ = random_covariance(n, condition=cond, seed=int(cond))
+        w = rng.standard_normal((a, n))
+        t0 = time.time()
+        ws = plain_watersic(w, sigma, alpha=0.05)
+        gq = gptq_via_zsic(w, sigma, alpha=0.05)
+        dt = (time.time() - t0) * 1e6 / 2
+        for name, out, pred in (
+                ("watersic", ws, GAP_CUBE_BITS),
+                ("gptq", gq, gptq_gap_bits(np.diag(chol_lower(sigma))))):
+            rate = float(column_entropies(out["codes"]).mean())
+            gap = rate - high_rate_bound(out["distortion"], 1.0, sigma)
+            rows_out.append((
+                f"theory_gap/{name}/cond{int(cond)}", dt,
+                f"gap={gap:.4f};pred={pred:.4f};err={abs(gap-pred):.4f}"))
+
+
+if __name__ == "__main__":
+    rows = []
+    run(rows)
+    for r in rows:
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,69 @@
+"""End-to-end driver: train a small LM for a few hundred steps, then PTQ it
+with WaterSIC / Huffman-GPTQ / RTN across rates and evaluate perplexity —
+the in-repo analogue of the paper's Tables 1/2.
+
+    PYTHONPATH=src python examples/quantize_model.py [--steps 300]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.data import DataConfig, global_batch_for_step
+from repro.models import init_params, split_tree
+from repro.quant.pipeline import PTQConfig, model_ppl, quantize_model
+from repro.train import AdamWConfig, TrainState, adamw_init, make_train_step
+
+
+def build_and_train(steps=300, seed=0):
+    cfg = ArchConfig(name="lm-20m", family="dense", n_layers=4, d_model=128,
+                     n_heads=8, n_kv=4, d_ff=384, vocab=512, head_dim=16)
+    params, _ = split_tree(init_params(cfg, jax.random.PRNGKey(seed)))
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=16)
+    opt = AdamWConfig(lr=2e-3, total_steps=steps, warmup_steps=steps // 20)
+    state = TrainState(params=params, opt=adamw_init(params), err=None)
+    step = jax.jit(make_train_step(cfg, opt))
+    t0 = time.time()
+    for s in range(steps):
+        batch = jax.tree.map(jnp.asarray, global_batch_for_step(dcfg, s))
+        state, m = step(state, batch)
+        if s % 50 == 0:
+            print(f"  train step {s:4d} loss {float(m['loss']):.4f}")
+    print(f"  trained {steps} steps in {time.time()-t0:.0f}s "
+          f"(final loss {float(m['loss']):.4f})")
+    return cfg, state.params, dcfg
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--rates", default="1.5,2.0,3.0")
+    ap.add_argument("--calib-batches", type=int, default=2)
+    args = ap.parse_args()
+
+    print("== training the base model ==")
+    cfg, params, dcfg = build_and_train(args.steps)
+    calib = [global_batch_for_step(dcfg, 10_000 + i)["tokens"]
+             for i in range(args.calib_batches)]
+    evalb = [np.concatenate(
+        [global_batch_for_step(dcfg, 20_000 + i)["tokens"],
+         global_batch_for_step(dcfg, 20_000 + i)["targets"][:, -1:]], axis=1)
+        for i in range(2)]
+    ppl_fp = model_ppl(cfg, params, evalb)
+    print(f"\nunquantized PPL: {ppl_fp:.3f}\n")
+    print(f"{'rate':>5s} {'method':>15s} {'realized':>9s} {'PPL':>9s}")
+    for bits in [float(r) for r in args.rates.split(",")]:
+        for method in ("watersic", "hptq", "rtn"):
+            qp, qlin, budget, _ = quantize_model(
+                cfg, params, calib, PTQConfig(target_bits=bits,
+                                              method=method))
+            ppl = model_ppl(cfg, qp, evalb)
+            print(f"{bits:5.2f} {method:>15s} {budget.realized_rate:9.3f} "
+                  f"{ppl:9.3f}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

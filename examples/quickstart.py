@@ -1,0 +1,47 @@
+"""Quickstart: quantize one linear layer with WaterSIC and compare to GPTQ.
+
+Shows the core rate-distortion claim of the paper on a single (a×n) weight
+matrix with an ill-conditioned activation covariance: at matched rate,
+WaterSIC's distortion beats Huffman-GPTQ's, and its measured gap to the
+waterfilling bound is ≈ 0.255 bits (Theorem 3.3).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (CalibStats, GAP_CUBE_BITS, chol_lower,
+                        column_entropies, gptq_gap_bits, gptq_via_zsic,
+                        high_rate_bound, layer_distortion, plain_watersic,
+                        quantize_at_rate, random_covariance)
+
+
+def main():
+    rng = np.random.default_rng(0)
+    a, n = 4096, 64
+    sigma, _ = random_covariance(n, condition=300.0, seed=1)
+    w = rng.standard_normal((a, n))
+
+    print("== PlainWaterSIC vs GPTQ (matched lattice density) ==")
+    ws = plain_watersic(w, sigma, alpha=0.05)
+    gq = gptq_via_zsic(w, sigma, alpha=0.05)
+    for name, out in (("WaterSIC", ws), ("Huffman-GPTQ", gq)):
+        rate = column_entropies(out["codes"]).mean()
+        gap = rate - high_rate_bound(out["distortion"], 1.0, sigma)
+        print(f"  {name:13s} rate={rate:.3f} b/w  D={out['distortion']:.3e}"
+              f"  gap-to-IT={gap:+.3f} bits")
+    print(f"  theory: WaterSIC gap={GAP_CUBE_BITS:.3f}, "
+          f"GPTQ gap={gptq_gap_bits(np.diag(chol_lower(sigma))):.3f}")
+
+    print("\n== Full WaterSIC (Alg. 3) at a target rate ==")
+    stats = CalibStats(sigma_x=jnp.asarray(sigma, jnp.float32))
+    for bits in (2.0, 3.0, 4.0):
+        q = quantize_at_rate(jnp.asarray(w, jnp.float32), stats, bits)
+        d = layer_distortion(w.astype(np.float32), q, sigma)
+        print(f"  target={bits:.1f}  entropy={q.entropy_bits:.3f}  "
+              f"rate_eff={q.rate_eff:.3f}  D={d:.3e}  "
+          f"dead={int(q.dead_mask.sum())}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""repro.configs — assigned architectures (exact dims from the brief)."""
+import importlib
+
+_MODULES = [
+    "whisper_base", "recurrentgemma_2b", "minicpm_2b", "qwen1_5_32b",
+    "qwen2_5_32b", "minitron_8b", "rwkv6_7b", "phi3_5_moe",
+    "moonshot_v1_16b", "paligemma_3b",
+]
+_loaded = False
+
+
+def _load_all():
+    global _loaded
+    if not _loaded:
+        for m in _MODULES:
+            importlib.import_module(f"repro.configs.{m}")
+        _loaded = True
+
+
+from .base import (ArchConfig, SHAPES, ShapeSpec, get_config, input_specs,
+                   list_archs, runnable_cells)
+
+__all__ = ["ArchConfig", "SHAPES", "ShapeSpec", "get_config", "input_specs",
+           "list_archs", "runnable_cells"]

@@ -1,0 +1,240 @@
+"""Architecture config schema + shape grid + input specs.
+
+One ``ArchConfig`` per assigned architecture lives in configs/<id>.py with
+the exact numbers from the brief; ``reduced()`` derives the CPU smoke-test
+variant (same family/topology, tiny dims).
+
+The four assigned input shapes (brief):
+    train_4k     seq 4096,   global_batch 256   (training)
+    prefill_32k  seq 32768,  global_batch 32    (inference prefill)
+    decode_32k   seq 32768,  global_batch 128   (decode: 1 new token, 32k KV)
+    long_500k    seq 524288, global_batch 1     (long-context decode)
+
+``long_500k`` requires sub-quadratic attention — only `subquadratic` archs
+run it (rwkv6, recurrentgemma); pure full-attention archs skip it (noted in
+DESIGN.md §5).  ``decode_*``/``long_*`` lower ``serve_step``, not train.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ArchConfig", "ShapeSpec", "SHAPES", "REGISTRY", "register",
+           "get_config", "list_archs", "runnable_cells"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0            # 0 → d_model // n_heads
+    qkv_bias: bool = False
+    out_bias: bool = False
+    activation: str = "silu"
+    gated_mlp: bool = True
+    norm: str = "rmsnorm"        # rmsnorm | layernorm
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = True
+    embed_scale: bool = False    # gemma-style sqrt(d) embedding scaling
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # hybrid (RG-LRU) / local attention
+    block_pattern: Tuple[str, ...] = ()   # e.g. ("rec", "rec", "attn")
+    local_window: int = 0                 # 0 = global attention
+    lru_width: int = 0
+    conv_width: int = 4
+    # rwkv6
+    wkv_head_dim: int = 64
+    decay_lora: int = 64
+    # enc-dec (whisper)
+    enc_layers: int = 0
+    enc_seq: int = 0             # fixed encoder frame count (stub frontend)
+    # vlm (paligemma)
+    prefix_tokens: int = 0       # patch-embedding prefix (stub frontend)
+    frontend: str = ""           # "audio" | "vision" | ""
+    subquadratic: bool = False   # may run long_500k
+    lr_schedule: str = "cosine"  # minicpm: "wsd"
+    source: str = ""             # provenance note from the brief
+    # dry-run knobs (per-arch overridable)
+    microbatch: int = 0          # 0 → auto
+    remat: bool = True
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding rows padded to a multiple of 256 so the vocab dim is
+        TP-shardable (logits are sliced back to the true vocab)."""
+        return ((self.vocab + 255) // 256) * 256
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + blocks)."""
+        d, ff, v = self.d_model, self.d_ff, self.vocab
+        hd = self.resolved_head_dim
+        attn = d * hd * self.n_heads * 2 + d * hd * self.n_kv * 2
+        if self.family == "ssm":
+            blk = d * d * 5 + d * self.decay_lora * 2 \
+                + (d * ff + ff * d + d * d)
+            per_layer = blk
+        else:
+            if self.n_experts:
+                mlp_p = self.n_experts * (2 * d * ff + ff * d) \
+                    + d * self.n_experts
+            else:
+                mlp_p = (2 * d * ff + ff * d) if self.gated_mlp \
+                    else (d * ff + ff * d)
+            per_layer = attn + mlp_p
+            if self.block_pattern:
+                # hybrid: recurrent blocks replace attention with LRU
+                lw = self.lru_width or d
+                rec = 2 * d * lw + lw * d + 2 * lw * lw // 8 + lw * 4
+                n_attn = sum(1 for b in self._layer_types() if b == "attn")
+                n_rec = self.n_layers - n_attn
+                mlp_all = self.n_layers * mlp_p
+                return v * d + n_attn * attn + n_rec * rec + mlp_all
+        total = v * d + self.n_layers * per_layer
+        if self.enc_layers:
+            total += self.enc_layers * (attn + 2 * d * ff)
+        return total
+
+    def active_param_count(self) -> int:
+        """MoE: active (per-token) params — 6·N_active·D roofline basis."""
+        if not self.n_experts:
+            return self.param_count()
+        d, ff = self.d_model, self.d_ff
+        dense_like = self.param_count() \
+            - self.n_layers * self.n_experts * (2 * d * ff + ff * d) \
+            + self.n_layers * self.top_k * (2 * d * ff + ff * d)
+        return dense_like
+
+    def _layer_types(self) -> Tuple[str, ...]:
+        if not self.block_pattern:
+            return ("attn",) * self.n_layers
+        reps = self.n_layers // len(self.block_pattern) + 1
+        return (self.block_pattern * reps)[: self.n_layers]
+
+    def reduced(self) -> "ArchConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        changes = dict(
+            n_layers=min(self.n_layers, 2 if not self.block_pattern else 3),
+            d_model=64,
+            n_heads=max(2, min(self.n_heads, 4)),
+            n_kv=1 if self.n_kv == 1 else 2,
+            d_ff=128,
+            vocab=256,
+            head_dim=16,
+            lru_width=64 if self.lru_width else 0,
+            wkv_head_dim=16,
+            decay_lora=8,
+            enc_layers=min(self.enc_layers, 2),
+            enc_seq=min(self.enc_seq, 8) if self.enc_seq else 0,
+            prefix_tokens=min(self.prefix_tokens, 4),
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            name=self.name + "-smoke",
+        )
+        if self.block_pattern:
+            changes["n_layers"] = len(self.block_pattern)
+        return dataclasses.replace(self, **changes)
+
+
+REGISTRY: Dict[str, ArchConfig] = {}
+
+
+def register(cfg: ArchConfig) -> ArchConfig:
+    REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ArchConfig:
+    from . import _load_all  # lazy: populate registry
+    _load_all()
+    return REGISTRY[name]
+
+
+def list_archs():
+    from . import _load_all
+    _load_all()
+    return sorted(REGISTRY)
+
+
+def runnable_cells():
+    """All (arch, shape) cells; skipped ones flagged with a reason."""
+    cells = []
+    for name in list_archs():
+        cfg = REGISTRY[name]
+        for sname, sh in SHAPES.items():
+            skip = ""
+            if sname == "long_500k" and not cfg.subquadratic:
+                skip = "full-attention arch: 500k dense-KV decode out of scope"
+            cells.append((name, sname, skip))
+    return cells
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins — no allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract model inputs for (cfg, shape).
+
+    train:   token/label batch (+ stub frontend embeddings where applicable)
+    prefill: token batch
+    decode:  single-token batch (KV cache/state specs come from the model).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.bfloat16
+    sds = jax.ShapeDtypeStruct
+    if cfg.family == "encdec":
+        enc = sds((b, cfg.enc_seq, cfg.d_model), f32)  # stub conv frontend
+        if shape.kind == "train":
+            return {"frames": enc, "tokens": sds((b, s), i32),
+                    "targets": sds((b, s), i32)}
+        if shape.kind == "prefill":
+            return {"frames": enc, "tokens": sds((b, s), i32)}
+        return {"token": sds((b, 1), i32)}
+    if cfg.family == "vlm":
+        pre = sds((b, cfg.prefix_tokens, cfg.d_model), f32)  # stub SigLIP
+        text = max(s - cfg.prefix_tokens, 1)
+        if shape.kind == "train":
+            return {"patches": pre, "tokens": sds((b, text), i32),
+                    "targets": sds((b, text), i32)}
+        if shape.kind == "prefill":
+            return {"patches": pre, "tokens": sds((b, text), i32)}
+        return {"token": sds((b, 1), i32)}
+    if shape.kind == "train":
+        return {"tokens": sds((b, s), i32), "targets": sds((b, s), i32)}
+    if shape.kind == "prefill":
+        return {"tokens": sds((b, s), i32)}
+    return {"token": sds((b, 1), i32)}

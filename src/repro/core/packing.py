@@ -1,0 +1,96 @@
+"""Bit packing of integer codes for storage / serving.
+
+The serving path stores ZSIC codes as packed int4 (two codes per byte) or
+int8 in HBM with per-column fused scales (α⊙γ) and per-row t — see
+kernels/dequant.  Codes outside the packed range are stored in a sparse
+escape list (entropy coding makes large codes rare, paper §1: "occasional
+large integers get assigned long bit-descriptions, but due to being
+infrequent do not affect the overall rate").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import numpy as np
+
+__all__ = ["pack_int4", "unpack_int4", "PackedCodes", "pack_codes",
+           "unpack_codes"]
+
+
+def pack_int4(z: np.ndarray) -> np.ndarray:
+    """Pack int values in [-8, 7] into uint8 nibbles (pairs along axis -1)."""
+    z = np.asarray(z)
+    if z.shape[-1] % 2:
+        raise ValueError("last dim must be even for int4 packing")
+    if z.min() < -8 or z.max() > 7:
+        raise ValueError("int4 range exceeded")
+    u = (z.astype(np.int16) & 0xF).astype(np.uint8)
+    lo, hi = u[..., 0::2], u[..., 1::2]
+    return (lo | (hi << 4)).astype(np.uint8)
+
+
+def unpack_int4(packed: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`pack_int4` (sign-extended)."""
+    p = np.asarray(packed, dtype=np.uint8)
+    lo = (p & 0xF).astype(np.int8)
+    hi = (p >> 4).astype(np.int8)
+    lo = np.where(lo > 7, lo - 16, lo).astype(np.int8)
+    hi = np.where(hi > 7, hi - 16, hi).astype(np.int8)
+    out = np.empty(p.shape[:-1] + (p.shape[-1] * 2,), dtype=np.int8)
+    out[..., 0::2] = lo
+    out[..., 1::2] = hi
+    return out
+
+
+@dataclass
+class PackedCodes:
+    """Packed code matrix + escape list for out-of-range entries."""
+
+    payload: np.ndarray          # uint8 (int4) or int8 buffer
+    nbits: int                   # 4 or 8
+    shape: Tuple[int, int]
+    escape_idx: np.ndarray       # flat indices of escaped entries (int64)
+    escape_val: np.ndarray       # their true values (int32)
+
+    @property
+    def storage_bits_per_entry(self) -> float:
+        n = int(np.prod(self.shape))
+        esc = self.escape_idx.size * (64 + 32)
+        return (self.payload.size * 8 + esc) / n
+
+
+def pack_codes(z: np.ndarray, nbits: int = 4) -> PackedCodes:
+    z = np.asarray(z)
+    a, n = z.shape
+    if nbits == 4:
+        lo, hi = -8, 7
+    elif nbits == 8:
+        lo, hi = -128, 127
+    else:
+        raise ValueError("nbits must be 4 or 8")
+    clipped = np.clip(z, lo, hi)
+    esc = np.nonzero((z < lo) | (z > hi))
+    flat_idx = np.ravel_multi_index(esc, z.shape).astype(np.int64)
+    esc_val = z[esc].astype(np.int32)
+    body = clipped.astype(np.int8)
+    if nbits == 4:
+        if n % 2:
+            body = np.concatenate([body, np.zeros((a, 1), np.int8)], axis=1)
+        payload = pack_int4(body)
+    else:
+        payload = body
+    return PackedCodes(payload=payload, nbits=nbits, shape=(a, n),
+                       escape_idx=flat_idx, escape_val=esc_val)
+
+
+def unpack_codes(p: PackedCodes) -> np.ndarray:
+    a, n = p.shape
+    if p.nbits == 4:
+        body = unpack_int4(p.payload)[:, :n].astype(np.int32)
+    else:
+        body = p.payload.astype(np.int32)
+    out = body.copy()
+    if p.escape_idx.size:
+        out.ravel()[p.escape_idx] = p.escape_val
+    return out

@@ -1,0 +1,124 @@
+"""rANS (range asymmetric numeral system) entropy coder.
+
+Huffman loses up to ~0.5 b/sym on skewed alphabets (codeword lengths are
+integers); rANS achieves the entropy to within ~0.01 b/sym with table-driven
+decode — it is what production weight-compression deployments use (zstd's
+FSE is the tANS sibling; the paper's rate numbers assume a near-entropy
+coder).  This is a byte-renormalized streaming rANS with 12-bit frequency
+quantization.
+
+    enc = RansCodec.from_data(z)
+    payload = enc.encode(z)
+    z2 = enc.decode(payload, z.size)       # exact round trip
+    bits = 8 * len(payload) / z.size       # ≈ empirical entropy
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List
+
+import numpy as np
+
+__all__ = ["RansCodec"]
+
+_PROB_BITS = 12
+_PROB_SCALE = 1 << _PROB_BITS
+_RANS_L = 1 << 23          # renormalization low bound
+_MASK = (1 << 32) - 1
+
+
+def _quantize_freqs(counts: np.ndarray) -> np.ndarray:
+    """Quantize symbol counts to sum to 2^12 with every freq ≥ 1."""
+    total = counts.sum()
+    freqs = np.maximum((counts.astype(np.float64) / total
+                        * _PROB_SCALE).round().astype(np.int64), 1)
+    # fix the sum by nudging the largest entries
+    diff = int(freqs.sum() - _PROB_SCALE)
+    order = np.argsort(-freqs)
+    i = 0
+    while diff != 0:
+        j = order[i % len(order)]
+        step = 1 if diff > 0 else -1
+        if freqs[j] - step >= 1:
+            freqs[j] -= step
+            diff -= step
+        i += 1
+    return freqs
+
+
+@dataclass
+class RansCodec:
+    symbols: np.ndarray      # sorted unique symbol values (int64)
+    freqs: np.ndarray        # quantized freqs, sum = 2^12
+    starts: np.ndarray       # cumulative starts
+
+    @staticmethod
+    def from_data(z) -> "RansCodec":
+        z = np.asarray(z).ravel().astype(np.int64)
+        symbols, counts = np.unique(z, return_counts=True)
+        freqs = _quantize_freqs(counts)
+        starts = np.concatenate([[0], np.cumsum(freqs)[:-1]])
+        return RansCodec(symbols=symbols, freqs=freqs, starts=starts)
+
+    @property
+    def table_bits(self) -> int:
+        return len(self.symbols) * (32 + _PROB_BITS)
+
+    def _sym_index(self, z: np.ndarray) -> np.ndarray:
+        idx = np.clip(np.searchsorted(self.symbols, z), 0,
+                      len(self.symbols) - 1)
+        if not np.array_equal(self.symbols[idx], z):
+            raise ValueError("symbol outside codec alphabet")
+        return idx
+
+    # -- encode -------------------------------------------------------------
+    def encode(self, z) -> bytes:
+        z = np.asarray(z).ravel().astype(np.int64)
+        idx = self._sym_index(z)
+        freqs = self.freqs
+        starts = self.starts
+        out: List[int] = []
+        state = _RANS_L
+        # encode in reverse so decode streams forward
+        for i in idx[::-1].tolist():
+            f = int(freqs[i])
+            s = int(starts[i])
+            # renormalize: emit low bytes while state too big
+            x_max = ((_RANS_L >> _PROB_BITS) << 8) * f
+            while state >= x_max:
+                out.append(state & 0xFF)
+                state >>= 8
+            state = ((state // f) << _PROB_BITS) + (state % f) + s
+        # flush 4 bytes of final state
+        for _ in range(4):
+            out.append(state & 0xFF)
+            state >>= 8
+        return bytes(out[::-1])
+
+    # -- decode -------------------------------------------------------------
+    def decode(self, payload: bytes, count: int) -> np.ndarray:
+        buf = np.frombuffer(payload, dtype=np.uint8)
+        pos = 0
+        state = 0
+        for _ in range(4):
+            state = (state << 8) | int(buf[pos])
+            pos += 1
+        # slot -> symbol lookup table (2^12 entries)
+        slot_sym = np.zeros(_PROB_SCALE, dtype=np.int64)
+        for i, (s, f) in enumerate(zip(self.starts, self.freqs)):
+            slot_sym[int(s):int(s) + int(f)] = i
+        out = np.empty(count, dtype=np.int64)
+        for k in range(count):
+            slot = state & (_PROB_SCALE - 1)
+            i = int(slot_sym[slot])
+            f = int(self.freqs[i])
+            s = int(self.starts[i])
+            out[k] = self.symbols[i]
+            state = f * (state >> _PROB_BITS) + slot - s
+            while state < _RANS_L and pos < len(buf):
+                state = (state << 8) | int(buf[pos])
+                pos += 1
+        return out
+
+    def measure_bits_per_symbol(self, z) -> float:
+        return 8.0 * len(self.encode(z)) / np.asarray(z).size

@@ -1,0 +1,68 @@
+"""Global rate-budget controller (paper §4 "Rate assignment", App. D).
+
+The model-level PTQ pipeline quantizes layers sequentially.  A running bit
+budget (initialized to target_bits × total_params) is maintained; before each
+layer the remaining budget is spread evenly (parameter-count weighted) over
+the not-yet-quantized matrices, and the achieved bits are subtracted after.
+Dead-feature erasure lowers early-layer rates, so the leftover budget drifts
+to later layers ("a mild increase in per-layer rates toward the end of the
+network" — paper App. D).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+__all__ = ["RateBudget"]
+
+
+@dataclass
+class RateBudget:
+    target_bits_per_param: float
+    layer_params: Dict[str, int]                 # name -> a*n
+    spent_bits: float = 0.0
+    done: Dict[str, float] = field(default_factory=dict)  # name -> achieved
+
+    @property
+    def total_params(self) -> int:
+        return sum(self.layer_params.values())
+
+    @property
+    def total_budget_bits(self) -> float:
+        return self.target_bits_per_param * self.total_params
+
+    @property
+    def remaining_params(self) -> int:
+        return sum(p for k, p in self.layer_params.items()
+                   if k not in self.done)
+
+    def next_target(self, name: str) -> float:
+        """Bits/param target for `name`: remaining budget spread evenly."""
+        if name in self.done:
+            raise KeyError(f"layer {name} already quantized")
+        rem_params = self.remaining_params
+        if rem_params <= 0:
+            return self.target_bits_per_param
+        remaining_bits = self.total_budget_bits - self.spent_bits
+        return max(remaining_bits / rem_params, 0.05)
+
+    def record(self, name: str, achieved_bits_per_param: float) -> None:
+        params = self.layer_params[name]
+        self.spent_bits += achieved_bits_per_param * params
+        self.done[name] = achieved_bits_per_param
+
+    @property
+    def realized_rate(self) -> float:
+        """Parameter-count-weighted average of achieved per-layer rates."""
+        if not self.done:
+            return 0.0
+        num = sum(r * self.layer_params[k] for k, r in self.done.items())
+        den = sum(self.layer_params[k] for k in self.done)
+        return num / den
+
+    def summary(self) -> List[str]:
+        lines = [f"target={self.target_bits_per_param:.3f} bits/param, "
+                 f"realized={self.realized_rate:.3f}"]
+        for k, r in self.done.items():
+            lines.append(f"  {k}: {r:.3f} bits ({self.layer_params[k]} params)")
+        return lines

@@ -1,0 +1,105 @@
+"""Diagonal row/column rescaler optimization (paper Alg. 4, §4).
+
+After ZSIC produces Ŵ₀ = Z·diag(α), the final reconstruction is searched in
+the form Ŵ = T·Ŵ₀·Γ with diagonal T (rows / out-channels, tr T = a) and Γ
+(columns / in-channels).  Alternating exact coordinate minimization of
+
+  J(T,Γ) = (1/an) tr( W Σ_X Wᵀ − 2 (W Σ_{X,X̂} + Σ_{Δ,X̂}) (T Ŵ₀ Γ)ᵀ
+                      + T Ŵ₀ Γ Σ_X̂ Γ Ŵ₀ᵀ T )
+
+  Γ-step:  γ = (G + λI)⁻¹ d,  G = Σ_X̂ ⊙ (Ŵ₀ᵀ diag(t²) Ŵ₀)   (PSD by Schur)
+           d = diag( Ŵ₀ᵀ diag(t) (W Σ_{X,X̂} + Σ_{Δ,X̂}) )
+  T-step:  t_i = p_i / (q_i + λ),
+           p = diag( (W Σ_{X,X̂} + Σ_{Δ,X̂}) diag(γ) Ŵ₀ᵀ ),
+           q = diag( Ŵ₀ diag(γ) Σ_X̂ diag(γ) Ŵ₀ᵀ )
+
+with renormalization ‖t‖₁ = a after each round (scale invariance).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["RescalerResult", "rescaler_loss", "find_optimal_rescalers"]
+
+
+class RescalerResult(NamedTuple):
+    t: jnp.ndarray        # (a,) row rescalers, ‖t‖₁ = a
+    gamma: jnp.ndarray    # (n,) column rescalers
+    loss: jnp.ndarray     # final J value
+    iters: int
+
+
+def rescaler_loss(t, gamma, w0_hat, w, sigma_x, sigma_xhat, cross):
+    """J(T,Γ) as defined above; ``cross`` = W Σ_{X,X̂} + Σ_{Δ,X̂} (a×n)."""
+    a, n = w0_hat.shape
+    wg = w0_hat * gamma[None, :]
+    twg = t[:, None] * wg
+    term_const = jnp.einsum("ij,jk,ik->", w, sigma_x, w)
+    term_cross = jnp.einsum("ij,ij->", cross, twg)
+    term_quad = jnp.einsum("ij,jk,ik->", twg, sigma_xhat, twg)
+    return (term_const - 2.0 * term_cross + term_quad) / (a * n)
+
+
+def find_optimal_rescalers(
+    w0_hat: jnp.ndarray,
+    w: jnp.ndarray,
+    sigma_x: jnp.ndarray,
+    sigma_xhat: Optional[jnp.ndarray] = None,
+    sigma_x_xhat: Optional[jnp.ndarray] = None,
+    sigma_delta_xhat: Optional[jnp.ndarray] = None,
+    *,
+    gamma_init: Optional[jnp.ndarray] = None,
+    ridge: float = 0.0,
+    tol: float = 1e-8,
+    max_iters: int = 50,
+) -> RescalerResult:
+    """Alg. 4.  Missing statistics default per Alg. 3: Σ_X̂ ← Σ_X,
+    Σ_{X,X̂} ← Σ_X, Σ_{Δ,X̂} ← 0."""
+    a, n = w0_hat.shape
+    dtype = w0_hat.dtype
+    if sigma_xhat is None:
+        sigma_xhat = sigma_x
+    if sigma_x_xhat is None:
+        sigma_x_xhat = sigma_x
+    cross = w @ sigma_x_xhat
+    if sigma_delta_xhat is not None:
+        cross = cross + sigma_delta_xhat
+
+    t = jnp.ones((a,), dtype)
+    gamma = (jnp.ones((n,), dtype) if gamma_init is None
+             else jnp.asarray(gamma_init, dtype))
+    # normalize ‖t‖₁ = a (push scale into γ)
+    s = jnp.sum(jnp.abs(t)) / a
+    t, gamma = t / s, gamma * s
+
+    loss_prev = rescaler_loss(t, gamma, w0_hat, w, sigma_x, sigma_xhat, cross)
+    iters = 0
+    for it in range(max_iters):
+        # -- Γ-step ---------------------------------------------------------
+        f = w0_hat.T @ (t[:, None] ** 2 * w0_hat)          # (n, n)
+        g = sigma_xhat * f                                  # Hadamard
+        d = jnp.diagonal(w0_hat.T @ (t[:, None] * cross))   # (n,)
+        # relative jitter guards all-zero code columns (singular G) at low
+        # rate; γ for such columns is irrelevant (they contribute nothing)
+        jitter = ridge + 1e-7 * jnp.mean(jnp.diagonal(g)) + 1e-30
+        gamma = jax.scipy.linalg.solve(
+            g + jitter * jnp.eye(n, dtype=dtype), d, assume_a="pos")
+        # -- T-step ----------------------------------------------------------
+        wg = w0_hat * gamma[None, :]
+        p = jnp.einsum("ij,ij->i", cross * gamma[None, :], w0_hat)
+        q = jnp.einsum("ij,jk,ik->i", wg, sigma_xhat, wg)
+        t = p / (q + ridge + 1e-7 * jnp.mean(q) + 1e-30)
+        # -- renormalize & converge ------------------------------------------
+        s = jnp.sum(jnp.abs(t)) / a
+        s = jnp.where(s > 0, s, 1.0)
+        t, gamma = t / s, gamma * s
+        loss = rescaler_loss(t, gamma, w0_hat, w, sigma_x, sigma_xhat, cross)
+        iters = it + 1
+        if abs(float(loss - loss_prev)) / (abs(float(loss_prev)) + 1e-12) < tol:
+            loss_prev = loss
+            break
+        loss_prev = loss
+    return RescalerResult(t=t, gamma=gamma, loss=loss_prev, iters=iters)

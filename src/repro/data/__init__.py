@@ -1,0 +1,5 @@
+from .pipeline import (DataConfig, SyntheticLM, global_batch_for_step,
+                       host_batch_for_step)
+
+__all__ = ["DataConfig", "SyntheticLM", "global_batch_for_step",
+           "host_batch_for_step"]

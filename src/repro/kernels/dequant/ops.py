@@ -1,0 +1,63 @@
+"""Jit'd public wrapper for the fused dequant-matmul.
+
+``dequant_matmul`` pads to MXU-aligned block multiples, dispatches to the
+Pallas kernel on TPU (or interpret mode when requested) and to a fused-by-XLA
+path on CPU, and slices the padding off.
+
+``dequant_matmul_xla`` is the collective-friendly pure-XLA formulation used
+inside pjit'd serve graphs (the dry-run path): XLA fuses the int8→f32 convert
++ scale into the matmul's operand read, preserving the HBM-bytes advantage
+that the roofline analysis measures.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .dequant_matmul import dequant_matmul_pallas
+from .ref import dequant_matmul_ref
+
+__all__ = ["dequant_matmul", "dequant_matmul_xla"]
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "prefer_pallas", "interpret"))
+def dequant_matmul(x, z, col_scale, row_scale, *, block_m: int = 128,
+                   block_n: int = 128, block_k: int = 512,
+                   prefer_pallas: bool = True, interpret: bool = False):
+    """x (m, k) · dequant(z, s, t)ᵀ → (m, n), padding handled here."""
+    m, k = x.shape
+    n = z.shape[0]
+    on_tpu = jax.default_backend() == "tpu"
+    if prefer_pallas and (on_tpu or interpret):
+        block_k_eff = min(block_k, max(128, k))
+        xp = _pad_to(_pad_to(x, block_m, 0), block_k_eff, 1)
+        zp = _pad_to(_pad_to(z, block_n, 0), block_k_eff, 1)
+        sp = _pad_to(col_scale, block_k_eff, 0)
+        tp = _pad_to(row_scale, block_n, 0)
+        out = dequant_matmul_pallas(
+            xp, zp, sp, tp, block_m=block_m, block_n=block_n,
+            block_k=block_k_eff, interpret=interpret or not on_tpu)
+        return out[:m, :n]
+    return dequant_matmul_xla(x, z, col_scale, row_scale)
+
+
+@jax.jit
+def dequant_matmul_xla(x, z, col_scale, row_scale):
+    """Scale-the-activations formulation; XLA keeps weights int8 in HBM."""
+    xs = x.astype(jnp.float32) * col_scale.astype(jnp.float32)[None, :]
+    acc = jax.lax.dot_general(xs, z.astype(jnp.bfloat16).astype(jnp.float32),
+                              (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    return acc * row_scale.astype(jnp.float32)[None, :]

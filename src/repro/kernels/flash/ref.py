@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the flash attention kernel (materialized softmax)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q, k, v: (BH, S, d) → (BH, S, d) with full S×S score materialization."""
+    bh, s, d = q.shape
+    scale = 1.0 / math.sqrt(d)
+    scores = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask = mask & (j <= i)
+    if window > 0:
+        mask = mask & (i - j < window)
+    scores = jnp.where(mask[None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bqk,bkd->bqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

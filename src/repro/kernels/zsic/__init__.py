@@ -1,0 +1,5 @@
+from .ops import zsic_quantize
+from .ref import zsic_block_ref
+from .zsic_block import zsic_block_pallas
+
+__all__ = ["zsic_quantize", "zsic_block_ref", "zsic_block_pallas"]

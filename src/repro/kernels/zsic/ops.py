@@ -1,0 +1,41 @@
+"""Jit'd wrapper: full ZSIC quantization via the Pallas in-block kernel plus
+XLA trailing updates (the TPU-native GPTQ/WaterSIC quantizer)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .zsic_block import zsic_block_pallas
+
+__all__ = ["zsic_quantize"]
+
+
+def zsic_quantize(y, l, alphas, *, block: int = 128, block_rows: int = 256,
+                  interpret: bool = False):
+    """Full Alg. 1 on (a, n): Pallas per-block recursion + MXU trailing update.
+
+    Matches core.zsic.zsic_numpy (float64 reference) up to dtype rounding.
+    Returns (codes int32 (a, n), residual (a, n)).
+    """
+    y = jnp.asarray(y)
+    l = jnp.asarray(l)
+    alphas = jnp.asarray(alphas, y.dtype)
+    a, n = y.shape
+    pad_rows = (-a) % block_rows
+    if pad_rows:
+        y = jnp.pad(y, ((0, pad_rows), (0, 0)))
+    z = jnp.zeros_like(y, dtype=jnp.int32)
+    resid = jnp.zeros_like(y)
+    for s in reversed(range(0, n, block)):
+        e = min(s + block, n)
+        zb, rb = zsic_block_pallas(y[:, s:e], l[s:e, s:e], alphas[s:e],
+                                   block_rows=block_rows, interpret=interpret)
+        z = z.at[:, s:e].set(zb)
+        resid = resid.at[:, s:e].set(rb)
+        if s > 0:
+            scaled = zb.astype(y.dtype) * alphas[s:e][None, :]
+            y = y.at[:, :s].add(-(scaled @ l[s:e, :s]))
+    if pad_rows:
+        z, resid = z[:a], resid[:a]
+    return z, resid

@@ -1,0 +1,17 @@
+"""Pure-jnp/numpy oracle for the blocked ZSIC kernel: core.zsic.zsic_numpy
+restricted to one column block (rows independent, L block lower-triangular).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.zsic import zsic_numpy
+
+__all__ = ["zsic_block_ref"]
+
+
+def zsic_block_ref(y, l_block, alphas):
+    """Alg. 1 on a single column block (float64 numpy oracle)."""
+    z, resid = zsic_numpy(np.asarray(y), np.asarray(l_block),
+                          np.asarray(alphas))
+    return z.astype(np.int32), resid

@@ -1,0 +1,101 @@
+"""Pallas TPU kernel for the in-block ZSIC recursion (DESIGN.md §4.1).
+
+GPTQ/ZSIC on GPU walks columns with rank-1 trailing updates.  On TPU we use
+the blocked restructuring (core.zsic.zsic_blocked): the *sequential* part —
+the SIC recursion inside one 128-column block — runs in this kernel with the
+block-diagonal square of L resident in VMEM, tiled over independent row
+groups; the *trailing* update is left to XLA as a dense MXU matmul.
+
+For iteration i (from the last in-block column down):
+
+    z_i   = round( y[:, i] / (α_i ℓ_ii) )
+    y    -= α_i · z_i ⊗ L[i, :block]
+
+Implementation notes (Mosaic-friendly):
+  * no dynamic scalar loads: per-column scalars (α_i, step_i) and the L row
+    are selected with iota==i masks + reductions — dense VPU ops,
+  * the (bn, bn) L block and the (bm, bn) Y tile live in VMEM; with
+    bm = bn = 128 and f32 that is 128 KiB ≪ 16 MiB VMEM,
+  * each grid step handles one row tile — rows are independent in Alg. 1, so
+    the grid is embarrassingly parallel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["zsic_block_pallas"]
+
+
+def _kernel(y_ref, l_ref, alpha_ref, z_ref, resid_ref, *, bn: int):
+    y = y_ref[...].astype(jnp.float32)           # (bm, bn)
+    lblk = l_ref[...].astype(jnp.float32)        # (bn, bn) lower-triangular
+    alpha = alpha_ref[...].astype(jnp.float32)   # (1, bn)
+    bm = y.shape[0]
+
+    col_iota = jax.lax.broadcasted_iota(jnp.int32, (1, bn), 1)       # (1, bn)
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (bn, bn), 0)      # rows of L
+    ldiag = jnp.sum(jnp.where(
+        jax.lax.broadcasted_iota(jnp.int32, (bn, bn), 0)
+        == jax.lax.broadcasted_iota(jnp.int32, (bn, bn), 1),
+        lblk, 0.0), axis=0, keepdims=True)                           # (1, bn)
+    step = alpha * ldiag                                             # (1, bn)
+
+    def body(k, carry):
+        y, z = carry
+        i = bn - 1 - k
+        cmask = (col_iota == i).astype(jnp.float32)                  # (1, bn)
+        # per-column scalars via masked reductions
+        alpha_i = jnp.sum(alpha * cmask)
+        step_i = jnp.sum(step * cmask)
+        # current column of y: (bm, 1)
+        ycol = jnp.sum(y * cmask, axis=1, keepdims=True)
+        zcol = jnp.rint(ycol / step_i)                               # (bm, 1)
+        # row i of the L block: (1, bn)
+        rmask = (row_iota == i).astype(jnp.float32)
+        lrow = jnp.sum(lblk * rmask, axis=0, keepdims=True)
+        y = y - alpha_i * zcol * lrow
+        z = jnp.where(cmask > 0, zcol, z)
+        return y, z
+
+    z0 = jnp.zeros((bm, bn), jnp.float32)
+    y_fin, z_fin = jax.lax.fori_loop(0, bn, body, (y, z0))
+    z_ref[...] = z_fin.astype(jnp.int32)
+    resid_ref[...] = y_fin.astype(resid_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_rows", "interpret"))
+def zsic_block_pallas(y, l_block, alphas, *, block_rows: int = 256,
+                      interpret: bool = False):
+    """Quantize one column block.  y (a, bn); l_block (bn, bn); alphas (bn,).
+
+    Returns (codes int32 (a, bn), residual (a, bn)).  ``a`` must be a
+    multiple of ``block_rows`` (ops.py pads).
+    """
+    a, bn = y.shape
+    assert l_block.shape == (bn, bn)
+    assert a % block_rows == 0, (a, block_rows)
+    grid = (a // block_rows,)
+    z, resid = pl.pallas_call(
+        functools.partial(_kernel, bn=bn),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, bn), lambda i: (i, 0)),
+            pl.BlockSpec((bn, bn), lambda i: (0, 0)),
+            pl.BlockSpec((1, bn), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, bn), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, bn), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((a, bn), jnp.int32),
+            jax.ShapeDtypeStruct((a, bn), y.dtype),
+        ],
+        interpret=interpret,
+    )(y, l_block, alphas.reshape(1, bn))
+    return z, resid

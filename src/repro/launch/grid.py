@@ -1,0 +1,64 @@
+"""Dry-run grid driver: one subprocess per cell (isolation + resumability).
+
+Each cell runs `python -m repro.launch.dryrun --arch .. --shape .. --mesh ..`
+in its own process so a compiler OOM/abort cannot take down the grid, and
+XLA_FLAGS device-count forcing stays scoped to the dry-run entry point.
+Existing result JSONs are skipped — rerun anytime to fill gaps.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import time
+
+from repro.configs import SHAPES, list_archs
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--archs", default=None, help="comma-separated subset")
+    ap.add_argument("--shapes", default=None)
+    ap.add_argument("--wbits", type=int, default=16)
+    ap.add_argument("--timeout", type=int, default=3000)
+    args = ap.parse_args(argv)
+
+    archs = args.archs.split(",") if args.archs else list_archs()
+    shapes = args.shapes.split(",") if args.shapes else list(SHAPES)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    cells = [(a, s, m) for a in archs for s in shapes for m in meshes]
+    print(f"grid: {len(cells)} cells", flush=True)
+    for i, (a, s, m) in enumerate(cells):
+        tag = f"{a}__{s}__{m}" + (f"__w{args.wbits}" if args.wbits != 16
+                                  else "")
+        out_path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(out_path):
+            print(f"[{i+1}/{len(cells)}] {tag}: cached", flush=True)
+            continue
+        t0 = time.time()
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", a,
+               "--shape", s, "--mesh", m, "--out", args.out,
+               "--wbits", str(args.wbits)]
+        try:
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=args.timeout)
+            tail = (r.stdout or r.stderr or "").strip().splitlines()
+            msg = tail[-1] if tail else f"rc={r.returncode}"
+        except subprocess.TimeoutExpired:
+            msg = "TIMEOUT"
+            import json
+            with open(out_path, "w") as f:
+                json.dump({"arch": a, "shape": s, "mesh": m,
+                           "status": "timeout",
+                           "timeout_s": args.timeout}, f)
+        print(f"[{i+1}/{len(cells)}] {msg}  ({time.time()-t0:.0f}s)",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,414 @@
+"""While-loop-aware HLO cost accounting.
+
+``xla::HloCostAnalysis`` (compiled.cost_analysis()) counts each while-loop
+body ONCE, not × trip count (verified experimentally — scan vs unroll give
+10× different flops for identical math).  Our programs are deeply scanned
+(layers × microbatches × tokens), so raw numbers undercount by orders of
+magnitude.
+
+This module parses the post-partitioning HLO text (per-device program),
+builds the computation call graph, extracts while trip counts from loop
+conditions, and accumulates:
+
+  * dot FLOPs            (2 · prod(result dims) · contracted size — the MXU
+                          work; elementwise flops are ignored, <2% for these
+                          graphs and noted in EXPERIMENTS.md),
+  * collective bytes     (result-shape bytes of all-gather / all-reduce /
+                          reduce-scatter / all-to-all / collective-permute),
+  * weighted HBM bytes   (cost_analysis 'bytes accessed' scaled by the
+                          flops multiplicity ratio — fusion-accurate byte
+                          accounting per op is XLA-internal; the loop bodies
+                          that dominate flops dominate bytes too).
+
+Trip-count heuristic: the largest integer constant inside the loop's
+condition computation (JAX scans lower to `lt(counter, N)`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["parse_hlo_costs", "HloCosts"]
+
+_COMP_HEADER = re.compile(
+    r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*([^\s]+)\s+"
+                    r"([a-z][\w\-]*)\(")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_WHILE = re.compile(r"while\(.*?\).*?(?:condition=%?([\w.\-]+)).*?"
+                    r"(?:body=%?([\w.\-]+))", re.S)
+_WHILE2 = re.compile(r"while\(.*?\).*?(?:body=%?([\w.\-]+)).*?"
+                     r"(?:condition=%?([\w.\-]+))", re.S)
+_CALL_TARGET = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_CONSTANT_INT = re.compile(r"constant\((\d+)\)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERANDS = re.compile(r"\(([^)]*)\)")
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 0.5, "u4": 0.5, "pred": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _first_shape(type_str: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE.search(type_str)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d] if m.group(2) else []
+    return m.group(1), dims
+
+
+def _all_shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for m in _SHAPE.finditer(type_str):
+        dt = m.group(1)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    lines: List[str]
+    shapes: Dict[str, str]              # instr name -> type string
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    edges: List[Tuple[str, float]] = dataclasses.field(default_factory=list)
+    fusion_called: List[str] = dataclasses.field(default_factory=list)
+    # edges: (callee, multiplier) — while bodies get trip count, calls get 1
+
+
+@dataclasses.dataclass
+class HloCosts:
+    dot_flops: float
+    hbm_bytes: float                   # weighted per-op operand+result bytes
+    collective_bytes: float
+    collective_breakdown: Dict[str, float]
+    multiplicity_ratio: float          # weighted dot flops / unweighted
+    n_whiles: int
+    trip_counts: List[int]
+
+
+def _split_computations(text: str) -> Dict[str, _Comp]:
+    comps: Dict[str, _Comp] = {}
+    cur: Optional[_Comp] = None
+    for line in text.splitlines():
+        m = _COMP_HEADER.match(line.strip()) if "{" in line else None
+        if m and ("->" in line):
+            cur = _Comp(name=m.group(1), lines=[], shapes={})
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        cur.lines.append(line)
+        im = _INSTR.match(line)
+        if im:
+            cur.shapes[im.group(1)] = im.group(2)
+    return comps
+
+
+def _fusion_param_costs(callee: "_Comp") -> Dict[int, float]:
+    """Per-parameter HBM traffic of a fusion computation.
+
+    A parameter consumed ONLY through dynamic-slice (possibly via bitcast /
+    reshape / copy aliases) moves just the sliced bytes — the pattern XLA
+    emits for scan-input indexing.  Everything else counts full size.
+    Memoized on the computation object.
+    """
+    memo = getattr(callee, "_param_costs", None)
+    if memo is not None:
+        return memo
+    param_of: Dict[str, int] = {}      # instr name -> param index (aliases)
+    full: Dict[int, float] = {}
+    sliced: Dict[int, float] = {}
+    touched_full: set = set()
+    for line in callee.lines:
+        im = _INSTR.match(line)
+        if not im:
+            continue
+        name, type_str, op = im.groups()
+        if op == "parameter":
+            pm = re.search(r"parameter\((\d+)\)", line)
+            if pm:
+                idx = int(pm.group(1))
+                param_of[name] = idx
+                full[idx] = _all_shape_bytes(type_str)
+            continue
+        om = _OPERANDS.search(line[line.index("("):]) if "(" in line else None
+        ops_list = [o.strip().lstrip("%").split(" ")[0]
+                    for o in om.group(1).split(",")] if om else []
+        refs = [o for o in ops_list if o in param_of]
+        if op in ("bitcast", "reshape", "copy", "transpose") and refs:
+            param_of[name] = param_of[refs[0]]  # propagate alias
+        elif op in ("dynamic-slice", "slice"):
+            for o in refs:
+                idx = param_of[o]
+                sliced[idx] = sliced.get(idx, 0.0) \
+                    + _all_shape_bytes(type_str)
+        else:
+            for o in refs:
+                touched_full.add(param_of[o])
+    costs = {}
+    for idx, fb in full.items():
+        if idx in touched_full or idx not in sliced:
+            costs[idx] = fb
+        else:
+            costs[idx] = min(sliced[idx], fb)
+    callee._param_costs = costs
+    return costs
+
+
+def _dus_root_update_bytes(comp: "_Comp") -> float:
+    """If `comp` is an in-place buffer-update fusion (a dynamic-update-slice
+    whose result shape equals the fusion result — possibly wrapped in
+    converts, as the CPU backend's "wide" pass emits), return the bytes of
+    the update operand (else 0).
+
+    Rationale: XLA performs DUS in place; the whole-buffer convert chain
+    the CPU emitter wraps around it does not exist on the TPU backend, so
+    charging full-buffer traffic per scan step would wrongly dominate every
+    scanned training graph (EXPERIMENTS.md §Dry-run accounting note).
+    """
+    root_shape = None
+    for line in comp.lines:
+        ls = line.strip()
+        if ls.startswith("ROOT"):
+            im = _INSTR.match(ls)
+            if im:
+                root_shape = _first_shape(im.group(2))
+    if root_shape is None:
+        return 0.0
+    for line in comp.lines:
+        ls = line.strip()
+        if " dynamic-update-slice(" not in ls:
+            continue
+        im = _INSTR.match(ls)
+        if not im:
+            continue
+        dus_shape = _first_shape(im.group(2))
+        if dus_shape is None or dus_shape[1] != root_shape[1]:
+            continue  # not the full-buffer in-place update
+        om = _OPERANDS.search(ls[ls.index("dynamic-update-slice("):])
+        if not om:
+            continue
+        ops = [o.strip().lstrip("%").split(" ")[0]
+               for o in om.group(1).split(",") if o.strip()]
+        if len(ops) > 1 and ops[1] in comp.shapes:
+            return _all_shape_bytes(comp.shapes[ops[1]])
+    return 0.0
+
+
+def _trip_count(cond: _Comp) -> int:
+    best = 1
+    for line in cond.lines:
+        for m in _CONSTANT_INT.finditer(line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _analyze_comp(comp: _Comp, comps: Dict[str, _Comp]) -> None:
+    body_text = "\n".join(comp.lines)
+    # while edges: parse PER LINE (a computation can contain several whiles;
+    # condition=/body= attribute order varies)
+    seen_pairs = set()
+    for line in comp.lines:
+        if " while(" not in line:
+            continue
+        cm = re.search(r"condition=%?([\w.\-]+)", line)
+        bm = re.search(r"body=%?([\w.\-]+)", line)
+        if not (cm and bm):
+            continue
+        cond_name, body_name = cm.group(1), bm.group(1)
+        key = (cond_name, body_name)
+        if key in seen_pairs:
+            continue
+        seen_pairs.add(key)
+        if cond_name in comps and body_name in comps:
+            trips = _trip_count(comps[cond_name])
+            comp.edges.append((body_name, float(trips)))
+            comp.edges.append((cond_name, float(trips)))
+    # generic calls (fusions, custom calls, conditionals)
+    for line in comp.lines:
+        if "while(" in line:
+            continue
+        is_fusion = " fusion(" in line
+        for m in _CALL_TARGET.finditer(line):
+            if m.group(1) in comps:
+                comp.edges.append((m.group(1), 1.0))
+                if is_fusion:
+                    comp.fusion_called.append(m.group(1))
+    # per-op costs
+    _NO_TRAFFIC = {"tuple", "get-tuple-element", "parameter", "bitcast",
+                   "constant", "after-all", "partition-id", "replica-id",
+                   "opt-barrier"}
+    for line in comp.lines:
+        im = _INSTR.match(line)
+        if not im:
+            continue
+        name, type_str, op = im.groups()
+        if op == "dot":
+            flops = _dot_flops(line, type_str, comp)
+            comp.dot_flops += flops
+        elif any(op.startswith(c) for c in _COLLECTIVES):
+            if op.endswith("-done"):
+                continue
+            kind = next(c for c in _COLLECTIVES if op.startswith(c))
+            comp.coll_bytes[kind] = comp.coll_bytes.get(kind, 0.0) \
+                + _all_shape_bytes(type_str)
+        # HBM traffic model: result bytes + named-operand bytes for every
+        # top-level op with real data movement (fusion internals are skipped
+        # via the fusion_called mechanism below).  Op-specific rules:
+        #   dynamic-slice/slice/gather: only the sliced result moves;
+        #   dynamic-update-slice/scatter: 2× the update region (in-place);
+        #   while/conditional: control only — bodies account themselves.
+        if op in _NO_TRAFFIC or op in ("while", "conditional"):
+            continue
+        ops_list = []
+        om = _OPERANDS.search(line[line.index("(") :]) if "(" in line else None
+        if om:
+            ops_list = [o.strip().lstrip("%").split(" ")[0]
+                        for o in om.group(1).split(",") if o.strip()]
+        if op in ("dynamic-slice", "slice", "gather"):
+            b = _all_shape_bytes(type_str)
+        elif op in ("dynamic-update-slice", "scatter"):
+            upd = ops_list[1] if len(ops_list) > 1 else None
+            ub = _all_shape_bytes(comp.shapes.get(upd, "")) if upd else 0.0
+            b = 2.0 * ub if ub else _all_shape_bytes(type_str)
+        elif op == "fusion":
+            # in-place DUS-root fusions (scan output stacking) move only the
+            # updated slice; dynamic-slice-consumed params move slice bytes
+            callee = None
+            for m in _CALL_TARGET.finditer(line):
+                if m.group(1) in comps:
+                    callee = comps[m.group(1)]
+                    break
+            dus_ub = _dus_root_update_bytes(callee) if callee else 0.0
+            if dus_ub:
+                b = 2.0 * dus_ub
+            elif callee is not None:
+                pcosts = _fusion_param_costs(callee)
+                b = _all_shape_bytes(type_str)
+                for i, o in enumerate(ops_list):
+                    if i in pcosts:
+                        b += pcosts[i]
+                    elif o in comp.shapes:
+                        b += _all_shape_bytes(comp.shapes[o])
+            else:
+                b = _all_shape_bytes(type_str)
+                for o in ops_list:
+                    if o in comp.shapes:
+                        b += _all_shape_bytes(comp.shapes[o])
+        else:
+            b = _all_shape_bytes(type_str)
+            for o in ops_list:
+                if o in comp.shapes:
+                    b += _all_shape_bytes(comp.shapes[o])
+        comp.hbm_bytes += b
+
+
+def _dot_flops(line: str, result_type: str, comp: _Comp) -> float:
+    rshape = _first_shape(result_type)
+    if not rshape:
+        return 0.0
+    _, rdims = rshape
+    out_elems = 1
+    for d in rdims:
+        out_elems *= d
+    # contracted size from lhs operand shape + contracting dims
+    cm = _CONTRACT.search(line)
+    om = _OPERANDS.search(line[line.index("dot("):] if "dot(" in line
+                          else line)
+    csize = 1
+    if cm and om:
+        ops = [o.strip().lstrip("%") for o in om.group(1).split(",")]
+        lhs = ops[0].split(" ")[0] if ops else ""
+        lhs_type = comp.shapes.get(lhs, "")
+        ls = _first_shape(lhs_type)
+        if ls:
+            for idx_s in cm.group(1).split(","):
+                if idx_s:
+                    i = int(idx_s)
+                    if i < len(ls[1]):
+                        csize *= ls[1][i]
+    return 2.0 * out_elems * csize
+
+
+def parse_hlo_costs(hlo_text: str) -> HloCosts:
+    comps = _split_computations(hlo_text)
+    for comp in comps.values():
+        _analyze_comp(comp, comps)
+    # find entry: computation not referenced by anyone, or named main
+    referenced = {callee for c in comps.values() for callee, _ in c.edges}
+    entry = None
+    for name in comps:
+        if name.startswith("main") or name.endswith("main"):
+            entry = name
+            break
+    if entry is None:
+        candidates = [n for n in comps if n not in referenced]
+        entry = candidates[0] if candidates else next(iter(comps))
+    # propagate weights through the call DAG
+    weights: Dict[str, float] = {entry: 1.0}
+    order = [entry]
+    i = 0
+    while i < len(order):
+        cur = order[i]
+        i += 1
+        w = weights[cur]
+        for callee, mult in comps[cur].edges:
+            if callee not in weights:
+                weights[callee] = 0.0
+                order.append(callee)
+            weights[callee] += w * mult
+    # computations called ONLY from fusion ops don't touch HBM themselves
+    fusion_only = set()
+    all_fusion_callees = {c for comp in comps.values()
+                          for c in comp.fusion_called}
+    for name in all_fusion_callees:
+        callers = [c for c in comps.values()
+                   if any(cal == name for cal, _ in c.edges)]
+        if callers and all(name in c.fusion_called for c in callers):
+            fusion_only.add(name)
+    total_dot = 0.0
+    raw_dot = 0.0
+    total_hbm = 0.0
+    coll: Dict[str, float] = {}
+    trips = []
+    n_whiles = 0
+    for name, comp in comps.items():
+        w = weights.get(name, 0.0)
+        total_dot += w * comp.dot_flops
+        raw_dot += comp.dot_flops
+        if name not in fusion_only:
+            total_hbm += w * comp.hbm_bytes
+        for kind, b in comp.coll_bytes.items():
+            coll[kind] = coll.get(kind, 0.0) + w * b
+        for callee, mult in comp.edges:
+            if mult != 1.0:
+                n_whiles += 1
+                trips.append(int(mult))
+    coll_total = sum(coll.values())
+    return HloCosts(
+        dot_flops=total_dot,
+        hbm_bytes=total_hbm,
+        collective_bytes=coll_total,
+        collective_breakdown={**coll, "total": coll_total},
+        multiplicity_ratio=(total_dot / raw_dot) if raw_dot else 1.0,
+        n_whiles=n_whiles,
+        trip_counts=sorted(set(trips), reverse=True)[:8],
+    )

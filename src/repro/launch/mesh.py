@@ -1,0 +1,29 @@
+"""Production mesh builders (single-pod 16×16, multi-pod 2×16×16).
+
+Functions (not module-level constants) so importing never touches JAX
+device state — required because dryrun.py must set
+XLA_FLAGS=--xla_force_host_platform_device_count before first JAX init.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 (data, model) single pod; 2×16×16 (pod, data, model) multi-pod.
+
+    v5e: 256 chips/pod; the multi-pod mesh proves the "pod" axis shards
+    (DCN-connected pods).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Tiny mesh over the actually-present devices (tests / examples)."""
+    n = len(jax.devices())
+    mp = min(model_parallel, n)
+    return jax.make_mesh((n // mp, mp), ("data", "model"))

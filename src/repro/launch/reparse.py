@@ -1,0 +1,64 @@
+"""Recompute roofline fields in dry-run JSONs from the saved HLO artifacts.
+
+The .hlo.zz files let us iterate on the cost parser (launch/hlo_cost.py)
+without recompiling 80 cells:
+
+    PYTHONPATH=src python -m repro.launch.reparse --dir experiments/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import zlib
+
+from repro.configs import SHAPES, get_config
+from repro.launch.roofline import model_flops, report_from_artifacts
+
+
+def reparse_file(jpath: str) -> bool:
+    zpath = jpath.replace(".json", ".hlo.zz")
+    if not os.path.exists(zpath):
+        return False
+    with open(jpath) as f:
+        d = json.load(f)
+    if d.get("status") != "ok":
+        return False
+    hlo = zlib.decompress(open(zpath, "rb").read()).decode()
+    cfg = get_config(d["arch"])
+    shape = SHAPES[d["shape"]]
+    kind = d.get("kind", shape.kind)
+    tokens = shape.global_batch * (shape.seq_len if kind != "decode" else 1)
+    mf = model_flops(cfg.active_param_count(), tokens,
+                     "train" if kind == "train" else "serve")
+    mem = d.get("memory_analysis", {})
+    peak = mem.get("argument_size_in_bytes", 0) \
+        + mem.get("temp_size_in_bytes", 0)
+    rep = report_from_artifacts(
+        arch=d["arch"], shape=d["shape"], mesh=d["mesh"], chips=d["chips"],
+        cost=d.get("cost_analysis", {}), hlo_text=hlo,
+        model_flops_total=mf, mem_peak_bytes=peak)
+    d["roofline"] = rep.to_json()
+    d["dominant"] = rep.dominant
+    d["bound_time_s"] = rep.bound_time_s
+    d["roofline_fraction"] = rep.roofline_fraction
+    d["n_collectives"] = dict(rep.collective_breakdown)
+    with open(jpath, "w") as f:
+        json.dump(d, f, indent=1, default=float)
+    return True
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args(argv)
+    n = 0
+    for jpath in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        if reparse_file(jpath):
+            n += 1
+    print(f"reparsed {n} cells")
+
+
+if __name__ == "__main__":
+    main()

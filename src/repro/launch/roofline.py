@@ -1,0 +1,177 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (TPU v5e constants):
+
+    compute    = HLO_FLOPs_per_device / 197e12            (bf16 MXU peak)
+    memory     = HLO_bytes_per_device / 819e9             (HBM bandwidth)
+    collective = collective_bytes_per_device / (n_links × 50e9)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``.  Collective bytes are
+NOT in cost_analysis: we parse the post-GSPMD HLO (``compiled.as_text()`` is
+the per-partition module, so operand shapes are already per-device) and sum
+operand sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops.
+
+Also derives MODEL_FLOPS (6·N·D train, 2·N·D inference; N_active for MoE)
+and the usefulness ratio MODEL_FLOPS / HLO_FLOPs (catches remat/dispatch
+waste), and names the dominant term.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["HW", "collective_bytes_from_hlo", "roofline_terms",
+           "model_flops", "RooflineReport"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12        # bf16 / chip (TPU v5e)
+    hbm_bw: float = 819e9             # bytes/s per chip
+    link_bw: float = 50e9             # bytes/s per ICI link
+    n_links: int = 4                  # v5e: 4 ICI links per chip (2D torus)
+
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 0.5, "u4": 0.5, "pred": 1,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    """Sum bytes over every tensor in an HLO result type string (handles
+    tuples like (f32[8,128], u32[])."""
+    total = 0.0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, float]:
+    """Per-collective-kind byte totals (per device, post-partitioning).
+
+    Uses the op *result* shape (for all-reduce = operand shape; for
+    all-gather = gathered output, an upper bound on link bytes; for
+    reduce-scatter = pre-reduce input... we use the result type consistently
+    and report per-kind so the §Perf loop can reason about each).
+    -start ops are counted once (-done carries the same tuple).
+    """
+    out: Dict[str, float] = {}
+    seen_start = set()
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        line = m.group(0)
+        if "-done(" in line:
+            continue  # counted at -start
+        b = _shape_bytes(shape_str)
+        out[kind] = out.get(kind, 0.0) + b
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def model_flops(n_params_active: int, tokens: int, kind: str) -> float:
+    """6·N·D for training, 2·N·D for inference forward."""
+    if kind == "train":
+        return 6.0 * n_params_active * tokens
+    return 2.0 * n_params_active * tokens
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops_per_device: float
+    hlo_bytes_per_device: float
+    collective_bytes_per_device: float
+    collective_breakdown: Dict[str, float]
+    model_flops_total: float
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    dominant: str = ""
+    useful_ratio: float = 0.0
+    bytes_per_device_peak: float = 0.0   # memory_analysis peak allocation
+
+    def finalize(self, hw: HW = HW()) -> "RooflineReport":
+        self.compute_s = self.hlo_flops_per_device / hw.peak_flops
+        self.memory_s = self.hlo_bytes_per_device / hw.hbm_bw
+        self.collective_s = self.collective_bytes_per_device / \
+            (hw.n_links * hw.link_bw)
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.dominant = max(terms, key=terms.get)
+        total_hlo_flops = self.hlo_flops_per_device * self.chips
+        self.useful_ratio = (self.model_flops_total / total_hlo_flops
+                             if total_hlo_flops else 0.0)
+        return self
+
+    @property
+    def bound_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the chip's peak the dominant-term time implies for the
+        useful model FLOPs: (MODEL_FLOPS/chips/peak) / bound_time."""
+        if self.bound_time_s == 0:
+            return 0.0
+        ideal = self.model_flops_total / self.chips / HW().peak_flops
+        return ideal / self.bound_time_s
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def report_from_artifacts(*, arch: str, shape: str, mesh: str, chips: int,
+                          cost: Dict, hlo_text: str, model_flops_total: float,
+                          mem_peak_bytes: float = 0.0) -> RooflineReport:
+    """Build a report from compiled.cost_analysis() + HLO text.
+
+    cost_analysis flops/bytes on a partitioned module are per-partition,
+    but XLA counts while-loop bodies once — launch/hlo_cost.py re-derives
+    dot FLOPs and collective bytes with trip-count weighting; raw
+    cost_analysis bytes are scaled by the same loop-multiplicity ratio
+    (documented approximation: loop bodies dominating flops dominate bytes).
+    """
+    from .hlo_cost import parse_hlo_costs
+    hc = parse_hlo_costs(hlo_text)
+    raw_flops = float(cost.get("flops", 0.0))
+    raw_bytes = float(cost.get("bytes accessed", 0.0))
+    flops = max(hc.dot_flops, raw_flops)
+    # weighted per-op HBM accounting (hlo_cost); raw cost_analysis kept below
+    bytes_scaled = hc.hbm_bytes if hc.hbm_bytes > 0 else raw_bytes
+    rep = RooflineReport(
+        arch=arch, shape=shape, mesh=mesh, chips=chips,
+        hlo_flops_per_device=flops,
+        hlo_bytes_per_device=bytes_scaled,
+        collective_bytes_per_device=hc.collective_bytes,
+        collective_breakdown=hc.collective_breakdown,
+        model_flops_total=model_flops_total,
+        bytes_per_device_peak=mem_peak_bytes,
+    )
+    rep = rep.finalize()
+    rep.collective_breakdown["raw_cost_flops"] = raw_flops
+    rep.collective_breakdown["raw_cost_bytes"] = raw_bytes
+    rep.collective_breakdown["loop_multiplicity"] = hc.multiplicity_ratio
+    return rep

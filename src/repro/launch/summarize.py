@@ -1,0 +1,71 @@
+"""Summarize dry-run JSONs into the EXPERIMENTS.md roofline tables.
+
+    PYTHONPATH=src python -m repro.launch.summarize [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def fmt_bytes(b):
+    if b >= 1 << 30:
+        return f"{b / (1 << 30):.2f}G"
+    if b >= 1 << 20:
+        return f"{b / (1 << 20):.1f}M"
+    return f"{b / 1024:.0f}K"
+
+
+def load_all(d):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def table(rows, mesh="single"):
+    hdr = ("| arch | shape | st | flops/dev | bytes/dev | coll/dev | "
+           "compute_s | memory_s | coll_s | dom | useful | RLfrac | "
+           "mem/dev |")
+    sep = "|" + "---|" * 13
+    out = [hdr, sep]
+    for r in rows:
+        if r.get("mesh") != mesh or (r.get("wbits", 16) != 16):
+            continue
+        if r.get("status") == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | SKIP | "
+                       f"{r.get('reason', '')[:40]} |" + " |" * 9)
+            continue
+        if r.get("status") != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | "
+                       f"{r.get('status', '?').upper()} |" + " |" * 10)
+            continue
+        rl = r["roofline"]
+        mem = r.get("memory_analysis", {})
+        peak = mem.get("argument_size_in_bytes", 0) \
+            + mem.get("temp_size_in_bytes", 0)
+        out.append(
+            f"| {r['arch']} | {r['shape']} | ok "
+            f"| {rl['hlo_flops_per_device']:.2e} "
+            f"| {rl['hlo_bytes_per_device']:.2e} "
+            f"| {rl['collective_bytes_per_device']:.2e} "
+            f"| {rl['compute_s']:.4f} | {rl['memory_s']:.4f} "
+            f"| {rl['collective_s']:.4f} | {rl['dominant'][:4]} "
+            f"| {rl['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} "
+            f"| {fmt_bytes(peak)} |")
+    return "\n".join(out)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args(argv)
+    rows = load_all(args.dir)
+    print(table(rows, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,688 @@
+"""Shared model building blocks (pure-functional JAX).
+
+Parameters are created as ``Px(value, logical_axes)`` leaves; ``split_tree``
+separates them into a value pytree and a logical-axes pytree that
+dist.sharding converts to PartitionSpecs — init and sharding can never drift.
+
+Blocks: RMSNorm/LayerNorm, rotary embeddings, GQA attention (optional QKV
+bias, local window with ring-buffer KV cache, prefix-LM mask, cross
+attention), gated/plain MLPs, sort-based capacity-buffer MoE (EP-shardable),
+embedding/unembedding.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import logical_shard
+
+__all__ = [
+    "Px", "split_tree", "KeyGen",
+    "rmsnorm_init", "rmsnorm", "layernorm_init", "layernorm",
+    "dense_init", "dense",
+    "rope", "sinusoidal_positions",
+    "attention_init", "attention_train", "attention_decode", "KVCache",
+    "mlp_init", "mlp", "moe_init", "moe",
+    "embed_init", "embed", "unembed",
+]
+
+
+# ---------------------------------------------------------------------------
+# Param plumbing
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Px:
+    """A parameter leaf annotated with logical axis names."""
+
+    value: Any
+    axes: Tuple[Optional[str], ...]
+
+
+jax.tree_util.register_pytree_node(
+    Px, lambda p: ((p.value,), tuple(p.axes)),
+    lambda aux, ch: Px(ch[0], aux))
+
+
+def _is_px(x):
+    return isinstance(x, Px)
+
+
+def split_tree(tree):
+    """Px tree -> (param values, logical axes) twin pytrees."""
+    vals = jax.tree.map(lambda p: p.value, tree, is_leaf=_is_px)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=_is_px)
+    return vals, axes
+
+
+class KeyGen:
+    def __init__(self, key):
+        self._key = key
+
+    def __call__(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+def _norm_init(shape):  # ones
+    return jnp.ones(shape, jnp.float32)
+
+
+def _dense_w(key, shape, scale, dtype):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    std = scale / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d):
+    return {"scale": Px(_norm_init((d,)), (None,))}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"]).astype(x.dtype)
+
+
+def layernorm_init(d):
+    return {"scale": Px(_norm_init((d,)), (None,)),
+            "bias": Px(jnp.zeros((d,), jnp.float32), (None,))}
+
+
+def layernorm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, in_dim, out_dim, *, axes, bias=False, scale=1.0,
+               dtype=jnp.float32, stack: Optional[int] = None):
+    shape = (in_dim, out_dim) if stack is None else (stack, in_dim, out_dim)
+    waxes = axes if stack is None else ("layers",) + tuple(axes)
+    p = {"w": Px(_dense_w(key, shape, scale, dtype), waxes)}
+    if bias:
+        bshape = (out_dim,) if stack is None else (stack, out_dim)
+        baxes = (axes[-1],) if stack is None else ("layers", axes[-1])
+        p["b"] = Px(jnp.zeros(bshape, dtype), baxes)
+    return p
+
+
+def dense(p, x):
+    w = p["w"]
+    if isinstance(w, dict) and "codes" in w:
+        # WaterSIC int8 serving path: y = ((x·s) @ codes)·t — the weight
+        # stays int8 in HBM (see quant/qlinear.py + kernels/dequant)
+        y = ((x * w["s"].astype(x.dtype)) @ w["codes"].astype(x.dtype)) \
+            * w["t"].astype(x.dtype)
+    else:
+        y = x @ w.astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Positions
+# ---------------------------------------------------------------------------
+
+
+def rope(x, positions, theta: float = 10000.0):
+    """Rotary embedding. x: (..., seq, heads, head_dim); positions (..., seq)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32)
+                    / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs[None, :]
+    cos = jnp.cos(ang)[..., :, None, :]  # (..., seq, 1, half)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length, dim, dtype=jnp.float32):
+    pos = np.arange(length)[:, None]
+    i = np.arange(dim // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * i / dim)
+    out = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(out, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA / MQA / MHA, optional bias, local window, prefix-LM, cross)
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    """Ring-buffered KV cache: buffer length = window (local attn) or
+    max_len (global attn).
+
+    §Perf int8_kv: k/v stored int8 with EXACT per-(position, head) scales
+    (k_scale/v_scale, shape (B, buf, n_kv, 1)) — the same
+    per-dimension-scale idea as WaterSIC's per-column α, applied to the
+    cache; halves the dominant decode HBM term vs bf16."""
+
+    k: jnp.ndarray  # (B, buf, n_kv, hd)
+    v: jnp.ndarray  # (B, buf, n_kv, hd)
+    k_scale: Any = ()   # (B, buf, n_kv, 1) f32 when int8, else ()
+    v_scale: Any = ()
+
+
+def attention_init(key, d_model, n_q, n_kv, head_dim, *, bias=False,
+                   out_bias=False, dtype=jnp.float32,
+                   stack: Optional[int] = None):
+    kg = KeyGen(key)
+    return {
+        "wq": dense_init(kg(), d_model, n_q * head_dim,
+                         axes=("d_model_w", "heads"), bias=bias, dtype=dtype,
+                         stack=stack),
+        "wk": dense_init(kg(), d_model, n_kv * head_dim,
+                         axes=("d_model_w", "kv_heads"), bias=bias,
+                         dtype=dtype, stack=stack),
+        "wv": dense_init(kg(), d_model, n_kv * head_dim,
+                         axes=("d_model_w", "kv_heads"), bias=bias,
+                         dtype=dtype, stack=stack),
+        "wo": dense_init(kg(), n_q * head_dim, d_model,
+                         axes=("heads", "d_model_w"), bias=out_bias,
+                         dtype=dtype, stack=stack),
+    }
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def _attn_scores(q, k, scale):
+    # q: (B, S, nq, hd), k: (B, T, nkv, hd) with nq = G*nkv
+    b, s, nq, hd = q.shape
+    t, nkv = k.shape[1], k.shape[2]
+    g = nq // nkv
+    qg = q.reshape(b, s, nkv, g, hd)
+    scores = jnp.einsum("bsngh,btnh->bngst", qg, k) * scale
+    return scores  # (B, nkv, G, S, T)
+
+
+def _attn_out(scores, v):
+    b, nkv, g, s, t = scores.shape
+    out = jnp.einsum("bngst,btnh->bsngh", scores, v)
+    return out.reshape(b, s, nkv * g * v.shape[-1])
+
+
+def _attention_blockwise(q, k, v, *, causal: bool, window: int,
+                         block_k: int = 512):
+    """Online-softmax blockwise attention in pure jnp (lax.scan over K
+    blocks) — never materializes the (S, S) score tensor.  XLA-level twin of
+    kernels/flash (the TPU-native Pallas version); lets the dry-run measure
+    the §Perf `blockwise_attention` memory win on the CPU backend.
+
+    q: (B, S, nq, hd); k/v: (B, T, nkv, hd).  T must divide block_k.
+    """
+    b, s, nq, hd = q.shape
+    t, nkv = k.shape[1], k.shape[2]
+    g = nq // nkv
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(b, s, nkv, g, hd)
+    n_blocks = t // block_k
+    kb = jnp.moveaxis(k.reshape(b, n_blocks, block_k, nkv, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, n_blocks, block_k, nkv, hd), 1, 0)
+    qi = jnp.arange(s)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        blk_idx, k_blk, v_blk = inp
+        sco = jnp.einsum("bsngh,btnh->bngst", qg, k_blk) * scale
+        kj = blk_idx * block_k + jnp.arange(block_k)
+        mask = jnp.ones((s, block_k), bool)
+        if causal:
+            mask = mask & (kj[None, :] <= qi[:, None])
+        if window:
+            mask = mask & (qi[:, None] - kj[None, :] < window)
+        sco = jnp.where(mask[None, None, None], sco, -1e30)
+        sco = sco.astype(jnp.float32)
+        m_new = jnp.maximum(m, sco.max(axis=-1))
+        pp = jnp.exp(sco - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + pp.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bngst,btnh->bngsh", pp, v_blk.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, nkv, g, s), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, nkv, g, s), jnp.float32)
+    a0 = jnp.zeros((b, nkv, g, s, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (jnp.arange(n_blocks), kb, vb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    # (b, nkv, g, s, hd) -> (b, s, nq*hd)
+    out = jnp.moveaxis(out, 3, 1).reshape(b, s, nq * hd)
+    return out.astype(q.dtype)
+
+
+def attention_train(p, x, *, n_q, n_kv, head_dim, rope_theta=10000.0,
+                    causal=True, window: Optional[int] = None,
+                    prefix_len: Optional[int] = None,
+                    kv_x: Optional[jnp.ndarray] = None,
+                    positions: Optional[jnp.ndarray] = None,
+                    use_rope=True, return_kv=False):
+    """Full-sequence attention (train / prefill).
+
+    ``kv_x`` switches to cross attention (keys/values from encoder states,
+    no causal mask, no rope on cross keys).
+    """
+    b, s, d = x.shape
+    src = x if kv_x is None else kv_x
+    t = src.shape[1]
+    q = _split_heads(dense(p["wq"], x), n_q, head_dim)
+    k = _split_heads(dense(p["wk"], src), n_kv, head_dim)
+    v = _split_heads(dense(p["wv"], src), n_kv, head_dim)
+    q = logical_shard(q, "batch", "seq", "heads", None)
+    k = logical_shard(k, "batch", "seq", "kv_heads", None)
+    v = logical_shard(v, "batch", "seq", "kv_heads", None)
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    if use_rope and kv_x is None:
+        q = rope(q, positions, rope_theta)
+        k = rope(k, positions, rope_theta)
+    from repro.opts import enabled as _opt
+    if (_opt("flash_attention") and kv_x is None and causal
+            and prefix_len is None and n_q == n_kv
+            and head_dim in (64, 128, 256)):
+        # TPU production path: fused blockwise Pallas attention (the (m,l,
+        # acc) stats stay in VMEM — see kernels/flash + §Perf dense-train
+        # follow-up for why the XLA-level variant below does NOT pay)
+        from repro.kernels.flash import flash_attention
+        out = flash_attention(q, k, v, causal=True, window=window or 0)
+        out = out.reshape(b, s, n_q * head_dim)
+    elif (_opt("blockwise_attention") and kv_x is None and causal
+            and prefix_len is None and t % 512 == 0):
+        # §Perf blockwise_attention: online-softmax over K blocks in XLA
+        # (measured: refuted on CPU-lowered graphs; kept for comparison)
+        out = _attention_blockwise(q, k, v, causal=True, window=window or 0)
+    else:
+        scores = _attn_scores(q, k, 1.0 / math.sqrt(head_dim))
+        if kv_x is None:
+            i = jnp.arange(s)[:, None]
+            j = jnp.arange(t)[None, :]
+            mask = jnp.ones((s, t), bool)
+            if causal:
+                mask = j <= i
+            if window is not None:
+                mask = mask & (i - j < window)
+            if prefix_len is not None:
+                mask = mask | (j < prefix_len)
+            scores = jnp.where(mask[None, None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+        out = _attn_out(probs.astype(x.dtype), v)
+    out = dense(p["wo"], out)
+    out = logical_shard(out, "batch", "seq", "d_model")
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def attention_decode(p, x_t, cache: KVCache, pos, *, n_q, n_kv, head_dim,
+                     rope_theta=10000.0, window: Optional[int] = None,
+                     use_rope=True):
+    """Single-token decode against a (ring-buffered) cache.
+
+    x_t: (B, 1, d); pos: scalar int32 — absolute position of this token.
+    For local attention the buffer length equals the window and indexing is
+    mod-window; entries older than ``window`` are masked out by recency.
+    """
+    b = x_t.shape[0]
+    buf = cache.k.shape[1]
+    q = _split_heads(dense(p["wq"], x_t), n_q, head_dim)
+    k_t = _split_heads(dense(p["wk"], x_t), n_kv, head_dim)
+    v_t = _split_heads(dense(p["wv"], x_t), n_kv, head_dim)
+    posv = jnp.full((b, 1), pos)
+    if use_rope:
+        q = rope(q, posv, rope_theta)
+        k_t = rope(k_t, posv, rope_theta)
+    slot = pos % buf if window is not None else pos
+    int8_kv = cache.k.dtype == jnp.int8
+    k_scale, v_scale = cache.k_scale, cache.v_scale
+    if int8_kv:
+        def q8(x_t):
+            s_t = jnp.max(jnp.abs(x_t), axis=-1, keepdims=True) / 127.0
+            s_t = jnp.maximum(s_t, 1e-12)
+            return (jnp.rint(x_t / s_t).astype(jnp.int8),
+                    s_t.astype(jnp.float32))
+        k_t_c, ks_t = q8(k_t)
+        v_t_c, vs_t = q8(v_t)
+        k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_t_c, slot, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_t_c, slot, axis=1)
+        k_scale = jax.lax.dynamic_update_slice_in_dim(
+            cache.k_scale, ks_t, slot, axis=1)
+        v_scale = jax.lax.dynamic_update_slice_in_dim(
+            cache.v_scale, vs_t, slot, axis=1)
+    else:
+        k = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k_t.astype(cache.k.dtype), slot, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v_t.astype(cache.v.dtype), slot, axis=1)
+    from repro.dist.sharding import current_mesh
+    from repro.opts import enabled as _opt
+    mesh = current_mesh()
+    msize = dict(getattr(mesh, "shape", {})).get("model", 1) if mesh else 1
+    if _opt("kv_seq_shard") and n_kv % msize and k.shape[1] % msize == 0:
+        # §Perf kv_seq_shard: shard the cache SEQ dim over "model" — avoids
+        # replicating the cache when kv-head count doesn't divide the axis
+        # (GQA kv=8 / MHA 36-40 heads on a 16-way axis)
+        k = logical_shard(k, "batch", "kv_seq", None, None)
+        v = logical_shard(v, "batch", "kv_seq", None, None)
+    else:
+        k = logical_shard(k, "batch", None, "kv_heads", None)
+        v = logical_shard(v, "batch", None, "kv_heads", None)
+    k_eff = (k.astype(q.dtype) * k_scale.astype(q.dtype)) if int8_kv else k
+    v_eff = (v.astype(q.dtype) * v_scale.astype(q.dtype)) if int8_kv else v
+    scores = _attn_scores(q, k_eff, 1.0 / math.sqrt(head_dim))  # (B,nkv,G,1,buf)
+    idx = jnp.arange(buf)
+    if window is not None:
+        # entry j holds absolute position: j + buf*floor((pos - j)/buf) — valid
+        # iff its absolute position ∈ (pos-window, pos]
+        age = (slot - idx) % buf
+        valid = age < jnp.minimum(pos + 1, buf)
+    else:
+        valid = idx <= pos
+    scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    out = _attn_out(probs.astype(x_t.dtype), v_eff)
+    out = dense(p["wo"], out)
+    return out, KVCache(k=k, v=v, k_scale=k_scale, v_scale=v_scale)
+
+
+def cross_attention_decode(p, x_t, k, v, *, n_q, n_kv, head_dim):
+    """Decode-time cross attention against fixed encoder K/V."""
+    q = _split_heads(dense(p["wq"], x_t), n_q, head_dim)
+    scores = _attn_scores(q, k, 1.0 / math.sqrt(head_dim))
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    out = _attn_out(probs.astype(x_t.dtype), v)
+    return dense(p["wo"], out)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d_model, d_ff, *, gated=True, bias=False,
+             dtype=jnp.float32, stack: Optional[int] = None):
+    kg = KeyGen(key)
+    p = {"w_out": dense_init(kg(), d_ff, d_model, axes=("ff", "d_model_w"),
+                             bias=bias, dtype=dtype, stack=stack)}
+    if gated:
+        p["w_gate"] = dense_init(kg(), d_model, d_ff,
+                                 axes=("d_model_w", "ff"), bias=bias,
+                                 dtype=dtype, stack=stack)
+        p["w_up"] = dense_init(kg(), d_model, d_ff, axes=("d_model_w", "ff"),
+                               bias=bias, dtype=dtype, stack=stack)
+    else:
+        p["w_in"] = dense_init(kg(), d_model, d_ff, axes=("d_model_w", "ff"),
+                               bias=bias, dtype=dtype, stack=stack)
+    return p
+
+
+def mlp(p, x, *, activation="silu"):
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+           "relu2": lambda u: jnp.square(jax.nn.relu(u))}[activation]
+    if "w_gate" in p:
+        h = act(dense(p["w_gate"], x)) * dense(p["w_up"], x)
+    else:
+        h = act(dense(p["w_in"], x))
+    h = logical_shard(h, "batch", "seq", "ff")
+    return dense(p["w_out"], h)
+
+
+# ---------------------------------------------------------------------------
+# MoE (sort-based capacity buffer; experts shard over "model" = EP)
+# ---------------------------------------------------------------------------
+
+
+def moe_init(key, d_model, d_ff, n_experts, *, gated=True, dtype=jnp.float32,
+             stack: Optional[int] = None):
+    kg = KeyGen(key)
+    def ew(shape, axes):
+        full = shape if stack is None else (stack,) + shape
+        fax = axes if stack is None else ("layers",) + axes
+        return Px(_dense_w(kg(), full, 1.0, dtype), fax)
+    # NOTE: experts already take the "model" axis (EP) so the ff dim inside
+    # an expert stays unsharded; d_model is FSDP-sharded over "data".
+    p = {
+        "router": dense_init(kg(), d_model, n_experts,
+                             axes=("d_model_w", "experts"), dtype=dtype,
+                             stack=stack),
+        "w_out": ew((n_experts, d_ff, d_model),
+                    ("experts", None, "d_model_w")),
+    }
+    if gated:
+        p["w_gate"] = ew((n_experts, d_model, d_ff),
+                         ("experts", "d_model_w", None))
+        p["w_up"] = ew((n_experts, d_model, d_ff),
+                       ("experts", "d_model_w", None))
+    else:
+        p["w_in"] = ew((n_experts, d_model, d_ff),
+                       ("experts", "d_model_w", None))
+    return p
+
+
+def moe(p, x, *, n_experts, top_k, capacity_factor=1.25, activation="silu",
+        router_dtype=jnp.float32):
+    """Top-k token-choice MoE with a sort-based capacity buffer.
+
+    Tokens are flattened, routed, sorted by expert, packed into an
+    (E, C, d) buffer (EP: E shards over "model", C over "data"), pushed
+    through per-expert FFNs as dense einsums (MXU), and combined back with
+    router weights.  Over-capacity tokens are dropped (standard GShard
+    semantics); capacity_factor controls the slack.
+
+    §Perf `moe_a2a`: when a mesh is active, experts divide the model axis
+    and the flag is set, dispatch runs in an explicit shard_map with
+    all_to_all exchanges (the production EP pattern) instead of relying on
+    GSPMD to partition the scatter.
+    """
+    from repro.opts import enabled as _opt
+    if _opt("moe_a2a"):
+        from repro.dist.sharding import current_mesh
+        mesh = current_mesh()
+        if mesh is not None and "model" in mesh.axis_names \
+                and n_experts % mesh.shape["model"] == 0 \
+                and x.shape[1] % mesh.shape["model"] == 0:
+            return _moe_a2a(p, x, mesh, n_experts=n_experts, top_k=top_k,
+                            capacity_factor=capacity_factor,
+                            activation=activation,
+                            router_dtype=router_dtype)
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    logits = (xt @ p["router"]["w"].astype(router_dtype)).astype(router_dtype)
+    gates = jax.nn.softmax(logits, axis=-1)                      # (T, E)
+    top_g, top_e = jax.lax.top_k(gates, top_k)                   # (T, k)
+    top_g = top_g / jnp.maximum(top_g.sum(-1, keepdims=True), 1e-9)
+
+    capacity = int(math.ceil(t * top_k / n_experts * capacity_factor))
+    capacity = max(capacity, top_k)
+
+    flat_e = top_e.reshape(-1)                                    # (T*k,)
+    # stable sort by expert id; ties keep token order
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    # position of each routed pair within its expert's segment
+    pos_in_e = jnp.arange(t * top_k) - jnp.searchsorted(
+        sorted_e, sorted_e, side="left")
+    token_of = order // top_k
+    keep = pos_in_e < capacity
+    dest = sorted_e * capacity + jnp.where(keep, pos_in_e, 0)
+
+    buf = jnp.zeros((n_experts * capacity, d), x.dtype)
+    src = xt[token_of] * keep[:, None].astype(x.dtype)
+    from repro.opts import enabled as _opt
+    if _opt("moe_dispatch_shard"):
+        # §Perf moe_dispatch_shard: pin the routed-pair tensors to the DP
+        # axes and the flat buffer to EP so GSPMD resolves the scatter as an
+        # all-to-all instead of replicate+all-reduce of (T·k, d) f32
+        src = logical_shard(src, "batch", None)
+        buf = logical_shard(buf, "experts", None)
+    buf = buf.at[dest].add(src)        # scatter-add; ≤1 writer per slot
+    buf = buf.reshape(n_experts, capacity, d)
+    buf = logical_shard(buf, "experts", "capacity", "d_model")
+
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[activation]
+
+    def emm(inp, w):  # (E,C,din) × (E,din,dout), int8-code aware
+        if isinstance(w, dict) and "codes" in w:
+            scaled = inp * w["s"].astype(inp.dtype)[:, None, :]
+            out = jnp.einsum("ecd,edf->ecf", scaled,
+                             w["codes"].astype(inp.dtype))
+            return out * w["t"].astype(inp.dtype)[:, None, :]
+        return jnp.einsum("ecd,edf->ecf", inp, w.astype(inp.dtype))
+
+    if "w_gate" in p:
+        h = act(emm(buf, p["w_gate"])) * emm(buf, p["w_up"])
+    else:
+        h = act(emm(buf, p["w_in"]))
+    # experts already occupy "model"; ff stays unsharded inside an expert
+    h = logical_shard(h, "experts", "capacity", None)
+    out_buf = emm(h, p["w_out"])
+    out_buf = out_buf.reshape(n_experts * capacity, d)
+
+    # gather back and combine with gate weights
+    if _opt("moe_dispatch_shard"):
+        out_buf = logical_shard(out_buf, "experts", None)
+    gathered = out_buf[dest] * keep[:, None].astype(x.dtype)      # (T*k, d)
+    weights = top_g.reshape(-1)[order].astype(x.dtype)
+    contrib = gathered * weights[:, None]
+    if _opt("moe_dispatch_shard"):
+        contrib = logical_shard(contrib, "batch", None)
+    out = jnp.zeros((t, d), x.dtype).at[token_of].add(contrib)
+    return out.reshape(b, s, d)
+
+
+def _moe_local_pack(xt, gates_e, gates_w, n_experts, capacity, top_k):
+    """Sort-based local dispatch: xt (T, d) → buf (E, C, d) + combine info."""
+    t = xt.shape[0]
+    flat_e = gates_e.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    pos_in_e = jnp.arange(t * top_k) - jnp.searchsorted(
+        sorted_e, sorted_e, side="left")
+    token_of = order // top_k
+    keep = pos_in_e < capacity
+    dest = sorted_e * capacity + jnp.where(keep, pos_in_e, 0)
+    src = xt[token_of] * keep[:, None].astype(xt.dtype)
+    buf = jnp.zeros((n_experts * capacity, xt.shape[1]), xt.dtype)
+    buf = buf.at[dest].add(src)
+    weights = gates_w.reshape(-1)[order]
+    return buf.reshape(n_experts, capacity, -1), (token_of, dest, keep,
+                                                  weights)
+
+
+def _moe_a2a(p, x, mesh, *, n_experts, top_k, capacity_factor, activation,
+             router_dtype):
+    """Expert parallelism with explicit all_to_all (shard_map).
+
+    Layout inside the region: tokens sharded over (DP × model) — each
+    device routes a distinct token slice into an (E, C_loc, d) buffer;
+    all_to_all over "model" swaps expert-major slices so each device holds
+    ALL tokens for its E/n_model local experts; local FFN; reverse
+    all_to_all; local combine.  Exactly the token-payload exchange the
+    napkin math says is optimal (EXPERIMENTS.md §Perf pair 2).
+    """
+    from jax.sharding import PartitionSpec as P
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n_model = mesh.shape["model"]
+    e_loc = n_experts // n_model
+    b, s, d = x.shape
+    t_loc = (b * s) // (n_model * _axis_size(mesh, dp))
+    capacity = max(int(math.ceil(t_loc * top_k / n_experts
+                                 * capacity_factor)), top_k)
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[activation]
+    gated = "w_gate" in p
+
+    def local(x_blk, router_w, *ws):
+        bb, ss, _ = x_blk.shape
+        xt = x_blk.reshape(bb * ss, d)
+        logits = (xt @ router_w.astype(router_dtype)).astype(router_dtype)
+        gates = jax.nn.softmax(logits, axis=-1)
+        top_g, top_e = jax.lax.top_k(gates, top_k)
+        top_g = top_g / jnp.maximum(top_g.sum(-1, keepdims=True), 1e-9)
+        buf, (token_of, dest, keep, weights) = _moe_local_pack(
+            xt, top_e, top_g.astype(xt.dtype), n_experts, capacity, top_k)
+        # (E, C, d) -> exchange expert-major slices over the model axis
+        ex = jax.lax.all_to_all(buf, "model", split_axis=0, concat_axis=1,
+                                tiled=True)          # (e_loc, n_model·C, d)
+        if gated:
+            w_g, w_u, w_o = ws
+            h = act(jnp.einsum("ecd,edf->ecf", ex, w_g.astype(ex.dtype))) \
+                * jnp.einsum("ecd,edf->ecf", ex, w_u.astype(ex.dtype))
+        else:
+            w_i, w_o = ws
+            h = act(jnp.einsum("ecd,edf->ecf", ex, w_i.astype(ex.dtype)))
+        out_ex = jnp.einsum("ecf,efd->ecd", h, w_o.astype(ex.dtype))
+        back = jax.lax.all_to_all(out_ex, "model", split_axis=1,
+                                  concat_axis=0, tiled=True)  # (E, C, d)
+        out_rows = back.reshape(n_experts * capacity, d)[dest] \
+            * keep[:, None].astype(xt.dtype)
+        contrib = out_rows * weights[:, None].astype(xt.dtype)
+        out = jnp.zeros((bb * ss, d), xt.dtype).at[token_of].add(contrib)
+        return out.reshape(bb, ss, d)
+
+    if gated:
+        ws = (p["w_gate"], p["w_up"], p["w_out"])
+        w_specs = (P("model", None, None),) * 3
+    else:
+        ws = (p["w_in"], p["w_out"])
+        w_specs = (P("model", None, None),) * 2
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(dp, "model", None), P()) + w_specs,
+        out_specs=P(dp, "model", None),
+        check_vma=False)
+    return fn(x, p["router"]["w"], *ws)
+
+
+def _axis_size(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key, vocab, d_model, dtype=jnp.float32):
+    w = (jax.random.normal(key, (vocab, d_model), jnp.float32)
+         * 0.02).astype(dtype)
+    return {"w": Px(w, ("vocab", "d_model_w"))}
+
+
+def embed(p, tokens):
+    return jnp.take(p["w"], tokens, axis=0)
+
+
+def unembed(p, x, vocab: Optional[int] = None):
+    logits = x @ p["w"].astype(x.dtype).T
+    logits = logical_shard(logits, "batch", "seq", "vocab")
+    if vocab is not None and vocab != logits.shape[-1]:
+        logits = logits[..., :vocab]  # drop padded-vocab rows
+    return logits

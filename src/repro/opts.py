@@ -1,0 +1,40 @@
+"""Beyond-baseline optimization flags (§Perf hillclimbing).
+
+Optimizations are opt-in via the REPRO_OPTS env var (comma-separated) so the
+dry-run grid can measure baseline vs optimized cells with identical code
+checkouts:
+
+    REPRO_OPTS=parallel_prefill,kv_seq_shard python -m repro.launch.dryrun ...
+
+Flags:
+  parallel_prefill — ssm/hybrid prefill via the full-sequence training
+                     forward (associative scan / WKV time scan) instead of
+                     token-by-token decode stepping (kills the ×S HBM
+                     re-read of params/state).
+  kv_seq_shard     — decode KV caches shard the sequence dim over "model"
+                     when kv-head count doesn't divide the axis (prevents
+                     full cache replication for GQA kv<16 / MHA 40-head).
+  flat_remat       — offload-free rematerialization policy tweak: save only
+                     layer-boundary activations + attention logits dots
+                     (jax.checkpoint policy dots_with_no_batch_dims_saveable)
+                     instead of full per-layer remat.
+  moe_bf16_dispatch— MoE dispatch/combine buffers in bf16 (halves the
+                     all-to-all bytes of the EP boundary).
+  seq_shard_train  — shard the sequence dim of train-time activations over
+                     "model" for long-sequence cells (context parallelism).
+"""
+from __future__ import annotations
+
+import os
+from typing import FrozenSet
+
+__all__ = ["enabled", "all_enabled"]
+
+
+def all_enabled() -> FrozenSet[str]:
+    raw = os.environ.get("REPRO_OPTS", "")
+    return frozenset(x.strip() for x in raw.split(",") if x.strip())
+
+
+def enabled(name: str) -> bool:
+    return name in all_enabled()

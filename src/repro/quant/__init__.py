@@ -1,0 +1,5 @@
+from .qlinear import (from_watersic, is_qweight, quantize_params_tree,
+                      qweight_bytes)
+
+__all__ = ["from_watersic", "is_qweight", "quantize_params_tree",
+           "qweight_bytes"]

@@ -1,0 +1,331 @@
+"""Sequential model PTQ pipeline (paper §4 + App. C/D).
+
+Quantizes a dense-family LM layer by layer:
+
+  for each layer l (first → last):
+    1. run fp and quantized-so-far models over the calibration batches,
+       accumulating Σ_X, Σ_X̂, Σ_{X,X̂}, Σ_{Δ,X̂} (+ attention-weighted)
+    2. (optional) adaptive mixing: golden-section search over ε_qr then
+       ε_aw minimizing the relative MSE at the wo input (eq. (60)),
+       re-quantizing (wq, wk, wv) jointly per evaluation
+    3. quantize the 7 block matrices at the global budget's per-layer
+       target rate (secant-matched), with LMMSE + rescalers
+    4. write dequantized weights back into the running quantized model
+
+Methods: "watersic" (full), "watersic-plain" (no LMMSE/rescalers/drift),
+"hptq" (uniform lattice + entropy = Huffman-GPTQ), "rtn" (per-row absmax).
+
+Returns (quantized params, per-matrix QuantizedLinear dict, RateBudget,
+report rows) — examples/quantize_model.py turns this into the Table 1/2
+analogue; from_watersic converts entries into int8 serving weights.
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import (CalibStats, QuantizedLinear, RateBudget, huffman_rtn,
+                        quantize_at_rate, rtn_absmax)
+from .calibrate import (StatsAccumulator, accumulate_stats,
+                        forward_with_taps, stats_for_matrix,
+                        _attention_with_probs)
+from repro.models.transformer import _attn_kwargs
+
+__all__ = ["PTQConfig", "quantize_model", "model_ppl"]
+
+_BLOCK_MATS = [  # (param path inside layer, tap key, is down-projection)
+    (("attn", "wq"), "x_attn", False),
+    (("attn", "wk"), "x_attn", False),
+    (("attn", "wv"), "x_attn", False),
+    (("attn", "wo"), "ctx", True),
+    (("mlp", "w_gate"), "x_mlp", False),
+    (("mlp", "w_up"), "x_mlp", False),
+    (("mlp", "w_out"), "hidden", True),
+]
+
+
+@dataclasses.dataclass
+class PTQConfig:
+    target_bits: float = 3.0
+    method: str = "watersic"          # watersic | watersic-plain | hptq | rtn
+    use_drift: bool = True
+    use_residual: bool = True
+    attention_weighting: bool = False
+    adaptive_mix: bool = False
+    golden_iters: int = 6
+    damp: float = 1e-4
+    hptq_damp: float = 0.1            # GPTQ default damping (paper App. D)
+    seed: int = 0
+
+
+def _layer_count(params) -> int:
+    return jax.tree.leaves(params["layers"])[0].shape[0]
+
+
+def _get_w(params, l, path):
+    node = params["layers"]
+    for k in path:
+        node = node[k]
+    return node["w"][l]
+
+
+def _set_w(params, l, path, w_new):
+    node = params["layers"]
+    for k in path[:-1]:
+        node = node[k]
+    leaf = node[path[-1]]
+    leaf["w"] = leaf["w"].at[l].set(w_new.astype(leaf["w"].dtype))
+
+
+def _mats_for(cfg, params):
+    mats = list(_BLOCK_MATS)
+    lp = params["layers"]
+    if cfg.n_experts:
+        return [m for m in mats if m[0][0] == "attn"]
+    if "w_gate" not in lp["mlp"]:
+        mats = [m for m in mats if m[0][1] not in ("w_gate", "w_up")]
+        mats.append((("mlp", "w_in"), "x_mlp", False))
+        # keep w_out last (depends on hidden tap)
+        mats.sort(key=lambda m: m[0][1] == "w_out")
+    return mats
+
+
+def _quantize_matrix(ptq: PTQConfig, w_alg, stats: CalibStats, target: float
+                     ) -> QuantizedLinear:
+    if ptq.method == "watersic":
+        return quantize_at_rate(w_alg, stats, target, damp=ptq.damp,
+                                seed=ptq.seed)
+    if ptq.method == "watersic-plain":
+        return quantize_at_rate(w_alg, stats, target, damp=ptq.damp,
+                                lmmse=False, rescalers=False, seed=ptq.seed)
+    if ptq.method == "hptq":
+        return quantize_at_rate(w_alg, stats, target, damp=ptq.hptq_damp,
+                                lmmse=False, rescalers=False,
+                                spacing="uniform", erase_dead=False,
+                                seed=ptq.seed)
+    raise ValueError(ptq.method)
+
+
+def _rtn_matrix(w_alg, target_bits: float) -> Tuple[np.ndarray, float]:
+    bits = max(int(round(target_bits)), 2)
+    out = rtn_absmax(np.asarray(w_alg), bits)
+    return out["w_hat"], float(bits)
+
+
+def quantize_model(cfg: ArchConfig, params, calib_batches: List[np.ndarray],
+                   ptq: PTQConfig):
+    """Sequential PTQ of a dense- or moe-family model.  calib_batches:
+    token arrays (B, S).  Returns (qparams, qlinears, budget, rows).
+
+    MoE: attention matrices get the full machinery; each expert's FFN
+    matrices are calibrated on exactly its routed tokens (per-expert Σ_X
+    from the quantized-model routing — drift/residual corrections are
+    per-token-set and hence dense-only; DESIGN.md §5)."""
+    assert cfg.family in ("dense", "moe")
+    L = _layer_count(params)
+    qparams = jax.tree.map(lambda x: x, params)  # shallow copy of arrays
+    qparams = jax.tree.map(jnp.asarray, qparams)
+    qparams = copy.deepcopy(jax.device_get(qparams))
+    qparams = jax.tree.map(jnp.asarray, qparams)
+    mats = _mats_for(cfg, params)
+    layer_params = {}
+    for l in range(L):
+        for path, _, _ in mats:
+            w = _get_w(params, l, path)
+            layer_params[f"L{l}/{'/'.join(path)}"] = int(np.prod(w.shape))
+        if cfg.n_experts:
+            for key in _expert_keys(params):
+                we = params["layers"]["moe"][key]
+                per = int(np.prod(we.shape[2:]))
+                for e in range(cfg.n_experts):
+                    layer_params[f"L{l}/moe/{key}/e{e}"] = per
+    budget = RateBudget(ptq.target_bits, layer_params)
+    qlinears: Dict[str, QuantizedLinear] = {}
+    rows = []
+
+    for l in range(L):
+        acc = StatsAccumulator()
+        taps_q_cache = []
+        for tokens in calib_batches:
+            _, taps_fp = forward_with_taps(cfg, params, tokens)
+            _, taps_q = forward_with_taps(cfg, qparams, tokens)
+            accumulate_stats(acc, l, taps_fp[l], taps_q[l])
+            taps_q_cache.append((taps_fp[l], taps_q[l]))
+
+        eps_qr, eps_aw = 0.0, 1.0
+        if ptq.adaptive_mix and ptq.method.startswith("watersic"):
+            eps_qr, eps_aw = _optimize_mixing(cfg, params, qparams, l, acc,
+                                              taps_q_cache, budget, ptq)
+        for path, tap, is_down in mats:
+            name = f"L{l}/{'/'.join(path)}"
+            w = _get_w(params, l, path)          # (in, out)
+            w_alg = jnp.asarray(w).T             # algorithm layout (out, in)
+            target = budget.next_target(name)
+            if ptq.method == "rtn":
+                w_hat, rate = _rtn_matrix(w_alg, target)
+                budget.record(name, rate)
+                _set_w(qparams, l, path, jnp.asarray(w_hat).T)
+                continue
+            is_qkv = path[-1] in ("wq", "wk", "wv")
+            stats = stats_for_matrix(
+                acc, l, tap,
+                use_drift=ptq.use_drift and ptq.method != "hptq",
+                use_residual=ptq.use_residual and is_down
+                and ptq.method.startswith("watersic"),
+                eps_qr=eps_qr if is_qkv else 0.0,
+                eps_aw=eps_aw if is_qkv else 1.0,
+                weighted_available=ptq.attention_weighting and is_qkv)
+            if ptq.method == "hptq":
+                # HPTQ uses the quantized-model Hessian Σ_X̂ (paper App. D)
+                stats = CalibStats(sigma_x=stats.sigma_xhat
+                                   if stats.sigma_xhat is not None
+                                   else stats.sigma_x)
+            q = _quantize_matrix(ptq, w_alg, stats, target)
+            # budget in entropy bits (the paper's rate convention); the
+            # 16/a + 16/n side-info overhead is reported via rate_eff
+            budget.record(name, q.entropy_bits)
+            qlinears[name] = q
+            _set_w(qparams, l, path, q.dequant().T)
+            rows.append({"layer": l, "matrix": "/".join(path),
+                         "rate": q.rate_eff, "entropy": q.entropy_bits,
+                         "dead": int(q.dead_mask.sum())})
+        if cfg.n_experts:
+            _quantize_layer_experts(cfg, params, qparams, l, acc, budget,
+                                    ptq, qlinears, rows)
+    return qparams, qlinears, budget, rows
+
+
+def _expert_keys(params):
+    moe_p = params["layers"]["moe"]
+    return [k for k in ("w_gate", "w_up", "w_in", "w_out") if k in moe_p]
+
+
+def _quantize_layer_experts(cfg, params, qparams, l, acc, budget, ptq,
+                            qlinears, rows):
+    """Per-expert FFN quantization from routed-token covariances."""
+    for key in _expert_keys(params):
+        tap = "hid" if key == "w_out" else "in"
+        for e in range(cfg.n_experts):
+            name = f"L{l}/moe/{key}/e{e}"
+            w = params["layers"]["moe"][key][l, e]     # (din, dout)
+            stats = CalibStats(sigma_x=jnp.asarray(
+                acc.get(f"L{l}/e{e}/{tap}/xx"), jnp.float32))
+            target = budget.next_target(name)
+            if ptq.method == "rtn":
+                w_hat, rate = _rtn_matrix(jnp.asarray(w).T, target)
+                budget.record(name, rate)
+                leaf = qparams["layers"]["moe"][key]
+                qparams["layers"]["moe"][key] = leaf.at[l, e].set(
+                    jnp.asarray(w_hat).T.astype(leaf.dtype))
+                continue
+            q = _quantize_matrix(ptq, jnp.asarray(w).T, stats, target)
+            budget.record(name, q.entropy_bits)
+            qlinears[name] = q
+            leaf = qparams["layers"]["moe"][key]
+            qparams["layers"]["moe"][key] = leaf.at[l, e].set(
+                q.dequant().T.astype(leaf.dtype))
+            rows.append({"layer": l, "matrix": f"moe/{key}/e{e}",
+                         "rate": q.rate_eff, "entropy": q.entropy_bits,
+                         "dead": int(q.dead_mask.sum())})
+
+
+# ---------------------------------------------------------------------------
+# Adaptive mixing (golden-section, eq. (60))
+# ---------------------------------------------------------------------------
+
+
+def _attn_rel_mse(cfg, params, l, qkv_weights, taps_pairs):
+    """Relative MSE at the wo input: Attn(X̂; ŵ) vs Attn(X; w)  (eq. 60)."""
+    ak = _attn_kwargs(cfg)
+    lp = jax.tree.map(lambda t: t[l], params["layers"])
+    num = den = 0.0
+    for taps_fp, taps_q in taps_pairs:
+        ctx_fp = np.asarray(taps_fp["ctx"], np.float64)
+        attn_q = dict(lp["attn"])
+        attn_q = {**attn_q}
+        for k, wnew in qkv_weights.items():
+            attn_q[k] = {**attn_q[k], "w": wnew}
+        ctx_hat, _ = _attention_with_probs(attn_q, taps_q["x_attn"], **ak)
+        diff = np.asarray(ctx_hat, np.float64) - ctx_fp
+        num += float((diff ** 2).sum())
+        den += float((ctx_fp ** 2).sum())
+    return num / max(den, 1e-12)
+
+
+def _quantize_qkv(cfg, params, l, acc, budget, ptq, eps_qr, eps_aw):
+    out = {}
+    for key, tap in (("wq", "x_attn"), ("wk", "x_attn"), ("wv", "x_attn")):
+        w = _get_w(params, l, ("attn", key))
+        stats = stats_for_matrix(acc, l, tap, use_drift=ptq.use_drift,
+                                 eps_qr=eps_qr, eps_aw=eps_aw,
+                                 weighted_available=ptq.attention_weighting)
+        # match the budget's CURRENT per-layer rate without consuming it
+        target = budget.next_target(f"L{l}/attn/{key}")
+        q = _quantize_matrix(ptq, jnp.asarray(w).T, stats, target)
+        out[key] = q.dequant().T
+    return out
+
+
+def _golden(f, lo=0.0, hi=1.0, iters=6):
+    phi = (math.sqrt(5.0) - 1) / 2
+    a, b = lo, hi
+    c1 = b - phi * (b - a)
+    c2 = a + phi * (b - a)
+    f1, f2 = f(c1), f(c2)
+    for _ in range(iters - 2):
+        if f1 <= f2:
+            b, c2, f2 = c2, c1, f1
+            c1 = b - phi * (b - a)
+            f1 = f(c1)
+        else:
+            a, c1, f1 = c1, c2, f2
+            c2 = a + phi * (b - a)
+            f2 = f(c2)
+    return c1 if f1 <= f2 else c2
+
+
+def _optimize_mixing(cfg, params, qparams, l, acc, taps_pairs, budget, ptq):
+    """Two-stage golden-section: ε_qr (drift mixing) then ε_aw (attention
+    weighting) per paper App. C step 1-2."""
+
+    def eval_qr(eps_qr):
+        w = _quantize_qkv(cfg, params, l, acc, budget, ptq, eps_qr, 0.0
+                          if ptq.attention_weighting else 1.0)
+        return _attn_rel_mse(cfg, params, l, w, taps_pairs)
+
+    eps_qr = _golden(eval_qr, iters=ptq.golden_iters)
+    if not ptq.attention_weighting:
+        return eps_qr, 1.0
+
+    def eval_aw(eps_aw):
+        w = _quantize_qkv(cfg, params, l, acc, budget, ptq, eps_qr, eps_aw)
+        return _attn_rel_mse(cfg, params, l, w, taps_pairs)
+
+    eps_aw = _golden(eval_aw, iters=ptq.golden_iters)
+    return eps_qr, eps_aw
+
+
+# ---------------------------------------------------------------------------
+# Evaluation
+# ---------------------------------------------------------------------------
+
+
+def model_ppl(cfg: ArchConfig, params, batches: List[np.ndarray]) -> float:
+    """Perplexity over token batches (next-token, teacher-forced)."""
+    from repro.models import loss_fn
+    tot, n = 0.0, 0
+    for tokens in batches:
+        batch = {"tokens": jnp.asarray(tokens[:, :-1]),
+                 "targets": jnp.asarray(tokens[:, 1:])}
+        loss = float(loss_fn(cfg, params, batch))
+        tok = tokens[:, 1:].size
+        tot += loss * tok
+        n += tok
+    return math.exp(tot / max(n, 1))

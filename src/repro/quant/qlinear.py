@@ -1,0 +1,132 @@
+"""Quantized-weight serving: swap big linear weights for int8 ZSIC codes.
+
+``quantize_params_tree`` walks a model param tree (values, after split_tree)
+and replaces every eligible weight leaf W (in, out) with
+
+    {"codes": int8 (in, out), "s": (in,), "t": (out,)}      [2D]
+    {"codes": int8 (L/E, in, out), "s": (L/E, in), "t": (L/E, out)}  [stacked]
+
+matching the WaterSIC reconstruction Ŵᵀ[i, o] = s[i]·Z[o, i]·t[o] used by
+kernels/dequant.  models.layers.dense / moe dispatch on the dict form and
+compute  y = ((x·s) @ codes)·t  — weights stay int8 in HBM (the decode
+roofline memory-term win measured in §Perf).
+
+Two producers:
+  * ``from_watersic``    — real codes/scales from a quant.pipeline run
+                           (small models, tests/examples),
+  * ``quantize_params_tree(..., synthetic=True)`` — traceable absmax-scaled
+    int8 codes used by the dry-run (eval_shape only needs shapes/dtypes).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["quantize_params_tree", "is_qweight", "from_watersic",
+           "qweight_bytes"]
+
+#: param-dict keys eligible for weight quantization (the big matmuls)
+_WEIGHT_KEYS = ("w",)
+#: MoE expert tensors are raw leaves under these names
+_EXPERT_KEYS = ("w_gate", "w_up", "w_in", "w_out")
+
+
+def is_qweight(x) -> bool:
+    return isinstance(x, dict) and "codes" in x
+
+
+def _quantize_leaf(w: jnp.ndarray, nbits: int = 8) -> Dict[str, jnp.ndarray]:
+    """Traceable symmetric int8/int4 quantization of (…, in, out) weights.
+
+    Per-(in-row) scale s and unit t (synthetic stand-in for WaterSIC scales;
+    real runs overwrite with Alg. 3 scales via from_watersic).  nbits=4 uses
+    the native s4 dtype — the paper's 2–4 bit deployment regime (XLA reads
+    half-byte weights from HBM; see §Perf pair 3)."""
+    qmax = 127.0 if nbits == 8 else 7.0
+    dt = jnp.int8 if nbits == 8 else jnp.int4
+    absmax = jnp.max(jnp.abs(w), axis=-1, keepdims=True)  # (…, in, 1)
+    s = (absmax[..., 0] / qmax + 1e-12)
+    codes = jnp.clip(jnp.rint(w / absmax * qmax), -qmax, qmax).astype(dt)
+    t = jnp.ones(w.shape[:-2] + (w.shape[-1],), jnp.float32)
+    return {"codes": codes, "s": s.astype(jnp.float32), "t": t}
+
+
+def _eligible(path_keys: Tuple[str, ...], leaf, min_dim: int) -> bool:
+    if not path_keys or not hasattr(leaf, "ndim") or leaf.ndim < 2:
+        return False
+    name = path_keys[-1]
+    if name in _EXPERT_KEYS and leaf.ndim == 3:
+        pass
+    elif name not in _WEIGHT_KEYS:
+        return False
+    if min(leaf.shape[-1], leaf.shape[-2]) < min_dim:
+        return False
+    return True
+
+
+def quantize_params_tree(params, *, min_dim: int = 64,
+                         skip_embed: bool = True, nbits: int = 8):
+    """Replace eligible weight leaves with int8/int4 code dicts (traceable).
+
+    Model param trees are nested dicts/lists of arrays (see models/); the
+    walk preserves structure and rewrites eligible weights in place.
+    """
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            if is_qweight(node):
+                return node
+            return {k: walk(v, path + (k,)) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            vals = [walk(v, path + (str(i),)) for i, v in enumerate(node)]
+            return type(node)(vals) if not isinstance(node, tuple) \
+                else tuple(vals)
+        if skip_embed and "embed" in path:
+            return node
+        if _eligible(path, node, min_dim):
+            return _quantize_leaf(node, nbits)
+        return node
+
+    return walk(params, ())
+
+
+def from_watersic(q, *, transpose: bool = True) -> Dict[str, jnp.ndarray]:
+    """core.QuantizedLinear -> serving dict.
+
+    QuantizedLinear stores W (out, in); serving uses (in, out):
+    codes (in, out) = Zᵀ, s = α⊙γ (in-features), t (out,)."""
+    codes = np.asarray(q.codes)
+    if q.dead_mask.any():
+        full = np.zeros((q.out_features, q.in_features), codes.dtype)
+        live = np.nonzero(~q.dead_mask)[0]
+        full[:, live] = codes
+        codes = full
+        s_full = np.zeros(q.in_features, np.float32)
+        s_full[live] = q.column_scale
+    else:
+        s_full = q.column_scale.astype(np.float32)
+    if np.abs(codes).max() > 127:
+        # clip escapes (negligible mass; exact path uses packing escapes)
+        codes = np.clip(codes, -127, 127)
+    return {"codes": jnp.asarray(codes.T.astype(np.int8)),
+            "s": jnp.asarray(s_full, jnp.float32),
+            "t": jnp.asarray(q.t, jnp.float32)}
+
+
+def qweight_bytes(tree) -> Tuple[int, int]:
+    """(quantized bytes, would-be bf16 bytes) over the tree — the HBM win."""
+    qb = fb = 0
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in flat:
+        keys = tuple(str(getattr(p, "key", getattr(p, "idx", p)))
+                     for p in path)
+        if "codes" in keys:
+            qb += leaf.size
+            fb += leaf.size * 2
+        elif hasattr(leaf, "dtype"):
+            qb += leaf.size * leaf.dtype.itemsize
+            fb += leaf.size * leaf.dtype.itemsize
+    return qb, fb

@@ -1,0 +1,110 @@
+"""Batched serving engine (static batching rounds).
+
+Requests queue in; each *round* admits up to ``n_slots`` requests with equal
+prompt length (the queue is grouped by length), prefills them in lockstep by
+stepping the prompt through ``decode_step`` (exact w.r.t. the cache), then
+generates greedily until every admitted request hits its token budget.
+Rounds are independent: the cache is re-initialized per round, so no state
+leaks between requests.  Continuous batching (per-slot positions) is listed
+as future work in DESIGN.md; static rounds keep the reference engine exactly
+equivalent to the tested decode path.
+
+Weights may be served dequantized-on-the-fly from WaterSIC int codes
+(quant/qlinear) — the paper's deployment story: decode is weight-bytes
+bound, so 2–4 bit codes cut the dominant roofline term.  launch/serve.py
+wraps the same decode_step in pjit for the production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import decode_step, init_cache
+
+__all__ = ["Request", "ServeEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray               # (S,) int32
+    max_new_tokens: int = 16
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, *, n_slots: int = 4,
+                 max_len: int = 256, cache_dtype=jnp.float32,
+                 decode_fn: Optional[Callable] = None):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.cache_dtype = cache_dtype
+        self.queue: deque[Request] = deque()
+        self._decode = decode_fn or jax.jit(
+            lambda params, cache, tok: decode_step(cfg, params, cache, tok))
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> List[Request]:
+        """Pop up to n_slots queued requests sharing the head's prompt len."""
+        if not self.queue:
+            return []
+        plen = len(self.queue[0].prompt)
+        admitted, rest = [], deque()
+        while self.queue and len(admitted) < self.n_slots:
+            r = self.queue.popleft()
+            if len(r.prompt) == plen:
+                admitted.append(r)
+            else:
+                rest.append(r)
+        rest.extend(self.queue)
+        self.queue = rest
+        return admitted
+
+    def run_round(self) -> List[Request]:
+        """One static-batching round; returns the finished requests."""
+        batch = self._admit()
+        if not batch:
+            return []
+        b = len(batch)
+        plen = len(batch[0].prompt)
+        budget = max(r.max_new_tokens for r in batch)
+        assert plen + budget <= self.max_len, "round exceeds cache length"
+        cache = init_cache(self.cfg, b, self.max_len, self.cache_dtype)
+
+        prompts = np.stack([r.prompt for r in batch]).astype(np.int32)
+        logits = None
+        for t in range(plen):                       # lockstep exact prefill
+            logits, cache = self._decode(self.params, cache,
+                                         jnp.asarray(prompts[:, t:t + 1]))
+        last = np.argmax(np.asarray(logits), axis=-1).astype(np.int32)
+        for _ in range(budget):
+            for i, r in enumerate(batch):
+                if len(r.out_tokens) < r.max_new_tokens:
+                    r.out_tokens.append(int(last[i]))
+            if all(len(r.out_tokens) >= r.max_new_tokens for r in batch):
+                break
+            logits, cache = self._decode(self.params, cache,
+                                         jnp.asarray(last[:, None]))
+            last = np.argmax(np.asarray(logits), axis=-1).astype(np.int32)
+        for r in batch:
+            r.done = True
+        return batch
+
+    def run_until_done(self, max_rounds: int = 1000) -> List[Request]:
+        done: List[Request] = []
+        for _ in range(max_rounds):
+            if not self.queue:
+                break
+            done.extend(self.run_round())
+        return done

@@ -1,0 +1,105 @@
+"""WaterSIC-FT: post-quantization finetuning of the rescaler vectors
+(paper §4 "Post-quantization finetuning").
+
+Only the continuous per-layer vectors t (rows) and γ (columns) are trained —
+a+n params per matrix, negligible vs the frozen integer codes Z.  The
+dequantized weight Ŵ = T·(Z⊙α)·Γ is fully differentiable in (t, γ), so no
+straight-through estimator is needed.  Objective: KL(teacher ‖ student) on
+the fp model's output distribution; optimizer AdamW + cosine annealing
+(paper App. D: peak 5e-4 → 5e-6).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import QuantizedLinear
+from repro.models import forward_train
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+
+__all__ = ["finetune_rescalers"]
+
+
+def _dequant_with(frozen, t, g):
+    """Ŵ(in,out) from frozen codes/α and live (t, γ) — differentiable."""
+    codes, alphas, live_idx, in_features = frozen
+    w_live = codes.astype(jnp.float32) * (alphas * g)[None, :] * t[:, None]
+    if live_idx is None:
+        return w_live.T
+    w = jnp.zeros((w_live.shape[0], in_features), jnp.float32)
+    w = w.at[:, live_idx].set(w_live)
+    return w.T
+
+
+def _freeze(q: QuantizedLinear):
+    live = None
+    if q.dead_mask.any():
+        live = jnp.asarray(np.nonzero(~q.dead_mask)[0])
+    return (jnp.asarray(q.codes, jnp.int32), jnp.asarray(q.alphas),
+            live, q.in_features)
+
+
+def _apply_rescalers(qparams, qlinears, frozen, trainable):
+    p = jax.tree.map(lambda x: x, qparams)
+    for name in qlinears:
+        l = int(name.split("/")[0][1:])
+        path = name.split("/")[1:]
+        w = _dequant_with(frozen[name], trainable[name]["t"],
+                          trainable[name]["g"])
+        node = p["layers"]
+        for k in path[:-1]:
+            node = node[k]
+        leaf = dict(node[path[-1]])
+        leaf["w"] = leaf["w"].at[l].set(w.astype(leaf["w"].dtype))
+        node[path[-1]] = leaf
+    return p
+
+
+def finetune_rescalers(cfg: ArchConfig, teacher_params, qparams,
+                       qlinears: Dict[str, QuantizedLinear],
+                       batches: List[np.ndarray], *, steps: int = 60,
+                       lr: float = 5e-4, log_every: int = 20):
+    """Returns (finetuned qparams, trainable dict, losses)."""
+    frozen = {k: _freeze(q) for k, q in qlinears.items()}
+    trainable = {k: {"t": jnp.asarray(q.t, jnp.float32),
+                     "g": jnp.asarray(q.gamma, jnp.float32)}
+                 for k, q in qlinears.items()}
+
+    # teacher logits cached once per batch (paper App. D)
+    teacher_logits = []
+    for tokens in batches:
+        tb = {"tokens": jnp.asarray(tokens[:, :-1]),
+              "targets": jnp.asarray(tokens[:, 1:])}
+        teacher_logits.append(
+            jax.nn.log_softmax(
+                forward_train(cfg, teacher_params, tb).astype(jnp.float32)))
+
+    def kl_loss(tr, tokens, t_logp):
+        p = _apply_rescalers(qparams, qlinears, frozen, tr)
+        sb = {"tokens": tokens[:, :-1], "targets": tokens[:, 1:]}
+        s_logits = forward_train(cfg, p, sb).astype(jnp.float32)
+        s_logp = jax.nn.log_softmax(s_logits)
+        t_prob = jnp.exp(t_logp)
+        return jnp.mean(jnp.sum(t_prob * (t_logp - s_logp), axis=-1))
+
+    opt_cfg = AdamWConfig(lr=lr, weight_decay=0.0, schedule="cosine",
+                          warmup_steps=max(steps // 10, 1),
+                          total_steps=steps, min_lr_frac=0.01,
+                          clip_norm=1.0)
+    opt = adamw_init(trainable)
+    grad_fn = jax.jit(jax.value_and_grad(kl_loss))
+    losses = []
+    for step in range(steps):
+        i = step % len(batches)
+        loss, g = grad_fn(trainable, jnp.asarray(batches[i]),
+                          teacher_logits[i])
+        trainable, opt, _ = adamw_update(opt_cfg, trainable, g, opt)
+        losses.append(float(loss))
+        if log_every and step % log_every == 0:
+            print(f"  FT step {step:4d} KL {float(loss):.5f}", flush=True)
+    p_final = _apply_rescalers(qparams, qlinears, frozen, trainable)
+    return p_final, trainable, losses

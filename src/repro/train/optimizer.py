@@ -1,0 +1,116 @@
+"""Sharded AdamW + LR schedules (cosine, WSD) — pure JAX, no optax.
+
+Optimizer state lives in the same sharding as the parameters (FSDP-friendly:
+m/v simply inherit the param PartitionSpecs).  Supports global-norm clipping
+and decoupled weight decay.  The WSD (warmup-stable-decay) schedule is the
+MiniCPM training schedule from the brief.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "AdamWState", "adamw_init", "adamw_update",
+           "cosine_schedule", "wsd_schedule", "global_norm", "clip_by_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    schedule: str = "cosine"      # "cosine" | "wsd" | "const"
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    stable_frac: float = 0.8      # WSD: fraction of steps at peak LR
+    min_lr_frac: float = 0.1
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(jnp.zeros_like, params))
+
+
+def cosine_schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * (cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos)
+
+
+def wsd_schedule(cfg: AdamWConfig, step):
+    """Warmup-Stable-Decay (MiniCPM): linear warmup, flat plateau, then
+    exponential-style decay over the final (1 − stable_frac) of steps."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    decay_start = cfg.stable_frac * cfg.total_steps
+    t = jnp.clip((step - decay_start)
+                 / jnp.maximum(cfg.total_steps - decay_start, 1), 0, 1)
+    decay = cfg.min_lr_frac ** t  # exp decay from 1 → min_lr_frac
+    return cfg.lr * warm * decay
+
+
+def _lr(cfg: AdamWConfig, step):
+    if cfg.schedule == "wsd":
+        return wsd_schedule(cfg, step)
+    if cfg.schedule == "const":
+        return jnp.asarray(cfg.lr)
+    return cosine_schedule(cfg, step)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_norm(tree, max_norm):
+    gn = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), tree), gn
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state: AdamWState):
+    """One AdamW step; returns (new_params, new_state, metrics)."""
+    if cfg.clip_norm:
+        grads, gnorm = clip_by_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    lr = _lr(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * gf
+        v2 = b2 * v + (1 - b2) * jnp.square(gf)
+        mh = m2 / bc1
+        vh = v2 / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay \
+            * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(step=step, m=new_m, v=new_v), \
+        {"lr": lr, "grad_norm": gnorm}

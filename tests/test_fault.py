@@ -1,0 +1,61 @@
+"""Fault-tolerance harness: heartbeats, stragglers, checkpointed restarts."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dist.fault import (Heartbeat, RestartPolicy, StragglerMonitor,
+                              run_with_restarts)
+
+
+def test_heartbeat_liveness(tmp_path):
+    hb1 = Heartbeat(str(tmp_path), "h0")
+    hb2 = Heartbeat(str(tmp_path), "h1")
+    hb1.beat(5)
+    hb2.beat(7)
+    alive = Heartbeat.alive_hosts(str(tmp_path))
+    assert alive == {"h0": 5, "h1": 7}
+
+
+def test_straggler_detection():
+    mon = StragglerMonitor(threshold=1.5)
+    for _ in range(10):
+        for h, t in (("a", 1.0), ("b", 1.05), ("c", 2.5)):
+            mon.observe(h, t)
+    assert mon.stragglers() == ["c"]
+
+
+def test_restart_policy_budget():
+    p = RestartPolicy(max_restarts=3, backoff_base_s=1.0)
+    delays = [p.next_delay() for _ in range(4)]
+    assert delays[:3] == [1.0, 2.0, 4.0]
+    assert delays[3] is None
+
+
+def test_run_with_restarts_recovers(tmp_path):
+    """Inject failures; training must resume from the checkpoint and finish
+    with the same result as a failure-free run."""
+    calls = {"n": 0}
+
+    def flaky_step(step, state):
+        calls["n"] += 1
+        if calls["n"] in (7, 15):  # two injected crashes
+            raise RuntimeError("node failure")
+        return {"x": state["x"] + 1}
+
+    state0 = {"x": jnp.zeros(())}
+    final, step = run_with_restarts(
+        flaky_step, state0, n_steps=20, ckpt_dir=str(tmp_path),
+        save_every=5, sleep_fn=lambda s: None)
+    assert step == 20
+    assert float(final["x"]) == 20.0  # exactly-once semantics via ckpt
+
+
+def test_run_with_restarts_exhausts_budget(tmp_path):
+    def always_fail(step, state):
+        raise RuntimeError("dead")
+
+    with pytest.raises(RuntimeError):
+        run_with_restarts(always_fail, {"x": jnp.zeros(())}, n_steps=5,
+                          ckpt_dir=str(tmp_path),
+                          policy=RestartPolicy(max_restarts=2),
+                          sleep_fn=lambda s: None)

@@ -1,0 +1,66 @@
+"""Blockwise (flash) attention kernel vs materialized-softmax oracle."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.kernels.flash import attention_ref, flash_attention
+
+
+def _case(b, s, h, d, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    mk = lambda: jnp.asarray(rng.standard_normal((b, s, h, d)), dtype)
+    return mk(), mk(), mk()
+
+
+def _ref(q, k, v, **kw):
+    b, s, h, d = q.shape
+    fold = lambda x: jnp.moveaxis(x, 2, 1).reshape(b * h, s, d)
+    out = attention_ref(fold(q), fold(k), fold(v), **kw)
+    return jnp.moveaxis(out.reshape(b, h, s, d), 1, 2)
+
+
+@pytest.mark.parametrize("b,s,h,d", [
+    (2, 128, 2, 64),
+    (1, 256, 4, 64),
+    (2, 200, 2, 64),    # non-aligned: padding path
+    (1, 64, 2, 128),
+])
+def test_causal_matches_oracle(b, s, h, d):
+    q, k, v = _case(b, s, h, d, seed=s + d)
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    ref = _ref(q, k, v, causal=True)
+    assert float(jnp.abs(out - ref).max()) < 5e-5
+
+
+def test_non_causal():
+    q, k, v = _case(1, 256, 2, 64, seed=7)
+    out = flash_attention(q, k, v, causal=False, interpret=True)
+    ref = _ref(q, k, v, causal=False)
+    assert float(jnp.abs(out - ref).max()) < 5e-5
+
+
+@pytest.mark.parametrize("window", [32, 64])
+def test_local_window(window):
+    """Sliding-window masking (recurrentgemma local attention)."""
+    q, k, v = _case(1, 256, 2, 64, seed=9)
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          interpret=True)
+    ref = _ref(q, k, v, causal=True, window=window)
+    assert float(jnp.abs(out - ref).max()) < 5e-5
+
+
+def test_block_shape_sweep():
+    q, k, v = _case(1, 512, 2, 64, seed=11)
+    ref = _ref(q, k, v, causal=True)
+    for bq, bk in ((128, 128), (256, 128), (128, 256)):
+        out = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk,
+                              interpret=True)
+        assert float(jnp.abs(out - ref).max()) < 5e-5, (bq, bk)
+
+
+def test_bf16_inputs():
+    q, k, v = _case(1, 128, 2, 64, seed=13, dtype=jnp.bfloat16)
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    ref = _ref(q.astype(jnp.float32), k.astype(jnp.float32),
+               v.astype(jnp.float32), causal=True)
+    assert float(jnp.abs(out.astype(jnp.float32) - ref).max()) < 3e-2

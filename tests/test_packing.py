@@ -1,0 +1,40 @@
+"""Bit-packing round trips (serving storage path)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pack_codes, pack_int4, unpack_codes, unpack_int4
+
+
+def test_int4_roundtrip():
+    rng = np.random.default_rng(0)
+    z = rng.integers(-8, 8, size=(16, 32))
+    np.testing.assert_array_equal(unpack_int4(pack_int4(z)), z)
+
+
+def test_pack_codes_with_escapes():
+    rng = np.random.default_rng(1)
+    z = rng.integers(-8, 8, size=(8, 10)).astype(np.int64)
+    z[3, 4] = 1000
+    z[7, 9] = -77
+    p = pack_codes(z, nbits=4)
+    assert p.escape_idx.size == 2
+    np.testing.assert_array_equal(unpack_codes(p), z)
+
+
+def test_pack_codes_int8():
+    rng = np.random.default_rng(2)
+    z = rng.integers(-128, 128, size=(9, 7)).astype(np.int64)
+    p = pack_codes(z, nbits=8)
+    np.testing.assert_array_equal(unpack_codes(p), z)
+    assert p.storage_bits_per_entry == 8.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), rows=st.integers(1, 32),
+       cols=st.integers(1, 33), scale=st.floats(0.5, 50.0))
+def test_property_pack_roundtrip(seed, rows, cols, scale):
+    rng = np.random.default_rng(seed)
+    z = (rng.standard_normal((rows, cols)) * scale).round().astype(np.int64)
+    for nbits in (4, 8):
+        p = pack_codes(z, nbits=nbits)
+        np.testing.assert_array_equal(unpack_codes(p), z)

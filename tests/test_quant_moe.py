@@ -1,0 +1,56 @@
+"""Model-level PTQ for the MoE family: per-expert routed-token calibration
+(DESIGN.md §5 applicability table)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.data import DataConfig, global_batch_for_step
+from repro.models import init_params, split_tree
+from repro.quant.pipeline import PTQConfig, model_ppl, quantize_model
+from repro.train import AdamWConfig, TrainState, adamw_init, make_train_step
+
+CFG = ArchConfig(name="tiny-moe", family="moe", n_layers=2, d_model=48,
+                 n_heads=3, n_kv=3, d_ff=64, vocab=96, head_dim=16,
+                 n_experts=4, top_k=2)
+
+
+@pytest.fixture(scope="module")
+def trained_moe():
+    params, _ = split_tree(init_params(CFG, jax.random.PRNGKey(0)))
+    dcfg = DataConfig(vocab=CFG.vocab, seq_len=40, global_batch=8)
+    opt = AdamWConfig(lr=2e-3, total_steps=100, warmup_steps=10)
+    state = TrainState(params=params, opt=adamw_init(params), err=None)
+    step = jax.jit(make_train_step(CFG, opt))
+    for s in range(100):
+        state, _ = step(state, jax.tree.map(
+            jnp.asarray, global_batch_for_step(dcfg, s)))
+    calib = [global_batch_for_step(dcfg, 900)["tokens"]]
+    evalb = [np.concatenate(
+        [global_batch_for_step(dcfg, 1800)["tokens"],
+         global_batch_for_step(dcfg, 1800)["targets"][:, -1:]], axis=1)]
+    return state.params, calib, evalb
+
+
+def test_moe_ptq_rate_and_coverage(trained_moe):
+    params, calib, evalb = trained_moe
+    qp, qlin, budget, rows = quantize_model(
+        CFG, params, calib, PTQConfig(target_bits=2.5, method="watersic"))
+    assert abs(budget.realized_rate - 2.5) < 0.05
+    # every expert matrix quantized: 2 layers × 3 mats × 4 experts
+    expert_rows = [r for r in rows if "moe/" in str(r["matrix"])]
+    assert len(expert_rows) == 2 * 3 * CFG.n_experts
+    # attention matrices too
+    assert any("attn" in str(r["matrix"]) for r in rows)
+    assert np.isfinite(model_ppl(CFG, qp, evalb))
+
+
+def test_moe_method_ordering(trained_moe):
+    params, calib, evalb = trained_moe
+    ppl = {}
+    for method in ("watersic", "rtn"):
+        qp, _, _, _ = quantize_model(
+            CFG, params, calib, PTQConfig(target_bits=2.5, method=method))
+        ppl[method] = model_ppl(CFG, qp, evalb)
+    assert ppl["watersic"] <= ppl["rtn"]

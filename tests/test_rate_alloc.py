@@ -1,0 +1,29 @@
+"""Global rate budget controller (paper App. D)."""
+import pytest
+
+from repro.core import RateBudget
+
+
+def test_even_allocation_and_redistribution():
+    rb = RateBudget(target_bits_per_param=3.0,
+                    layer_params={"a": 100, "b": 100, "c": 200})
+    assert rb.next_target("a") == pytest.approx(3.0)
+    rb.record("a", 2.0)  # under-spent (e.g. dead features)
+    # leftover 100 bits redistribute over remaining 300 params
+    assert rb.next_target("b") == pytest.approx((1200 - 200) / 300)
+    rb.record("b", 10 / 3)
+    rb.record("c", rb.next_target("c"))
+    assert rb.realized_rate == pytest.approx(3.0, abs=1e-9)
+
+
+def test_already_quantized_raises():
+    rb = RateBudget(3.0, {"a": 10})
+    rb.record("a", 3.0)
+    with pytest.raises(KeyError):
+        rb.next_target("a")
+
+
+def test_floor_rate():
+    rb = RateBudget(1.0, {"a": 100, "b": 100})
+    rb.record("a", 1.9)  # overspend
+    assert rb.next_target("b") >= 0.05

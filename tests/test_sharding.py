@@ -1,0 +1,54 @@
+"""Sharding rules: param spec trees are legal for every architecture."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, list_archs
+from repro.dist.sharding import (default_rules, spec_for_axes)
+from repro.models import init_params, split_tree
+
+
+def _collect_axes(cfg):
+    px = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    vals, axes = split_tree(px)
+    return vals, axes
+
+
+@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("multi_pod", [False, True])
+def test_param_specs_no_duplicate_axes(arch, multi_pod):
+    """Every param leaf's PartitionSpec must not repeat a mesh axis, and
+    structure must mirror the value tree (init/spec can't drift)."""
+    cfg = get_config(arch).reduced()
+    vals, axes = _collect_axes(cfg)
+    rules = default_rules(multi_pod)
+    flat_axes = jax.tree.leaves(axes, is_leaf=lambda x: isinstance(x, tuple))
+    flat_vals = jax.tree.leaves(vals)
+    assert len(flat_axes) == len(flat_vals)
+    for ax, v in zip(flat_axes, flat_vals):
+        assert len(ax) == v.ndim, (arch, ax, v.shape)
+        spec = spec_for_axes(ax, rules)
+        used = []
+        for entry in spec:
+            if entry is None:
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            used.extend(names)
+        assert len(used) == len(set(used)), (arch, ax, spec)
+
+
+def test_full_config_dims_divisible_by_model_axis():
+    """The dims we shard over 'model' must divide 16 (or get padded by
+    GSPMD — only allowed for activations): verify for weight dims."""
+    for arch in list_archs():
+        cfg = get_config(arch)
+        assert cfg.padded_vocab % 16 == 0, arch
+        assert cfg.d_model % 16 == 0, arch
+
+
+def test_logical_shard_noop_without_mesh():
+    import jax.numpy as jnp
+    from repro.dist.sharding import logical_shard
+    x = jnp.ones((4, 4))
+    y = logical_shard(x, "batch", "d_model")
+    assert y is x

@@ -1,0 +1,144 @@
+"""Theorem 3.3 / §3 validation — the paper's central quantitative claims.
+
+These tests ARE the faithfulness anchor of the reproduction (see DESIGN.md
+§2): the theory is exactly checkable on synthetic Gaussian weights.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (GAP_CUBE_BITS, chol_lower, column_entropies,
+                        gptq_gap_bits, gptq_via_zsic, high_rate_bound,
+                        plain_watersic, predicted_distortion_gptq,
+                        predicted_distortion_watersic, random_covariance,
+                        waterfilling_distortion, waterfilling_rate,
+                        watersic_gap_bits)
+
+
+def _measured_gap(out, sigma, sigma_w2=1.0):
+    rate = float(column_entropies(out["codes"]).mean())  # Alg. 2: EC/column
+    return rate - high_rate_bound(out["distortion"], sigma_w2, sigma)
+
+
+def test_gap_cube_constant():
+    assert abs(GAP_CUBE_BITS - 0.2546) < 1e-3
+    assert watersic_gap_bits() == GAP_CUBE_BITS
+
+
+def test_theorem_3_3_watersic_gap():
+    """Measured WaterSIC gap ≈ ½log₂(2πe/12) independent of Σ conditioning."""
+    rng = np.random.default_rng(0)
+    for cond, seed in [(10.0, 1), (100.0, 2), (1000.0, 3)]:
+        n, a = 48, 16384
+        sigma, _ = random_covariance(n, condition=cond, seed=seed)
+        w = rng.standard_normal((a, n))
+        out = plain_watersic(w, sigma, alpha=0.05)
+        gap = _measured_gap(out, sigma)
+        # finite-sample entropy bias is downward; allow ±0.03 bits
+        assert abs(gap - GAP_CUBE_BITS) < 0.03, (cond, gap)
+
+
+def test_theorem_3_3_gptq_gap():
+    """Measured GPTQ gap ≈ 0.255 + ½log₂(AM/GM of ℓ_ii²)."""
+    rng = np.random.default_rng(1)
+    n, a = 48, 16384
+    sigma, _ = random_covariance(n, condition=100.0, seed=4)
+    w = rng.standard_normal((a, n))
+    out = gptq_via_zsic(w, sigma, alpha=0.05)
+    gap = _measured_gap(out, sigma)
+    pred = gptq_gap_bits(np.diag(chol_lower(sigma)))
+    assert abs(gap - pred) < 0.03, (gap, pred)
+
+
+def test_gptq_gap_arbitrarily_large():
+    """§3: GPTQ's gap to the IT limit is unbounded (two-level spectra)."""
+    gaps = []
+    for cond in (10.0, 1e3, 1e5):
+        sigma, _ = random_covariance(32, condition=cond, decay="two-level",
+                                     seed=5)
+        gaps.append(gptq_gap_bits(np.diag(chol_lower(sigma))))
+    assert gaps[0] < gaps[1] < gaps[2]
+    assert gaps[2] - GAP_CUBE_BITS > 2.0  # ≫ WaterSIC's 0.255
+
+
+def test_amgm_watersic_beats_gptq():
+    """D_WaterSIC ≤ D_GPTQ at matched rate (AMGM, §3) — empirically."""
+    rng = np.random.default_rng(2)
+    n, a = 48, 8192
+    sigma, _ = random_covariance(n, condition=300.0, seed=6)
+    w = rng.standard_normal((a, n))
+    ws = plain_watersic(w, sigma, alpha=0.05)
+    gq = gptq_via_zsic(w, sigma, alpha=0.05)
+    # Equal lattice density (|A|^{1/n} = α both) → rates match, D_ws smaller
+    r_ws = column_entropies(ws["codes"]).mean()
+    r_gq = column_entropies(gq["codes"]).mean()
+    assert abs(r_ws - r_gq) < 0.05
+    assert ws["distortion"] < gq["distortion"]
+
+
+def test_rotation_invariance():
+    """WaterSIC distortion depends on Σ only through |Σ| → invariant under
+    rotations; GPTQ's varies (paper §3).  Reference point is a *diagonal*
+    two-level Σ (ℓ_ii = √λ_i, large AMGM term); a Haar rotation flattens the
+    Cholesky diagonal and changes GPTQ materially (the QuIP effect)."""
+    rng = np.random.default_rng(3)
+    n, a = 32, 8192
+    lam = np.where(np.arange(n) < n // 2, 1.0, 1.0 / 200.0)
+    sigma = np.diag(lam)
+    q, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    sigma_rot = q @ sigma @ q.T
+    w = rng.standard_normal((a, n))
+    d_ws = [plain_watersic(w, s, 0.05)["distortion"]
+            for s in (sigma, sigma_rot)]
+    d_gq = [gptq_via_zsic(w, s, 0.05)["distortion"]
+            for s in (sigma, sigma_rot)]
+    assert abs(d_ws[0] - d_ws[1]) / d_ws[0] < 0.05
+    # GPTQ changes materially under this rotation (two-level spectrum)
+    assert abs(d_gq[0] - d_gq[1]) / d_gq[0] > 0.5
+
+
+def test_distortion_formula_eq5():
+    """Eq. (5): D_SIC ≈ (1/12n) Σ (α_i ℓ_ii)² at high rate."""
+    rng = np.random.default_rng(4)
+    n, a = 40, 16384
+    sigma, _ = random_covariance(n, condition=50.0, seed=8)
+    l = chol_lower(sigma)
+    w = rng.standard_normal((a, n))
+    out = plain_watersic(w, sigma, alpha=0.03)
+    ldiag = np.diag(l)
+    log_gm = np.mean(np.log(np.abs(ldiag)))
+    alphas = 0.03 * math.exp(log_gm) / np.abs(ldiag)
+    pred = np.mean((alphas * ldiag) ** 2) / 12.0
+    assert abs(out["distortion"] - pred) / pred < 0.02
+
+
+def test_predicted_distortion_formulas():
+    """§3 display equations for D*_GPTQ and D*_WaterSIC at matched rate."""
+    rng = np.random.default_rng(5)
+    n, a = 40, 16384
+    sigma, _ = random_covariance(n, condition=100.0, seed=9)
+    ldiag = np.diag(chol_lower(sigma))
+    w = rng.standard_normal((a, n))
+    ws = plain_watersic(w, sigma, alpha=0.04)
+    r_ws = column_entropies(ws["codes"]).mean()
+    pred = predicted_distortion_watersic(r_ws, 1.0, ldiag)
+    assert abs(ws["distortion"] - pred) / pred < 0.1
+    gq = gptq_via_zsic(w, sigma, alpha=0.04)
+    r_gq = column_entropies(gq["codes"]).mean()
+    pred_g = predicted_distortion_gptq(r_gq, 1.0, ldiag)
+    assert abs(gq["distortion"] - pred_g) / pred_g < 0.1
+
+
+def test_waterfilling_function():
+    """R_WF: matches the closed high-rate form for small D; 0 at D ≥ σ²mean λ."""
+    sigma, lam = random_covariance(16, condition=10.0, seed=10)
+    d_small = 1e-4 * lam.min()
+    r1 = waterfilling_rate(d_small, 1.0, lam)
+    r2 = high_rate_bound(d_small, 1.0, sigma)
+    assert abs(r1 - r2) < 1e-5
+    assert waterfilling_rate(lam.mean() * 2, 1.0, lam) == 0.0
+    # distortion at water level reproduces the parametric curve
+    tau = 0.5 * lam.min()
+    d = waterfilling_distortion(tau, 1.0, lam)
+    assert 0 < d <= lam.mean()

@@ -1,0 +1,132 @@
+"""Full WaterSIC (Alg. 3) behaviour tests: rate targeting, dead features,
+LMMSE/rescaler gains, drift/residual correction plumbing."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import (CalibStats, layer_distortion, quantize_at_rate,
+                        random_covariance, watersic_quantize)
+
+
+def _stats(n, seed=0, condition=50.0, dead=()):
+    sigma, _ = random_covariance(n, condition=condition, seed=seed)
+    sigma = np.array(sigma)
+    for i in dead:
+        sigma[i, :] = 0.0
+        sigma[:, i] = 0.0
+        sigma[i, i] = 1e-10
+    return CalibStats(sigma_x=jnp.asarray(sigma, jnp.float32)), sigma
+
+
+def test_rate_targeting_secant():
+    """§4: secant hits the target entropy within tolerance in few evals."""
+    rng = np.random.default_rng(0)
+    n, a = 64, 256
+    stats, sigma = _stats(n, seed=1)
+    w = rng.standard_normal((a, n)).astype(np.float32)
+    for target in (2.0, 3.0, 4.0):
+        q = quantize_at_rate(w, stats, target, seed=2)
+        assert abs(q.entropy_bits - target) < 0.05, (target, q.entropy_bits)
+
+
+def test_entropy_monotone_in_c():
+    """Entropy decreases in c, ~1 bit per doubling (slope ≈ −1)."""
+    rng = np.random.default_rng(1)
+    n, a = 48, 128
+    stats, _ = _stats(n, seed=2)
+    w = rng.standard_normal((a, n)).astype(np.float32)
+    cs = [0.02, 0.04, 0.08, 0.16]
+    ents = [watersic_quantize(w, stats, c, rescalers=False).entropy_bits
+            for c in cs]
+    assert all(e1 > e2 for e1, e2 in zip(ents, ents[1:]))
+    slopes = [(ents[i] - ents[i + 1]) for i in range(len(cs) - 1)]
+    for s in slopes:
+        assert 0.7 < s < 1.3  # ≈ 1 bit per doubling of c
+
+
+def test_dead_feature_erasure():
+    rng = np.random.default_rng(2)
+    n, a = 40, 64
+    dead = (3, 17, 30)
+    stats, sigma = _stats(n, seed=3, dead=dead)
+    w = rng.standard_normal((a, n)).astype(np.float32)
+    q = watersic_quantize(w, stats, 0.05)
+    assert set(np.nonzero(q.dead_mask)[0]) == set(dead)
+    wh = np.asarray(q.dequant())
+    assert np.abs(wh[:, list(dead)]).max() == 0.0
+    assert np.isfinite(wh).all()
+
+
+def test_lmmse_and_rescalers_reduce_distortion_low_rate():
+    rng = np.random.default_rng(3)
+    n, a = 48, 256
+    stats, sigma = _stats(n, seed=4)
+    w = rng.standard_normal((a, n)).astype(np.float32)
+    q_plain = quantize_at_rate(w, stats, 1.5, lmmse=False, rescalers=False,
+                               seed=5)
+    q_full = watersic_quantize(w, stats, q_plain.c)  # same grid, full tricks
+    d_plain = layer_distortion(w, q_plain, sigma)
+    d_full = layer_distortion(w, q_full, sigma)
+    assert d_full < d_plain  # LMMSE+rescalers help at low rate (Fig. 4)
+
+
+def test_drift_correction_plumbing():
+    """With Σ_X̂ ≠ Σ_X the objective targets ‖WX − ŴX̂‖; check it reduces the
+    drift-aware distortion vs ignoring the drift (eq. (16))."""
+    rng = np.random.default_rng(4)
+    n, a = 32, 128
+    sigma, _ = random_covariance(n, condition=20.0, seed=6)
+    # quantized-input covariance: drifted by a random PSD perturbation
+    pert, _ = random_covariance(n, condition=5.0, seed=7)
+    sigma_hat = sigma + 0.3 * pert
+    cross = sigma + 0.1 * pert  # E[X X̂ᵀ]
+    w = rng.standard_normal((a, n)).astype(np.float32)
+    s_noco = CalibStats(sigma_x=jnp.asarray(sigma_hat, jnp.float32))
+    s_drift = CalibStats(sigma_x=jnp.asarray(sigma, jnp.float32),
+                         sigma_xhat=jnp.asarray(sigma_hat, jnp.float32),
+                         sigma_x_xhat=jnp.asarray(cross, jnp.float32))
+    q0 = watersic_quantize(w, s_noco, 0.1, rescalers=False)
+    q1 = watersic_quantize(w, s_drift, 0.1, rescalers=False)
+
+    def drift_obj(q):
+        wh = np.asarray(q.dequant(), np.float64)
+        # E‖WX − ŴX̂‖² = tr(WΣ_XWᵀ) − 2tr(WΣ_{XX̂}Ŵᵀ) + tr(ŴΣ_X̂Ŵᵀ)
+        return (np.einsum("ij,jk,ik->", w.astype(np.float64), sigma, w)
+                - 2 * np.einsum("ij,jk,ik->", w.astype(np.float64), cross, wh)
+                + np.einsum("ij,jk,ik->", wh, sigma_hat, wh))
+
+    assert drift_obj(q1) < drift_obj(q0)
+
+
+def test_residual_correction_plumbing():
+    """Σ_{Δ,X̂} shifts the target ŷ (eq. (18)); reconstruction moves toward
+    compensating the residual-stream drift."""
+    rng = np.random.default_rng(5)
+    n, a = 24, 48
+    sigma, _ = random_covariance(n, condition=10.0, seed=8)
+    w = rng.standard_normal((a, n)).astype(np.float32)
+    sdx = 0.05 * rng.standard_normal((a, n)).astype(np.float32) @ sigma.astype(np.float32)
+    s0 = CalibStats(sigma_x=jnp.asarray(sigma, jnp.float32))
+    s1 = CalibStats(sigma_x=jnp.asarray(sigma, jnp.float32),
+                    sigma_delta_xhat=jnp.asarray(sdx, jnp.float32))
+    q0 = watersic_quantize(w, s0, 0.05, rescalers=False, lmmse=False)
+    q1 = watersic_quantize(w, s1, 0.05, rescalers=False, lmmse=False)
+
+    # objective: ‖(W + Δeff) X − Ŵ X‖² where Δeff = Σ_{Δ,X̂} Σ⁻¹
+    delta_eff = np.asarray(sdx, np.float64) @ np.linalg.inv(sigma)
+    target_w = w + delta_eff
+
+    def obj(q):
+        err = target_w - np.asarray(q.dequant(), np.float64)
+        return np.einsum("ij,jk,ik->", err, sigma, err)
+
+    assert obj(q1) < obj(q0)
+
+
+def test_rate_eff_includes_overheads():
+    rng = np.random.default_rng(6)
+    n, a = 32, 64
+    stats, _ = _stats(n, seed=9)
+    w = rng.standard_normal((a, n)).astype(np.float32)
+    q = watersic_quantize(w, stats, 0.1)
+    assert abs(q.rate_eff - (q.entropy_bits + 16 / a + 16 / n)) < 1e-9
