@@ -1,0 +1,89 @@
+"""Benchmark: dist-subsystem overheads (checkpoint I/O, logical_shard).
+
+Times atomic checkpoint save/restore throughput on a realistic small
+state pytree and the per-call cost of ``logical_shard`` both as a strict
+no-op (no mesh — must be nanoseconds: it's on every layer's forward) and
+under a host mesh (with_sharding_constraint dispatch).  Emits the same
+``(name, us_per_call, derived)`` rows as the other benchmarks/run.py
+modules.
+"""
+import shutil
+import tempfile
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.dist.checkpoint import restore_checkpoint, save_checkpoint
+from repro.dist.sharding import logical_shard, use_mesh
+from repro.launch.mesh import make_host_mesh
+
+
+def _state(n_layers=4, d=512, ff=2048):
+    k = jax.random.PRNGKey(0)
+    layers = {
+        "w_in": jax.random.normal(k, (n_layers, d, ff), jnp.float32),
+        "w_out": jax.random.normal(k, (n_layers, ff, d), jnp.float32),
+        "scale": jnp.ones((n_layers, d), jnp.float32),
+    }
+    return {"params": layers, "step": jnp.asarray(0, jnp.int32)}
+
+
+def _tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def run(rows_out):
+    state = _state()
+    mb = _tree_bytes(state) / 2 ** 20
+    ckpt_dir = tempfile.mkdtemp(prefix="dist_bench_")
+    try:
+        reps = 5
+        t0 = time.time()
+        for i in range(reps):
+            save_checkpoint(ckpt_dir, i + 1, state, keep=2)
+        us_save = (time.time() - t0) / reps * 1e6
+        rows_out.append(("dist/ckpt_save", us_save,
+                         f"mb={mb:.1f};mb_per_s={mb / (us_save / 1e6):.0f}"))
+
+        t0 = time.time()
+        for _ in range(reps):
+            restored, _ = restore_checkpoint(ckpt_dir, state)
+        jax.block_until_ready(restored)
+        us_restore = (time.time() - t0) / reps * 1e6
+        rows_out.append(("dist/ckpt_restore", us_restore,
+                         f"mb={mb:.1f};"
+                         f"mb_per_s={mb / (us_restore / 1e6):.0f}"))
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+    x = jnp.ones((8, 64, 512))
+    reps = 2000
+    t0 = time.time()
+    for _ in range(reps):
+        y = logical_shard(x, "batch", "seq", "d_model")
+    us_noop = (time.time() - t0) / reps * 1e6
+    rows_out.append(("dist/logical_shard_nomesh", us_noop,
+                     f"identity={y is x}"))
+
+    mesh = make_host_mesh()
+    reps = 200
+    with use_mesh(mesh):
+        logical_shard(x, "batch", "seq", "d_model")  # warmup
+        t0 = time.time()
+        for _ in range(reps):
+            y = logical_shard(x, "batch", "seq", "d_model")
+        y.block_until_ready()
+        us_mesh = (time.time() - t0) / reps * 1e6
+    rows_out.append(("dist/logical_shard_mesh", us_mesh,
+                     f"devices={mesh.size};"
+                     f"noop_us={us_noop:.2f}"))
+
+
+if __name__ == "__main__":
+    rows = []
+    run(rows)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")

@@ -10,6 +10,7 @@ Mapping to the paper:
     codecs        — Table 6 (entropy vs Huffman/zlib/LZMA bits)
     ablations     — Figs. 6-10 (LMMSE/rescalers/drift/residual)
     kernels_bench — kernel wrappers vs oracles
+    dist_bench    — runtime overheads: checkpoint I/O, logical_shard
 """
 import argparse
 import importlib
@@ -17,7 +18,7 @@ import sys
 import time
 
 MODULES = ["theory_gap", "column_rates", "codecs", "ablations",
-           "kernels_bench", "rd_curves"]
+           "kernels_bench", "dist_bench", "rd_curves"]
 
 
 def main(argv=None):

@@ -1,0 +1,203 @@
+"""Atomic, elastic, sharded step-directory checkpoints (DESIGN.md §5).
+
+Layout (one directory per step, rename-committed):
+
+    <ckpt_dir>/step_00000042/
+        manifest.json            # step, per-leaf key/file/shape/dtype
+        leaf_00000.npy ...       # one host-gathered array per pytree leaf
+
+Atomicity: everything is written into ``step_XXXXXXXX.tmp.<nonce>`` and the
+directory is ``os.replace``-renamed into place only after the manifest (the
+last file) is flushed — a crash mid-save leaves a ``.tmp.`` directory that
+``list_steps``/``latest_step`` never report and a later save of the same
+step garbage-collects.
+
+Elasticity: arrays are saved as full host values (addressable shards are
+gathered), so a checkpoint carries no mesh assumptions.  At restore time
+each leaf is placed back onto *whatever layout the caller is running now*:
+an explicit ``shardings=`` pytree of ``NamedSharding``s wins (the
+restart-on-resized-cluster path), otherwise the template leaf's own
+sharding is reused, otherwise plain host→device transfer.  Growing from 1
+device to a 2×4 mesh — or shrinking back — is therefore just
+``restore_checkpoint(dir, state, shardings=new_layout)``.
+
+Keys are ``jax.tree_util.keystr`` paths over the *template* pytree, so a
+template leaf with no saved counterpart raises ``KeyError`` (schema drift
+fails loudly instead of silently re-initializing).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+import uuid
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "list_steps", "cleanup_old"]
+
+_PREFIX = "step_"
+_MANIFEST = "manifest.json"
+
+
+def _step_dirname(step: int) -> str:
+    return f"{_PREFIX}{step:08d}"
+
+
+def _step_path(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, _step_dirname(step))
+
+
+def list_steps(ckpt_dir: str) -> List[int]:
+    """Sorted steps with a *committed* checkpoint (manifest present;
+    ``.tmp.`` staging directories from crashed saves are invisible)."""
+    if not os.path.isdir(ckpt_dir):
+        return []
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if not name.startswith(_PREFIX):
+            continue
+        suffix = name[len(_PREFIX):]
+        if not suffix.isdigit():
+            continue  # staging dirs: step_XXXXXXXX.tmp.<nonce>
+        if os.path.isfile(os.path.join(ckpt_dir, name, _MANIFEST)):
+            steps.append(int(suffix))
+    return sorted(steps)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = list_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def cleanup_old(ckpt_dir: str, keep: int) -> List[int]:
+    """Delete all but the ``keep`` newest committed checkpoints (and any
+    stale ``.tmp.`` staging directories).  Returns the deleted steps."""
+    if keep < 1:
+        raise ValueError(f"keep must be >= 1, got {keep}")
+    removed = []
+    for step in list_steps(ckpt_dir)[:-keep]:
+        shutil.rmtree(_step_path(ckpt_dir, step), ignore_errors=True)
+        removed.append(step)
+    if os.path.isdir(ckpt_dir):
+        for name in os.listdir(ckpt_dir):
+            if name.startswith(_PREFIX) and ".tmp." in name:
+                shutil.rmtree(os.path.join(ckpt_dir, name),
+                              ignore_errors=True)
+    return removed
+
+
+def _flatten_with_keys(tree) -> Tuple[List[Tuple[str, Any]], Any]:
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in leaves], \
+        treedef
+
+
+def save_checkpoint(ckpt_dir: str, step: int, state,
+                    *, keep: Optional[int] = None,
+                    extra_meta: Optional[Dict[str, Any]] = None) -> str:
+    """Write ``state`` (any pytree of arrays) as step ``step``; returns the
+    committed directory.  ``keep`` applies :func:`cleanup_old` retention
+    after the commit, so a retention pass can never eat the newest save."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = _step_path(ckpt_dir, step)
+    tmp = f"{final}.tmp.{uuid.uuid4().hex[:8]}"
+    os.makedirs(tmp)
+    try:
+        keyed, _ = _flatten_with_keys(state)
+        manifest: Dict[str, Any] = {
+            "step": int(step), "format": 1, "time": time.time(),
+            "leaves": [],
+        }
+        if extra_meta:
+            manifest["meta"] = extra_meta
+        for i, (key, leaf) in enumerate(keyed):
+            arr = np.asarray(jax.device_get(leaf))
+            fname = f"leaf_{i:05d}.npy"
+            np.save(os.path.join(tmp, fname), arr)
+            manifest["leaves"].append({
+                "key": key, "file": fname,
+                "shape": list(arr.shape), "dtype": str(arr.dtype),
+            })
+        mpath = os.path.join(tmp, _MANIFEST)
+        with open(mpath, "w") as f:
+            json.dump(manifest, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
+        old = None
+        if os.path.isdir(final):
+            # re-save of an existing step: swap via rename (microseconds)
+            # rather than rmtree-then-rename (O(size) crash window); the
+            # residual window is a single pair of rename syscalls
+            old = f"{final}.old.{uuid.uuid4().hex[:8]}"
+            os.replace(final, old)
+        os.replace(tmp, final)
+        if old is not None:
+            shutil.rmtree(old, ignore_errors=True)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    if keep is not None:
+        cleanup_old(ckpt_dir, keep)
+    return final
+
+
+def _sharding_index(shardings) -> Dict[str, Any]:
+    if shardings is None:
+        return {}
+    keyed, _ = _flatten_with_keys(shardings)
+    return dict(keyed)
+
+
+def _place(arr: np.ndarray, template_leaf, sharding):
+    if sharding is not None:
+        return jax.device_put(arr, sharding)
+    tmpl_sharding = getattr(template_leaf, "sharding", None)
+    if tmpl_sharding is not None:
+        try:
+            return jax.device_put(arr, tmpl_sharding)
+        except (ValueError, TypeError):
+            pass  # template laid out for a mesh we no longer have
+    return jnp.asarray(arr)
+
+
+def restore_checkpoint(ckpt_dir: str, template, *,
+                       step: Optional[int] = None,
+                       shardings=None) -> Tuple[Any, Dict[str, Any]]:
+    """Restore onto the structure of ``template``; returns
+    ``(state, manifest)``.
+
+    ``step=None`` picks the latest committed step.  ``shardings`` is an
+    optional pytree (same structure as ``template``) of
+    ``jax.sharding.Sharding`` leaves — the elastic path: saved host arrays
+    are re-laid-out onto the *current* mesh regardless of how (or on how
+    many devices) they were originally computed.  Template leaves missing
+    from the checkpoint raise ``KeyError``.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(
+                f"no committed checkpoint under {ckpt_dir!r}")
+    d = _step_path(ckpt_dir, step)
+    with open(os.path.join(d, _MANIFEST)) as f:
+        manifest = json.load(f)
+    by_key = {leaf["key"]: leaf for leaf in manifest["leaves"]}
+
+    keyed_paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    shard_by_key = _sharding_index(shardings)
+    out = []
+    for path, leaf in keyed_paths:
+        key = jax.tree_util.keystr(path)
+        if key not in by_key:
+            raise KeyError(
+                f"checkpoint step {step} has no leaf {key!r} "
+                f"(template/schema drift)")
+        arr = np.load(os.path.join(d, by_key[key]["file"]))
+        out.append(_place(arr, leaf, shard_by_key.get(key)))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest

@@ -1,0 +1,180 @@
+"""Fault tolerance for long-running multi-host jobs (DESIGN.md §5).
+
+Three cooperating pieces, all file/loop-level (no RPC dependency — the
+shared checkpoint directory doubles as the coordination medium, which is
+what actually survives a pod preemption):
+
+* :class:`Heartbeat` — each host atomically rewrites one small JSON file
+  per step; any host (or an external watchdog) reads the directory to see
+  who is alive and how far along they are.
+* :class:`StragglerMonitor` — rolling per-host step-time means; a host is
+  flagged when it runs ``threshold``× slower than the median host, the
+  relative test that stays meaningful as the fleet's absolute speed drifts
+  (new compiler, different batch, thermal throttling of everyone at once).
+* :class:`RestartPolicy` / :func:`run_with_restarts` — capped exponential
+  backoff driving resume-from-latest-checkpoint.  Combined with the atomic
+  checkpoints in dist/checkpoint.py this gives exactly-once *effective*
+  semantics: a step either made it into a committed checkpoint or is
+  re-run identically after restore.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+import uuid
+from collections import deque
+from statistics import median
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from .checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+__all__ = ["Heartbeat", "StragglerMonitor", "RestartPolicy",
+           "run_with_restarts"]
+
+_HB_SUFFIX = ".hb"
+
+
+class Heartbeat:
+    """One atomically-rewritten liveness file per host."""
+
+    def __init__(self, hb_dir: str, host_id: str):
+        self.hb_dir = hb_dir
+        self.host_id = host_id
+        os.makedirs(hb_dir, exist_ok=True)
+        self._path = os.path.join(hb_dir, f"{host_id}{_HB_SUFFIX}")
+
+    def beat(self, step: int) -> None:
+        """Record that this host completed ``step`` (write → rename, so a
+        reader never sees a torn file)."""
+        tmp = f"{self._path}.tmp.{uuid.uuid4().hex[:8]}"
+        with open(tmp, "w") as f:
+            json.dump({"host": self.host_id, "step": int(step),
+                       "time": time.time()}, f)
+        os.replace(tmp, self._path)
+
+    @staticmethod
+    def alive_hosts(hb_dir: str,
+                    max_age_s: Optional[float] = None) -> Dict[str, int]:
+        """host_id → last step, for every heartbeat file (optionally only
+        those younger than ``max_age_s``)."""
+        out: Dict[str, int] = {}
+        if not os.path.isdir(hb_dir):
+            return out
+        now = time.time()
+        for name in os.listdir(hb_dir):
+            if not name.endswith(_HB_SUFFIX):
+                continue
+            try:
+                with open(os.path.join(hb_dir, name)) as f:
+                    rec = json.load(f)
+            except (OSError, ValueError):
+                continue  # torn/garbage file: treat as not beating
+            if not isinstance(rec, dict) or "step" not in rec:
+                continue  # parseable but malformed: also not beating
+            if max_age_s is not None and now - rec.get("time", 0) > max_age_s:
+                continue
+            out[rec.get("host", name[:-len(_HB_SUFFIX)])] = int(rec["step"])
+        return out
+
+
+class StragglerMonitor:
+    """Relative straggler detection over rolling per-host step times.
+
+    A host straggles when its rolling mean exceeds ``threshold`` × the
+    median of all hosts' rolling means.  At least ``min_observations``
+    samples are required before a host can be flagged (cold-start compiles
+    should not page anyone).
+    """
+
+    def __init__(self, threshold: float = 2.0, window: int = 50,
+                 min_observations: int = 3):
+        self.threshold = threshold
+        self.window = window
+        self.min_observations = min_observations
+        self._times: Dict[str, deque] = {}
+
+    def observe(self, host: str, step_time_s: float) -> None:
+        self._times.setdefault(host, deque(maxlen=self.window)) \
+            .append(float(step_time_s))
+
+    def means(self) -> Dict[str, float]:
+        return {h: sum(t) / len(t) for h, t in self._times.items() if t}
+
+    def stragglers(self) -> List[str]:
+        # warm hosts only, for the median too: one cold host's compile-time
+        # sample must neither get flagged nor inflate the baseline that
+        # everyone else is compared against
+        means = {h: m for h, m in self.means().items()
+                 if len(self._times[h]) >= self.min_observations}
+        if len(means) < 2:
+            return []  # "relative to whom?" needs at least one peer
+        med = median(means.values())
+        return sorted(h for h, m in means.items()
+                      if m > self.threshold * med)
+
+
+@dataclasses.dataclass
+class RestartPolicy:
+    """Capped exponential backoff with a hard restart budget."""
+
+    max_restarts: int = 3
+    backoff_base_s: float = 1.0
+    backoff_mult: float = 2.0
+    backoff_max_s: float = 300.0
+    _used: int = dataclasses.field(default=0, repr=False)
+
+    def next_delay(self) -> Optional[float]:
+        """Seconds to wait before the next restart, or None when the
+        budget is exhausted (caller should re-raise / page)."""
+        if self._used >= self.max_restarts:
+            return None
+        delay = min(self.backoff_base_s * self.backoff_mult ** self._used,
+                    self.backoff_max_s)
+        self._used += 1
+        return delay
+
+    @property
+    def restarts_used(self) -> int:
+        return self._used
+
+
+def run_with_restarts(step_fn: Callable[[int, Any], Any], state,
+                      *, n_steps: int, ckpt_dir: str, save_every: int = 10,
+                      policy: Optional[RestartPolicy] = None,
+                      sleep_fn: Callable[[float], None] = time.sleep,
+                      heartbeat: Optional[Heartbeat] = None
+                      ) -> Tuple[Any, int]:
+    """Drive ``state = step_fn(step, state)`` for steps ``1..n_steps`` with
+    checkpointed restarts; returns ``(final_state, n_steps)``.
+
+    On any exception the loop restores the latest committed checkpoint
+    (falling back to the initial state when none exists), waits out the
+    policy's backoff, and replays from the post-checkpoint step — the
+    injected-failure test in tests/test_fault.py pins the exactly-once
+    result.  When the restart budget runs dry the original error
+    propagates.
+    """
+    policy = policy or RestartPolicy()
+    initial = state
+    while True:
+        try:
+            last = latest_step(ckpt_dir)
+            if last is not None:
+                state, _ = restore_checkpoint(ckpt_dir, initial, step=last)
+                start = last
+            else:
+                state, start = initial, 0
+            for step in range(start + 1, n_steps + 1):
+                state = step_fn(step, state)
+                if heartbeat is not None:
+                    heartbeat.beat(step)
+                if step % save_every == 0 or step == n_steps:
+                    save_checkpoint(ckpt_dir, step, state)
+            return state, n_steps
+        except Exception:
+            delay = policy.next_delay()
+            if delay is None:
+                raise
+            sleep_fn(delay)

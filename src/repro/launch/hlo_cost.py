@@ -43,7 +43,6 @@ _WHILE2 = re.compile(r"while\(.*?\).*?(?:body=%?([\w.\-]+)).*?"
 _CALL_TARGET = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
 _CONSTANT_INT = re.compile(r"constant\((\d+)\)")
 _CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
-_OPERANDS = re.compile(r"\(([^)]*)\)")
 
 DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -53,6 +52,49 @@ DTYPE_BYTES = {
 
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute")
+
+
+def _args_region(line: str, op: str) -> str:
+    """The operand list of ``op`` in ``line`` — text between the opcode's
+    opening paren and its balanced closing paren.  Needed because operand
+    types may themselves contain parens/commas (tuple-typed operands)."""
+    i = line.find(op + "(")
+    if i < 0:
+        return ""
+    start = i + len(op) + 1
+    depth = 1
+    for k in range(start, len(line)):
+        c = line[k]
+        if c == "(":
+            depth += 1
+        elif c == ")":
+            depth -= 1
+            if depth == 0:
+                return line[start:k]
+    return line[start:]
+
+
+def _operand_names(argstr: str) -> List[str]:
+    """Instruction names referenced in an operand list.
+
+    Handles both HLO text dialects: verbose (``f32[64,128]{1,0} %name`` —
+    names are %-prefixed; inline types carry commas, so naive comma
+    splitting is wrong) and terse (bare ``name`` per comma slot).
+    """
+    names = re.findall(r"%([\w.\-]+)", argstr)
+    if names:
+        return names
+    out = []
+    for piece in argstr.split(","):
+        tok = piece.strip().split(" ")[-1]
+        if tok and "[" not in tok and "{" not in tok \
+                and not tok[0].isdigit():
+            out.append(tok)
+    return out
+
+
+def _instr_operands(line: str, op: str) -> List[str]:
+    return _operand_names(_args_region(line, op))
 
 
 def _first_shape(type_str: str) -> Optional[Tuple[str, List[int]]]:
@@ -149,9 +191,7 @@ def _fusion_param_costs(callee: "_Comp") -> Dict[int, float]:
                 param_of[name] = idx
                 full[idx] = _all_shape_bytes(type_str)
             continue
-        om = _OPERANDS.search(line[line.index("("):]) if "(" in line else None
-        ops_list = [o.strip().lstrip("%").split(" ")[0]
-                    for o in om.group(1).split(",")] if om else []
+        ops_list = _instr_operands(line, op)
         refs = [o for o in ops_list if o in param_of]
         if op in ("bitcast", "reshape", "copy", "transpose") and refs:
             param_of[name] = param_of[refs[0]]  # propagate alias
@@ -203,11 +243,7 @@ def _dus_root_update_bytes(comp: "_Comp") -> float:
         dus_shape = _first_shape(im.group(2))
         if dus_shape is None or dus_shape[1] != root_shape[1]:
             continue  # not the full-buffer in-place update
-        om = _OPERANDS.search(ls[ls.index("dynamic-update-slice("):])
-        if not om:
-            continue
-        ops = [o.strip().lstrip("%").split(" ")[0]
-               for o in om.group(1).split(",") if o.strip()]
+        ops = _instr_operands(ls, "dynamic-update-slice")
         if len(ops) > 1 and ops[1] in comp.shapes:
             return _all_shape_bytes(comp.shapes[ops[1]])
     return 0.0
@@ -239,7 +275,10 @@ def _analyze_comp(comp: _Comp, comps: Dict[str, _Comp]) -> None:
             continue
         seen_pairs.add(key)
         if cond_name in comps and body_name in comps:
-            trips = _trip_count(comps[cond_name])
+            # newer XLA annotates the loop directly; else fall back to the
+            # largest constant in the condition computation
+            tm = re.search(r'known_trip_count[^\d]*(\d+)', line)
+            trips = int(tm.group(1)) if tm else _trip_count(comps[cond_name])
             comp.edges.append((body_name, float(trips)))
             comp.edges.append((cond_name, float(trips)))
     # generic calls (fusions, custom calls, conditionals)
@@ -278,11 +317,7 @@ def _analyze_comp(comp: _Comp, comps: Dict[str, _Comp]) -> None:
         #   while/conditional: control only — bodies account themselves.
         if op in _NO_TRAFFIC or op in ("while", "conditional"):
             continue
-        ops_list = []
-        om = _OPERANDS.search(line[line.index("(") :]) if "(" in line else None
-        if om:
-            ops_list = [o.strip().lstrip("%").split(" ")[0]
-                        for o in om.group(1).split(",") if o.strip()]
+        ops_list = _instr_operands(line, op)
         if op in ("dynamic-slice", "slice", "gather"):
             b = _all_shape_bytes(type_str)
         elif op in ("dynamic-update-slice", "scatter"):
@@ -331,12 +366,10 @@ def _dot_flops(line: str, result_type: str, comp: _Comp) -> float:
         out_elems *= d
     # contracted size from lhs operand shape + contracting dims
     cm = _CONTRACT.search(line)
-    om = _OPERANDS.search(line[line.index("dot("):] if "dot(" in line
-                          else line)
+    ops = _instr_operands(line, "dot")
     csize = 1
-    if cm and om:
-        ops = [o.strip().lstrip("%") for o in om.group(1).split(",")]
-        lhs = ops[0].split(" ")[0] if ops else ""
+    if cm and ops:
+        lhs = ops[0]
         lhs_type = comp.shapes.get(lhs, "")
         ls = _first_shape(lhs_type)
         if ls:

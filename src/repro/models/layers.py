@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.dist.sharding import logical_shard
+from repro.dist.sharding import logical_shard, shard_map
 
 __all__ = [
     "Px", "split_tree", "KeyGen",
@@ -650,7 +650,7 @@ def _moe_a2a(p, x, mesh, *, n_experts, top_k, capacity_factor, activation,
     else:
         ws = (p["w_in"], p["w_out"])
         w_specs = (P("model", None, None),) * 2
-    fn = jax.shard_map(
+    fn = shard_map(
         local, mesh=mesh,
         in_specs=(P(dp, "model", None), P()) + w_specs,
         out_specs=P(dp, "model", None),

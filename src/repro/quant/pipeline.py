@@ -60,7 +60,11 @@ class PTQConfig:
     attention_weighting: bool = False
     adaptive_mix: bool = False
     golden_iters: int = 6
-    damp: float = 1e-4
+    # model-PTQ damping is deliberately much heavier than the core theory
+    # path's 1e-4 default: Σ here are SAMPLE covariances from a handful of
+    # calibration batches, and the drift/LMMSE cross terms overfit small
+    # samples (layer-to-layer error compounding) without a strong ridge
+    damp: float = 0.05
     hptq_damp: float = 0.1            # GPTQ default damping (paper App. D)
     seed: int = 0
 

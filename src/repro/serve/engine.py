@@ -88,12 +88,21 @@ class ServeEngine:
             logits, cache = self._decode(self.params, cache,
                                          jnp.asarray(prompts[:, t:t + 1]))
         last = np.argmax(np.asarray(logits), axis=-1).astype(np.int32)
-        for _ in range(budget):
+        # Budget-exact generation: consume `last` first, decode only while
+        # some request still has budget left.  Each slot stops at exactly
+        # its own max_new_tokens (mixed budgets share the batch; finished
+        # slots keep stepping their cache but emit nothing), and the number
+        # of decode calls is exactly max(budgets) - 1 — no trailing decode
+        # whose logits nobody consumes.
+        decode_steps = 0
+        while True:
             for i, r in enumerate(batch):
                 if len(r.out_tokens) < r.max_new_tokens:
                     r.out_tokens.append(int(last[i]))
             if all(len(r.out_tokens) >= r.max_new_tokens for r in batch):
                 break
+            assert decode_steps < budget, "decode loop exceeded round budget"
+            decode_steps += 1
             logits, cache = self._decode(self.params, cache,
                                          jnp.asarray(last[:, None]))
             last = np.argmax(np.asarray(logits), axis=-1).astype(np.int32)

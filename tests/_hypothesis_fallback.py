@@ -1,0 +1,65 @@
+"""Deterministic stand-in for the hypothesis API surface these tests use.
+
+The container image has no ``hypothesis`` package and nothing may be
+installed, so the property tests fall back to a fixed-seed sampler: each
+``@given`` test runs ``max_examples`` times over rng(0)-drawn kwargs.  This
+keeps the properties exercised (dozens of distinct shapes/scales per test)
+while staying fully reproducible.  When real hypothesis is available the
+test modules import it instead and this file is inert.
+
+Only the subset the suite needs is implemented: ``st.integers``,
+``st.floats`` (bounded, keyword-style), ``@given(**strategies)`` and
+``@settings(max_examples=, deadline=)``.
+"""
+from __future__ import annotations
+
+import types
+
+import numpy as np
+
+__all__ = ["given", "settings", "st"]
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def _floats(min_value, max_value):
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+st = types.SimpleNamespace(integers=_integers, floats=_floats)
+
+
+def settings(max_examples: int = 20, deadline=None, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        # No functools.wraps: pytest must see a zero-arg signature, not the
+        # property parameters (it would look for fixtures named `seed` etc).
+        def wrapper():
+            n = getattr(wrapper, "_max_examples", None) \
+                or getattr(fn, "_max_examples", None) or 20
+            rng = np.random.default_rng(0)
+            for i in range(n):
+                draws = {k: s.draw(rng) for k, s in strategies.items()}
+                try:
+                    fn(**draws)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example ({i + 1}/{n}): {draws!r}") from e
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco

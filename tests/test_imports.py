@@ -1,0 +1,39 @@
+"""Import smoke test: every module under src/repro imports.
+
+A missing module (like the seed's absent repro.dist) otherwise kills
+collection of the whole suite; this pins the failure to one targeted,
+readable test instead.  launch.dryrun is imported last within its package
+walk order regardless: it sets XLA_FLAGS at import, which is a no-op once
+jax is initialized — asserted harmless here by importing jax first.
+"""
+import importlib
+import pkgutil
+
+import jax  # noqa: F401  — lock device config before launch.dryrun import
+import pytest
+
+import repro
+
+
+def _all_modules():
+    out = []
+    for mod in pkgutil.walk_packages(repro.__path__, prefix="repro."):
+        out.append(mod.name)
+    return sorted(out)
+
+
+@pytest.mark.parametrize("name", _all_modules())
+def test_module_imports(name):
+    importlib.import_module(name)
+
+
+def test_dist_api_surface():
+    """The call-site contract of the dist subsystem (the seed's original
+    failure mode was this package missing outright)."""
+    from repro import dist
+    for sym in ("default_rules", "spec_for_axes", "batch_spec", "use_mesh",
+                "current_mesh", "logical_shard", "save_checkpoint",
+                "restore_checkpoint", "latest_step", "list_steps",
+                "cleanup_old", "Heartbeat", "StragglerMonitor",
+                "RestartPolicy", "run_with_restarts"):
+        assert hasattr(dist, sym), sym

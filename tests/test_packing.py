@@ -1,6 +1,9 @@
 """Bit-packing round trips (serving storage path)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without hypothesis (see fallback)
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import pack_codes, pack_int4, unpack_codes, unpack_int4
 

@@ -2,7 +2,10 @@
 skewed alphabets (the production coder for WaterSIC code streams)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without hypothesis (see fallback)
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import empirical_entropy, huffman_bits
 from repro.core.rans import RansCodec

@@ -53,6 +53,50 @@ def test_length_grouping():
     assert all(len(r.out_tokens) == 2 for r in done)
 
 
+def test_mixed_budgets_respected_exactly():
+    """Requests with different max_new_tokens in one round: every slot gets
+    exactly its own budget, outputs match per-request manual decode, and no
+    decode step runs after the last in-budget token is consumed."""
+    params = _params()
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, CFG.vocab, 5).astype(np.int32)
+               for _ in range(3)]
+    budgets = (1, 4, 2)
+
+    calls = {"n": 0}
+    base = jax.jit(lambda p, c, t: decode_step(CFG, p, c, t))
+
+    def counting_decode(p, c, t):
+        calls["n"] += 1
+        return base(p, c, t)
+
+    eng = ServeEngine(CFG, params, n_slots=4, max_len=32,
+                      decode_fn=counting_decode)
+    for i, (prompt, b) in enumerate(zip(prompts, budgets)):
+        eng.submit(Request(rid=i, prompt=prompt, max_new_tokens=b))
+    done = {r.rid: r for r in eng.run_until_done()}
+    assert sorted(done) == [0, 1, 2]
+    for rid, b in enumerate(budgets):
+        assert len(done[rid].out_tokens) == b, (rid, done[rid].out_tokens)
+    # prefill (5 steps) + max(budgets) - 1 generation decodes, not one more
+    assert calls["n"] == 5 + max(budgets) - 1
+
+    # each slot's tokens equal its own single-request greedy decode
+    for rid, (prompt, b) in enumerate(zip(prompts, budgets)):
+        cache = init_cache(CFG, 1, 32, jnp.float32)
+        logits = None
+        for t in prompt:
+            logits, cache = decode_step(CFG, params, cache,
+                                        jnp.asarray([[t]], jnp.int32))
+        outs = []
+        for _ in range(b):
+            nxt = int(jnp.argmax(logits[0]))
+            outs.append(nxt)
+            logits, cache = decode_step(CFG, params, cache,
+                                        jnp.asarray([[nxt]], jnp.int32))
+        assert done[rid].out_tokens == outs, rid
+
+
 def test_quantized_weights_serve():
     params = quantize_params_tree(_params())
     rng = np.random.default_rng(2)

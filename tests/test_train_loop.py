@@ -72,17 +72,18 @@ def test_compressed_dp_step_trains():
     mesh degenerates gracefully; collective logic is exercised)."""
     params, dcfg = _setup(2)
     mesh = jax.make_mesh((1, 1), ("data", "model"))
-    opt = AdamWConfig(lr=3e-3, total_steps=30, warmup_steps=2)
+    opt = AdamWConfig(lr=5e-3, total_steps=120, warmup_steps=10)
     from repro.train.grad_compress import init_error_buf
     state = TrainState(params=params, opt=adamw_init(params),
                        err=init_error_buf(params))
     step = make_compressed_step(CFG, opt, mesh)
     losses = []
-    for s in range(30):
+    for s in range(120):
         batch = jax.tree.map(jnp.asarray, global_batch_for_step(dcfg, s))
         state, m = step(state, batch)
         losses.append(float(m["loss"]))
-    assert losses[-1] < losses[0]
+    # window means: single-step losses are batch-to-batch noise at this size
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]) - 0.02
     # error feedback buffers are being used (non-zero)
     assert any(float(jnp.abs(e).max()) > 0 for e in
                jax.tree.leaves(state.err))
