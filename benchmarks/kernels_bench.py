@@ -2,19 +2,26 @@
 
 On this CPU container the Pallas kernels run in interpret mode (Python
 emulation — NOT representative of TPU performance; the dry-run roofline
-gives the TPU story).  This benchmark times the XLA serving path
-(dequant_matmul_xla: the path the pjit'd decode graphs use) against the
-dequantize-then-matmul reference, plus the blocked ZSIC quantizer.
+gives the TPU story).  This benchmark times the XLA serving paths
+(dequant_matmul_xla / dequant_matmul_packed_xla: what the pjit'd decode
+graphs use) against the dequantize-then-matmul reference, the blocked ZSIC
+quantizer, and the hoisted-vs-masked ZSIC row-selection delta.  For each
+weight format it also reports the *modeled* HBM bytes/weight — the term
+the TPU roofline is bound by at decode batch sizes (DESIGN.md §8).
+
+    python benchmarks/kernels_bench.py [--quick]
 """
+import argparse
 import time
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import chol_lower, random_covariance, zsic_numpy
-from repro.kernels.dequant import dequant_matmul_ref, dequant_matmul_xla
-from repro.kernels.zsic import zsic_quantize
+from repro.core import chol_lower, pack_codes_jnp, random_covariance, zsic_numpy
+from repro.kernels.dequant import (dequant_matmul_packed_xla,
+                                   dequant_matmul_ref, dequant_matmul_xla)
+from repro.kernels.zsic import zsic_block_pallas, zsic_quantize
 
 
 def _time(f, *args, reps=20):
@@ -27,19 +34,32 @@ def _time(f, *args, reps=20):
     return (time.time() - t0) / reps * 1e6
 
 
-def run(rows_out):
+def run(rows_out, quick=False):
     rng = np.random.default_rng(0)
-    m, k, n = 8, 1024, 1024  # decode-like: small batch, big weights
+    reps = 5 if quick else 20
+    m, k, n = (8, 512, 512) if quick else (8, 1024, 1024)
     x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
     z = jnp.asarray(rng.integers(-8, 8, (n, k)), jnp.int8)
     s = jnp.asarray(rng.random(k) * 0.1 + 0.01, jnp.float32)
     t = jnp.asarray(rng.random(n) + 0.5, jnp.float32)
-    us_xla = _time(dequant_matmul_xla, x, z, s, t)
-    us_ref = _time(dequant_matmul_ref, x, z, s, t)
+    us_xla = _time(dequant_matmul_xla, x, z, s, t, reps=reps)
+    us_ref = _time(dequant_matmul_ref, x, z, s, t, reps=reps)
     rows_out.append(("kernels/dequant_matmul_xla", us_xla,
-                     f"ref_us={us_ref:.0f};speedup={us_ref/us_xla:.2f}"))
+                     f"ref_us={us_ref:.0f};speedup={us_ref/us_xla:.2f};"
+                     f"hbm_bytes_per_w=1.0"))
 
-    nn, aa = 128, 256
+    # packed-int4 serving path: planar payload, in-graph unpack
+    payload, _, _, _ = pack_codes_jnp(jnp.asarray(z, jnp.int32))
+    us_packed = _time(dequant_matmul_packed_xla, x, payload, s, t, reps=reps)
+    out_p = dequant_matmul_packed_xla(x, payload, s, t)
+    out_i = dequant_matmul_xla(x, z, s, t)
+    err = float(jnp.abs(out_p - out_i).max()) / (float(jnp.abs(out_i).max())
+                                                 + 1e-6)
+    rows_out.append(("kernels/dequant_matmul_packed_xla", us_packed,
+                     f"int8_us={us_xla:.0f};vs_int8_err={err:.2e};"
+                     f"hbm_bytes_per_w=0.5"))
+
+    nn, aa = (64, 128) if quick else (128, 256)
     sigma, _ = random_covariance(nn, condition=20.0, seed=1)
     l = chol_lower(sigma)
     w = rng.standard_normal((aa, nn))
@@ -57,9 +77,32 @@ def run(rows_out):
     rows_out.append(("kernels/zsic_blocked_interpret", us_k,
                      f"numpy_ref_us={us_np:.0f};agree={agree:.4f}"))
 
+    # hoisted vs masked in-block row selection (the satellite delta):
+    # masked re-selects O(bn²) L rows / O(bm·bn) y columns every iteration
+    yj = jnp.asarray(y[:128 if quick else 256])
+    lj, aj = jnp.asarray(lf), jnp.asarray(alphas)
+    br = yj.shape[0]
+    z_h, _ = zsic_block_pallas(yj, lj, aj, block_rows=br, interpret=True)
+    z_m, _ = zsic_block_pallas(yj, lj, aj, block_rows=br, interpret=True,
+                               row_select="masked")
+    agree_hm = float((np.asarray(z_h) == np.asarray(z_m)).mean())
+    zreps = 2 if quick else 5
+    us_h = _time(lambda: zsic_block_pallas(yj, lj, aj, block_rows=br,
+                                           interpret=True), reps=zreps)
+    us_m = _time(lambda: zsic_block_pallas(yj, lj, aj, block_rows=br,
+                                           interpret=True,
+                                           row_select="masked"), reps=zreps)
+    rows_out.append(("kernels/zsic_block_hoisted_vs_masked", us_h,
+                     f"masked_us={us_m:.0f};delta={us_m/us_h:.2f}x;"
+                     f"agree={agree_hm:.4f}"))
+
 
 if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small shapes / few reps (CI smoke)")
+    args = ap.parse_args()
     rows = []
-    run(rows)
+    run(rows, quick=args.quick)
     for r in rows:
         print(",".join(str(x) for x in r))

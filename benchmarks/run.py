@@ -10,6 +10,7 @@ Mapping to the paper:
     codecs        — Table 6 (entropy vs Huffman/zlib/LZMA bits)
     ablations     — Figs. 6-10 (LMMSE/rescalers/drift/residual)
     kernels_bench — kernel wrappers vs oracles
+    serve_bench   — engine tokens/s + HBM bytes/weight ladder (§Perf)
     dist_bench    — runtime overheads: checkpoint I/O, logical_shard
 """
 import argparse
@@ -18,7 +19,7 @@ import sys
 import time
 
 MODULES = ["theory_gap", "column_rates", "codecs", "ablations",
-           "kernels_bench", "dist_bench", "rd_curves"]
+           "kernels_bench", "serve_bench", "dist_bench", "rd_curves"]
 
 
 def main(argv=None):

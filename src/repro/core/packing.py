@@ -6,16 +6,31 @@ kernels/dequant.  Codes outside the packed range are stored in a sparse
 escape list (entropy coding makes large codes rare, paper §1: "occasional
 large integers get assigned long bit-descriptions, but due to being
 infrequent do not affect the overall rate").
+
+Two nibble layouts exist (DESIGN.md §8):
+
+  * *paired*  (host ``pack_int4``): byte j holds columns (2j, 2j+1) —
+    the compact archival layout used by :class:`PackedCodes`.
+  * *planar*  (device ``pack_int4_planar_jnp``): byte j holds columns
+    (j, j + K/2) — the serving layout.  The fused kernel unpacks a planar
+    payload with one shift/mask per nibble and two contiguous MXU dots, no
+    lane interleave (kernels/dequant/dequant_matmul._packed_kernel).
+
+``pack_codes_jnp`` is the device-side producer: jnp pack + escape-to-COO
+export, so serving codes never round-trip through host numpy.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Tuple
+from typing import Optional, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["pack_int4", "unpack_int4", "PackedCodes", "pack_codes",
-           "unpack_codes"]
+           "unpack_codes", "escapes_to_coo", "pack_int4_planar_jnp",
+           "unpack_int4_planar_jnp", "pack_codes_jnp"]
 
 
 def pack_int4(z: np.ndarray) -> np.ndarray:
@@ -43,6 +58,89 @@ def unpack_int4(packed: np.ndarray) -> np.ndarray:
     return out
 
 
+# ---------------------------------------------------------------------------
+# Device-side (jnp) planar layout — the serving path
+# ---------------------------------------------------------------------------
+
+
+def pack_int4_planar_jnp(z) -> jnp.ndarray:
+    """Planar nibble pack: byte j = col j (low) | col j+K/2 (high) << 4.
+
+    ``z`` (..., K) with K even and values in [-8, 7]; returns uint8
+    (..., K/2).  Traceable (pure jnp) — safe under jit/scan.
+    """
+    kh = z.shape[-1] // 2
+    if z.shape[-1] % 2:
+        raise ValueError("last dim must be even for planar int4 packing")
+    zi = jnp.asarray(z).astype(jnp.int32)
+    lo = zi[..., :kh] & 0xF
+    hi = zi[..., kh:] & 0xF
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_int4_planar_jnp(packed) -> jnp.ndarray:
+    """Inverse of :func:`pack_int4_planar_jnp` (sign-extended int8)."""
+    p = jnp.asarray(packed).astype(jnp.int32)
+    lo = p & 0xF
+    hi = (p >> 4) & 0xF
+    lo = jnp.where(lo > 7, lo - 16, lo)
+    hi = jnp.where(hi > 7, hi - 16, hi)
+    return jnp.concatenate([lo, hi], axis=-1).astype(jnp.int8)
+
+
+def pack_codes_jnp(z, *, escape_capacity: Optional[int] = None
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                              jnp.ndarray]:
+    """Device-side int4 pack of ``z`` (a, n) + escape-to-COO export.
+
+    Returns ``(payload, esc_row, esc_col, esc_dval)``:
+
+      payload   uint8 (a, ceil(n/2))  planar-packed clipped codes (odd n is
+                zero-padded with one nibble column),
+      esc_row   int32 (nnz,)          output-row index of each escape,
+      esc_col   int32 (nnz,)          input-column index,
+      esc_dval  f32  (nnz,)           ``z - clip(z, -8, 7)`` — the *delta*
+                the sparse correction matmul adds back (so the packed body
+                needs no masking at the escape sites).
+
+    With ``escape_capacity`` the COO arrays have that static length (excess
+    slots carry dval = 0, a no-op in the correction), which makes the call
+    traceable and the per-layer leaves stackable; without it the arrays are
+    sized exactly (eager only).  A capacity SMALLER than the true escape
+    count would silently drop corrections, so it is rejected whenever the
+    input is concrete (under tracing the caller must guarantee it).  Codes
+    stay jnp arrays throughout — no host numpy round-trip.
+    """
+    z = jnp.asarray(z)
+    a, n = z.shape
+    clipped = jnp.clip(z, -8, 7)
+    body = clipped.astype(jnp.int8)
+    if n % 2:
+        body = jnp.concatenate([body, jnp.zeros((a, 1), jnp.int8)], axis=1)
+    payload = pack_int4_planar_jnp(body)
+    delta = (z - clipped).astype(jnp.float32)
+    if escape_capacity is None:
+        rows, cols = jnp.nonzero(delta != 0)
+        dval = delta[rows, cols]
+    else:
+        nnz = jnp.sum(delta != 0)
+        if not isinstance(nnz, jax.core.Tracer) and int(nnz) > escape_capacity:
+            raise ValueError(
+                f"escape_capacity={escape_capacity} < {int(nnz)} escapes — "
+                "the truncated corrections would serve corrupted weights")
+        rows, cols = jnp.nonzero(delta != 0, size=escape_capacity,
+                                 fill_value=0)
+        dval = jnp.where(jnp.arange(escape_capacity) < nnz,
+                         delta[rows, cols], 0.0)
+    return (payload, rows.astype(jnp.int32), cols.astype(jnp.int32),
+            dval.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Host archival container
+# ---------------------------------------------------------------------------
+
+
 @dataclass
 class PackedCodes:
     """Packed code matrix + escape list for out-of-range entries."""
@@ -50,14 +148,21 @@ class PackedCodes:
     payload: np.ndarray          # uint8 (int4) or int8 buffer
     nbits: int                   # 4 or 8
     shape: Tuple[int, int]
-    escape_idx: np.ndarray       # flat indices of escaped entries (int64)
+    escape_idx: np.ndarray       # flat indices of escapes (uint32 when the
+                                 # matrix has < 2³² entries, else int64)
     escape_val: np.ndarray       # their true values (int32)
 
     @property
     def storage_bits_per_entry(self) -> float:
-        n = int(np.prod(self.shape))
-        esc = self.escape_idx.size * (64 + 32)
-        return (self.payload.size * 8 + esc) / n
+        """Exact bits/entry: excludes the odd-n pad nibble column and uses
+        the actual escape-index width."""
+        a, n = self.shape
+        payload_bits = self.payload.size * 8
+        if self.nbits == 4 and n % 2:
+            payload_bits -= a * 4          # pad nibble column is not payload
+        idx_bits = self.escape_idx.dtype.itemsize * 8
+        esc = self.escape_idx.size * (idx_bits + 32)
+        return (payload_bits + esc) / (a * n)
 
 
 def pack_codes(z: np.ndarray, nbits: int = 4) -> PackedCodes:
@@ -71,7 +176,8 @@ def pack_codes(z: np.ndarray, nbits: int = 4) -> PackedCodes:
         raise ValueError("nbits must be 4 or 8")
     clipped = np.clip(z, lo, hi)
     esc = np.nonzero((z < lo) | (z > hi))
-    flat_idx = np.ravel_multi_index(esc, z.shape).astype(np.int64)
+    idx_dtype = np.uint32 if z.size <= np.iinfo(np.uint32).max else np.int64
+    flat_idx = np.ravel_multi_index(esc, z.shape).astype(idx_dtype)
     esc_val = z[esc].astype(np.int32)
     body = clipped.astype(np.int8)
     if nbits == 4:
@@ -92,5 +198,23 @@ def unpack_codes(p: PackedCodes) -> np.ndarray:
         body = p.payload.astype(np.int32)
     out = body.copy()
     if p.escape_idx.size:
-        out.ravel()[p.escape_idx] = p.escape_val
+        out.ravel()[p.escape_idx.astype(np.int64)] = p.escape_val
     return out
+
+
+def escapes_to_coo(p: PackedCodes
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(rows, cols, dval) of the escapes: the sparse *delta* correction.
+
+    ``dval = true - clip(true, range)`` matches the convention of
+    :func:`pack_codes_jnp`, so the serving kernels apply escapes from either
+    producer identically.
+    """
+    _, n = p.shape
+    idx = p.escape_idx.astype(np.int64)
+    rows = (idx // n).astype(np.int32)
+    cols = (idx % n).astype(np.int32)
+    lim = 7 if p.nbits == 4 else 127
+    lo = -8 if p.nbits == 4 else -128
+    dval = (p.escape_val - np.clip(p.escape_val, lo, lim)).astype(np.float32)
+    return rows, cols, dval

@@ -177,12 +177,18 @@ def watersic_quantize(
     dead_tau: float = 1e-3,
     erase_dead: bool = True,
     spacing: str = "waterfill",
+    l_chol: Optional[jnp.ndarray] = None,
 ) -> QuantizedLinear:
     """Alg. 3 (full WaterSIC) at fixed spacing constant ``c``.
 
     ``spacing="waterfill"`` → α_i = c/ℓ_ii (WaterSIC);
     ``spacing="uniform"``   → α_i = c/GM(ℓ) (same lattice density, uniform
-    grid = the HPTQ/Huffman-GPTQ baseline of §3.2)."""
+    grid = the HPTQ/Huffman-GPTQ baseline of §3.2).
+
+    ``l_chol`` optionally supplies the Cholesky factor of the damped,
+    dead-reduced Σ_X̂ — the caller must have computed it with the SAME
+    damp/dead_tau/erase_dead settings (quantize_at_rate does, amortizing
+    one factorization over every secant-search evaluation)."""
     w = jnp.asarray(w)
     a, n_full = w.shape
     dtype = w.dtype
@@ -203,7 +209,11 @@ def watersic_quantize(
     # -- Phase 1: setup ------------------------------------------------------
     stats_d = stats.damped(damp)
     sx, sxh, sxxh, sdx = stats_d.resolved()
-    l = jnp.linalg.cholesky(sxh)
+    if l_chol is not None:
+        assert l_chol.shape == sxh.shape, (l_chol.shape, sxh.shape)
+        l = l_chol
+    else:
+        l = jnp.linalg.cholesky(sxh)
     ldiag = jnp.diagonal(l)
     target = w_live @ sxxh
     if sdx is not None:
@@ -296,16 +306,23 @@ def quantize_at_rate(
             sigma_x_xhat=stats.sigma_x_xhat,
             sigma_delta_xhat=stats.sigma_delta_xhat[rows, :])
 
-    # quick L-diag for the initial guess (mirrors Phase 1 damping)
-    sx, sxh, _, _ = stats.damped(kwargs.get("damp", 1e-4)).resolved()
+    # One Cholesky of the damped, dead-reduced Σ_X̂ — mirroring Phase 1's
+    # reduce-then-damp order EXACTLY so the same factor seeds the initial
+    # guess AND is reused by every secant-search evaluation and the final
+    # full-rows call (previously each evaluation refactorized from scratch
+    # and the guess used a damped-then-reduced variant).
     dead = (_dead_features(stats.sigma_x, kwargs.get("dead_tau", 1e-3))
             if kwargs.get("erase_dead", True) else np.zeros(n_full, bool))
     keep = np.nonzero(~dead)[0]
-    ldiag = jnp.diagonal(jnp.linalg.cholesky(sxh[jnp.ix_(keep, keep)]))
+    stats_red = stats.reduce(keep) if dead.any() else stats
+    sxh_red = stats_red.damped(kwargs.get("damp", 1e-4)).resolved()[1]
+    l_live = jnp.linalg.cholesky(sxh_red)
+    ldiag = jnp.diagonal(l_live)
 
     def eval_entropy(log2c: float) -> float:
         q = watersic_quantize(wsub, stats_sub, 2.0 ** log2c,
-                              **{**kwargs, "rescalers": False})
+                              **{**kwargs, "rescalers": False,
+                                 "l_chol": l_live})
         return q.entropy_bits
 
     x0 = math.log2(initial_spacing(w[:, keep], ldiag, target_bits))
@@ -322,4 +339,4 @@ def quantize_at_rate(
         x1 = x2
         f1 = eval_entropy(x1) - target_bits
         it += 1
-    return watersic_quantize(w, stats, 2.0 ** x1, **kwargs)
+    return watersic_quantize(w, stats, 2.0 ** x1, l_chol=l_live, **kwargs)

@@ -10,13 +10,23 @@ weight is  Ŵ[o, i] = t[o]·Z[o, i]·s[i]  and the layer computes
 
 Fusing the dequantization into the matmul means the bf16 weight matrix never
 round-trips through HBM — at decode batch sizes the matmul is weight-bytes
-bound, so int8 codes cut the dominant roofline term ~2× vs bf16 (4× with int4
-packing, see ops.int4 note).  The column scaling is applied to the *activation
-tile* (n ops per tile instead of a·n), the row scaling to the accumulator.
+bound, so int8 codes cut the dominant roofline term ~2× vs bf16, and the
+nibble-packed int4 variant (``dequant_matmul_packed_pallas``) cuts it 4×:
+the kernel streams uint8 planar-packed codes from HBM and unpacks them
+in-VMEM (shift/mask/sign-extend on the VPU) right before the MXU dot, so
+HBM only ever sees half a byte per weight (DESIGN.md §8).  The column
+scaling is applied to the *activation tile* (n ops per tile instead of
+a·n), the row scaling to the accumulator.
 
 Grid: (M/bm, N/bn, K/bk), K innermost (sequential) with an f32 VMEM
 accumulator; MXU dims (bm, bn, bk) are multiples of 128 by construction in
-ops.py.
+ops.py.  The packed kernel contracts over *byte* blocks (bkh = bk/2): the
+planar layout (byte j = col j | col j+K/2 << 4, core/packing) lets it dot
+the low-nibble plane against the first half of the activation columns and
+the high-nibble plane against the second half — two contiguous MXU dots,
+no lane interleave.  Out-of-range escapes are applied OUTSIDE the kernel
+as a sparse COO correction (ops._apply_escapes), keeping the hot loop
+branch-free.
 """
 from __future__ import annotations
 
@@ -27,7 +37,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["dequant_matmul_pallas"]
+__all__ = ["dequant_matmul_pallas", "dequant_matmul_packed_pallas"]
 
 
 def _kernel(x_ref, z_ref, s_ref, t_ref, o_ref, acc_ref, *, n_k: int):
@@ -88,3 +98,86 @@ def dequant_matmul_pallas(x, z, col_scale, row_scale, *,
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
         interpret=interpret,
     )(x, z, col_scale.reshape(1, k), row_scale.reshape(1, n))
+
+
+def _sign_extend_nibble(v):
+    """uint8 nibble (0..15, already widened to int32) → int4 value in f32."""
+    return jnp.where(v > 7, v - 16, v).astype(jnp.float32)
+
+
+def _packed_kernel(xlo_ref, xhi_ref, p_ref, slo_ref, shi_ref, t_ref, o_ref,
+                   acc_ref, *, n_k: int):
+    """One (bm, bn) output tile over planar-packed int4 codes.
+
+    xlo_ref/xhi_ref: (bm, bkh) activation column halves
+    p_ref: (bn, bkh) uint8 payload — low nibble = first-half col, high
+           nibble = second-half col (planar layout, core/packing)
+    slo_ref/shi_ref: (1, bkh) column-scale halves    t_ref: (1, bn)
+    o_ref: (bm, bn) output    acc_ref: (bm, bn) f32 VMEM scratch
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    p = p_ref[...].astype(jnp.int32)
+    z_lo = _sign_extend_nibble(p & 0xF)          # (bn, bkh) VPU unpack
+    z_hi = _sign_extend_nibble((p >> 4) & 0xF)
+    xs_lo = xlo_ref[...].astype(jnp.float32) * slo_ref[...].astype(jnp.float32)
+    xs_hi = xhi_ref[...].astype(jnp.float32) * shi_ref[...].astype(jnp.float32)
+    dims = (((1,), (1,)), ((), ()))
+    acc_ref[...] += (
+        jax.lax.dot_general(xs_lo, z_lo, dims,
+                            preferred_element_type=jnp.float32)
+        + jax.lax.dot_general(xs_hi, z_hi, dims,
+                              preferred_element_type=jnp.float32))
+
+    @pl.when(k == n_k - 1)
+    def _store():
+        o_ref[...] = (acc_ref[...] * t_ref[...].astype(jnp.float32)
+                      ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_kh", "interpret",
+                     "out_dtype"))
+def dequant_matmul_packed_pallas(x_lo, x_hi, payload, s_lo, s_hi, row_scale,
+                                 *, block_m: int = 128, block_n: int = 128,
+                                 block_kh: int = 256, interpret: bool = False,
+                                 out_dtype=jnp.float32):
+    """Packed-int4 fused dequant-matmul (DESIGN.md §8).
+
+    ``x_lo``/``x_hi`` (m, kh) are the first/second halves of the activation
+    columns; ``payload`` (n, kh) the planar-packed codes; ``s_lo``/``s_hi``
+    (kh,) the matching column-scale halves.  All dims must be multiples of
+    the block sizes (ops.py splits, pads, and re-fuses).  HBM reads per
+    output tile: bkh weight *bytes* per (bm, bn) step — half the int8
+    kernel's, a quarter of bf16's.
+    """
+    m, kh = x_lo.shape
+    n, kh2 = payload.shape
+    assert x_hi.shape == (m, kh) and kh == kh2, (x_lo.shape, x_hi.shape,
+                                                 payload.shape)
+    assert m % block_m == 0 and n % block_n == 0 and kh % block_kh == 0, (
+        (m, n, kh), (block_m, block_n, block_kh))
+    n_k = kh // block_kh
+    grid = (m // block_m, n // block_n, n_k)
+    return pl.pallas_call(
+        functools.partial(_packed_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_kh), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_m, block_kh), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_n, block_kh), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((1, block_kh), lambda i, j, kk: (0, kk)),
+            pl.BlockSpec((1, block_kh), lambda i, j, kk: (0, kk)),
+            pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x_lo, x_hi, payload, s_lo.reshape(1, kh), s_hi.reshape(1, kh),
+      row_scale.reshape(1, n))

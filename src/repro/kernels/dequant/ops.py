@@ -1,13 +1,19 @@
 """Jit'd public wrapper for the fused dequant-matmul.
 
-``dequant_matmul`` pads to MXU-aligned block multiples, dispatches to the
-Pallas kernel on TPU (or interpret mode when requested) and to a fused-by-XLA
-path on CPU, and slices the padding off.
+``dequant_matmul`` dispatches on the payload dtype: int8/int4 code matrices
+go to the int8 kernel, uint8 planar-packed int4 payloads (two codes per
+byte, core/packing) to the packed kernel.  It pads to MXU-aligned block
+multiples (including the odd-in-features pad column of a packed payload),
+dispatches to the Pallas kernels on TPU (or interpret mode when requested)
+and to a fused-by-XLA path on CPU, slices the padding off, and applies the
+sparse escape correction — out-of-range codes stored as a COO delta list —
+outside the kernel (DESIGN.md §8).
 
 ``dequant_matmul_xla`` is the collective-friendly pure-XLA formulation used
 inside pjit'd serve graphs (the dry-run path): XLA fuses the int8→f32 convert
 + scale into the matmul's operand read, preserving the HBM-bytes advantage
-that the roofline analysis measures.
+that the roofline analysis measures.  ``dequant_matmul_packed_xla`` is its
+packed sibling (in-graph nibble unpack, fused by XLA).
 """
 from __future__ import annotations
 
@@ -16,10 +22,12 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .dequant_matmul import dequant_matmul_pallas
+from repro.core.packing import unpack_int4_planar_jnp
+from .dequant_matmul import dequant_matmul_packed_pallas, dequant_matmul_pallas
 from .ref import dequant_matmul_ref
 
-__all__ = ["dequant_matmul", "dequant_matmul_xla"]
+__all__ = ["dequant_matmul", "dequant_matmul_packed", "dequant_matmul_xla",
+           "dequant_matmul_packed_xla"]
 
 
 def _pad_to(x, mult, axis):
@@ -31,12 +39,40 @@ def _pad_to(x, mult, axis):
     return jnp.pad(x, widths)
 
 
+def _apply_escapes(out, x, col_scale, row_scale, escapes):
+    """out[b, r] += x[b, c]·s[c]·dval·t[r] for each COO escape (r, c, dval).
+
+    ``dval = true_code − clipped_code``, so the correction is exact on top
+    of the clipped in-kernel body; duplicate rows accumulate (scatter-add).
+    A zero-length COO (the common case) is a static no-op.
+    """
+    esc_row, esc_col, esc_dval = escapes
+    if esc_row.shape[0] == 0:
+        return out
+    coef = (col_scale[esc_col].astype(jnp.float32)
+            * esc_dval.astype(jnp.float32)
+            * row_scale[esc_row].astype(jnp.float32))
+    contrib = x[:, esc_col].astype(jnp.float32) * coef[None, :]
+    return out.at[:, esc_row].add(contrib.astype(out.dtype))
+
+
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
                                              "prefer_pallas", "interpret"))
-def dequant_matmul(x, z, col_scale, row_scale, *, block_m: int = 128,
-                   block_n: int = 128, block_k: int = 512,
-                   prefer_pallas: bool = True, interpret: bool = False):
-    """x (m, k) · dequant(z, s, t)ᵀ → (m, n), padding handled here."""
+def dequant_matmul(x, z, col_scale, row_scale, *, escapes=None,
+                   block_m: int = 128, block_n: int = 128,
+                   block_k: int = 512, prefer_pallas: bool = True,
+                   interpret: bool = False):
+    """x (m, k) · dequant(z, s, t)ᵀ → (m, n), padding + escapes handled here.
+
+    ``z`` int8 (n, k) selects the int8 kernel; ``z`` uint8 (n, ceil(k/2))
+    selects the packed-int4 kernel (planar nibble layout).  ``escapes`` is
+    an optional COO triple (rows, cols, dvals) applied after the kernel.
+    """
+    if z.dtype == jnp.uint8:
+        return dequant_matmul_packed(
+            x, z, col_scale, row_scale, escapes=escapes, block_m=block_m,
+            block_n=block_n, block_k=block_k, prefer_pallas=prefer_pallas,
+            interpret=interpret)
     m, k = x.shape
     n = z.shape[0]
     on_tpu = jax.default_backend() == "tpu"
@@ -48,9 +84,51 @@ def dequant_matmul(x, z, col_scale, row_scale, *, block_m: int = 128,
         tp = _pad_to(row_scale, block_n, 0)
         out = dequant_matmul_pallas(
             xp, zp, sp, tp, block_m=block_m, block_n=block_n,
-            block_k=block_k_eff, interpret=interpret or not on_tpu)
-        return out[:m, :n]
-    return dequant_matmul_xla(x, z, col_scale, row_scale)
+            block_k=block_k_eff, interpret=interpret or not on_tpu)[:m, :n]
+    else:
+        out = dequant_matmul_xla(x, z, col_scale, row_scale)
+    if escapes is not None:
+        out = _apply_escapes(out, x, col_scale, row_scale, escapes)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "prefer_pallas", "interpret"))
+def dequant_matmul_packed(x, payload, col_scale, row_scale, *, escapes=None,
+                          block_m: int = 128, block_n: int = 128,
+                          block_k: int = 512, prefer_pallas: bool = True,
+                          interpret: bool = False):
+    """Packed-int4 serving matmul: x (m, k) × planar payload (n, ceil(k/2)).
+
+    Odd in-features are handled here: the payload's pad nibble column holds
+    code 0, and x / col_scale are zero-padded to the packed width before the
+    halves are split, so the pad contributes nothing.
+    """
+    m, k = x.shape
+    n, kb = payload.shape
+    k_even = 2 * kb
+    assert k in (k_even, k_even - 1), (x.shape, payload.shape)
+    xp = _pad_to(x, k_even, 1) if k < k_even else x
+    sp = _pad_to(col_scale, k_even, 0) if k < k_even else col_scale
+    on_tpu = jax.default_backend() == "tpu"
+    if prefer_pallas and (on_tpu or interpret):
+        kh = kb
+        block_kh = min(block_k // 2, max(128, kh))
+        x_lo = _pad_to(_pad_to(xp[:, :kh], block_m, 0), block_kh, 1)
+        x_hi = _pad_to(_pad_to(xp[:, kh:], block_m, 0), block_kh, 1)
+        pp = _pad_to(_pad_to(payload, block_n, 0), block_kh, 1)
+        s_lo = _pad_to(sp[:kh], block_kh, 0)
+        s_hi = _pad_to(sp[kh:], block_kh, 0)
+        tp = _pad_to(row_scale, block_n, 0)
+        out = dequant_matmul_packed_pallas(
+            x_lo, x_hi, pp, s_lo, s_hi, tp, block_m=block_m,
+            block_n=block_n, block_kh=block_kh,
+            interpret=interpret or not on_tpu)[:m, :n]
+    else:
+        out = dequant_matmul_packed_xla(xp, payload, sp, row_scale)
+    if escapes is not None:
+        out = _apply_escapes(out, x, col_scale, row_scale, escapes)
+    return out
 
 
 @jax.jit
@@ -58,6 +136,19 @@ def dequant_matmul_xla(x, z, col_scale, row_scale):
     """Scale-the-activations formulation; XLA keeps weights int8 in HBM."""
     xs = x.astype(jnp.float32) * col_scale.astype(jnp.float32)[None, :]
     acc = jax.lax.dot_general(xs, z.astype(jnp.bfloat16).astype(jnp.float32),
+                              (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    return acc * row_scale.astype(jnp.float32)[None, :]
+
+
+@jax.jit
+def dequant_matmul_packed_xla(x, payload, col_scale, row_scale):
+    """Packed path for XLA backends: in-graph nibble unpack (elementwise,
+    fused into the operand read) then the int8 formulation.  x and
+    col_scale must already span the packed width 2·payload.shape[1]."""
+    z = unpack_int4_planar_jnp(payload)       # (n, 2·kb), exact in f32
+    xs = x.astype(jnp.float32) * col_scale.astype(jnp.float32)[None, :]
+    acc = jax.lax.dot_general(xs, z.astype(jnp.float32),
                               (((1,), (1,)), ((), ())),
                               preferred_element_type=jnp.float32)
     return acc * row_scale.astype(jnp.float32)[None, :]

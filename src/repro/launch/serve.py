@@ -1,8 +1,9 @@
 """Serving driver: batched engine on the host mesh, optionally with
-WaterSIC-quantized (int8-code) weights.
+WaterSIC-quantized weights — int8 codes or the packed-int4 serving format
+(planar nibble payload + escape COO, DESIGN.md §8).
 
     PYTHONPATH=src python -m repro.launch.serve --arch minicpm-2b --reduced \
-        --requests 6 --wbits 8
+        --requests 6 --wbits 4 --prefill-chunk 8
 """
 from __future__ import annotations
 
@@ -17,7 +18,7 @@ from repro.configs import get_config
 from repro.dist.sharding import use_mesh
 from repro.launch.mesh import make_host_mesh
 from repro.models import init_params, split_tree
-from repro.quant import quantize_params_tree
+from repro.quant import quantize_params_tree, qweight_bytes
 from repro.serve import Request, ServeEngine
 
 
@@ -29,7 +30,9 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--wbits", type=int, default=16, choices=[16, 8])
+    ap.add_argument("--wbits", type=int, default=16, choices=[16, 8, 4])
+    ap.add_argument("--prefill-chunk", type=int, default=8,
+                    help="tokens per prefill device call (0 = per-token)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -42,8 +45,17 @@ def main(argv=None):
         if args.wbits == 8:
             params = quantize_params_tree(params)
             print("serving int8 WaterSIC-code weights")
+        elif args.wbits == 4:
+            params = quantize_params_tree(params, nbits=4, packed=True)
+            print("serving packed-int4 WaterSIC-code weights (planar nibble "
+                  "payload, fused unpack kernel)")
+        if args.wbits != 16:
+            qb, fb = qweight_bytes(params)
+            print(f"  param bytes {qb/1e6:.2f} MB vs bf16 {fb/1e6:.2f} MB "
+                  f"({fb/max(qb,1):.2f}x HBM win)")
         eng = ServeEngine(cfg, params, n_slots=args.slots,
-                          max_len=args.prompt_len + args.max_new + 2)
+                          max_len=args.prompt_len + args.max_new + 2,
+                          prefill_chunk=args.prefill_chunk or None)
         for i in range(args.requests):
             eng.submit(Request(
                 rid=i,
@@ -56,6 +68,11 @@ def main(argv=None):
         total_tokens = sum(len(r.out_tokens) for r in done)
         print(f"served {len(done)} requests, {total_tokens} tokens "
               f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s)")
+        for st in eng.round_stats:
+            print(f"  round: b={st.batch} plen={st.prompt_len} "
+                  f"prefill={st.prefill_calls} calls/{st.prefill_s*1e3:.0f}ms "
+                  f"decode={st.decode_calls} calls/{st.decode_s*1e3:.0f}ms "
+                  f"new={st.new_tokens}")
         for r in done[:4]:
             print(f"  rid={r.rid} out={r.out_tokens[:8]}")
         return done

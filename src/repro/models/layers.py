@@ -128,10 +128,22 @@ def dense_init(key, in_dim, out_dim, *, axes, bias=False, scale=1.0,
 def dense(p, x):
     w = p["w"]
     if isinstance(w, dict) and "codes" in w:
-        # WaterSIC int8 serving path: y = ((x·s) @ codes)·t — the weight
-        # stays int8 in HBM (see quant/qlinear.py + kernels/dequant)
-        y = ((x * w["s"].astype(x.dtype)) @ w["codes"].astype(x.dtype)) \
-            * w["t"].astype(x.dtype)
+        if w["codes"].dtype == jnp.uint8:
+            # WaterSIC packed-int4 serving path (DESIGN.md §8): planar
+            # nibble payload (out, ceil(in/2)) streamed through the fused
+            # packed dequant-matmul; escapes applied as a sparse COO
+            # correction.  Half the weight HBM bytes of int8.
+            from repro.kernels.dequant import dequant_matmul
+            lead = x.shape[:-1]
+            y = dequant_matmul(
+                x.reshape(-1, x.shape[-1]), w["codes"], w["s"], w["t"],
+                escapes=(w["esc_row"], w["esc_col"], w["esc_dval"]))
+            y = y.reshape(lead + (y.shape[-1],)).astype(x.dtype)
+        else:
+            # WaterSIC int8 serving path: y = ((x·s) @ codes)·t — the
+            # weight stays int8 in HBM (quant/qlinear.py + kernels/dequant)
+            y = ((x * w["s"].astype(x.dtype)) @ w["codes"].astype(x.dtype)) \
+                * w["t"].astype(x.dtype)
     else:
         y = x @ w.astype(x.dtype)
     if "b" in p:
@@ -546,8 +558,20 @@ def moe(p, x, *, n_experts, top_k, capacity_factor=1.25, activation="silu",
 
     act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[activation]
 
-    def emm(inp, w):  # (E,C,din) × (E,din,dout), int8-code aware
+    def emm(inp, w):  # (E,C,din) × (E,din,dout), int8/packed-code aware
         if isinstance(w, dict) and "codes" in w:
+            if w["codes"].dtype == jnp.uint8:
+                # packed-int4 expert payload (E, dout, ceil(din/2)): unpack
+                # in-graph (elementwise, fused by XLA into the operand
+                # read); synthetic packed experts are escape-free
+                assert w["esc_row"].shape[-1] == 0, \
+                    "packed MoE escapes unsupported; use escape_capacity=0"
+                from repro.core.packing import unpack_int4_planar_jnp
+                din = inp.shape[-1]
+                z = unpack_int4_planar_jnp(w["codes"])[..., :din]
+                scaled = inp * w["s"].astype(inp.dtype)[:, None, :]
+                out = jnp.einsum("ecd,efd->ecf", scaled, z.astype(inp.dtype))
+                return out * w["t"].astype(inp.dtype)[:, None, :]
             scaled = inp * w["s"].astype(inp.dtype)[:, None, :]
             out = jnp.einsum("ecd,edf->ecf", scaled,
                              w["codes"].astype(inp.dtype))

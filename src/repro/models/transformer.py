@@ -766,6 +766,25 @@ def decode_step(cfg: ArchConfig, params, cache: DecodeCache, token,
     raise ValueError(cfg.family)
 
 
+def decode_chunk(cfg: ArchConfig, params, cache: DecodeCache, tokens):
+    """Step the cache ``tokens.shape[1]`` tokens in ONE jittable call.
+
+    ``tokens`` (B, C) int32 → (logits of the LAST token (B, vocab), cache).
+    Semantically identical to C sequential :func:`decode_step` calls — the
+    scan body IS decode_step, so the cache trajectory and logits are
+    bit-exact w.r.t. the per-token path — but it costs one device dispatch
+    (and one jit cache entry per chunk shape) instead of C.  This is the
+    chunked-prefill primitive of serve.ServeEngine (DESIGN.md §8): prompt
+    prefill drops from O(prompt_len) dispatches to ceil(prompt_len/chunk).
+    """
+    def step(c, tok):
+        logits, c = decode_step(cfg, params, c, tok[:, None])
+        return c, logits
+
+    cache, logits_seq = jax.lax.scan(step, cache, jnp.swapaxes(tokens, 0, 1))
+    return logits_seq[-1], cache
+
+
 def param_specs_tree(params_px):
     """Px tree -> (values, PartitionSpec tree) via dist.sharding rules."""
     from repro.dist.sharding import spec_for_axes

@@ -1,5 +1,5 @@
-from .qlinear import (from_watersic, is_qweight, quantize_params_tree,
-                      qweight_bytes)
+from .qlinear import (from_watersic, is_packed_qweight, is_qweight,
+                      quantize_params_tree, qweight_bytes)
 
-__all__ = ["from_watersic", "is_qweight", "quantize_params_tree",
-           "qweight_bytes"]
+__all__ = ["from_watersic", "is_packed_qweight", "is_qweight",
+           "quantize_params_tree", "qweight_bytes"]

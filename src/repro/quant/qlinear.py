@@ -11,11 +11,23 @@ kernels/dequant.  models.layers.dense / moe dispatch on the dict form and
 compute  y = ((x·s) @ codes)·t  — weights stay int8 in HBM (the decode
 roofline memory-term win measured in §Perf).
 
+``packed=True`` (with nbits=4) emits the *packed* leaf format instead
+(DESIGN.md §8): the codes live as a planar nibble-packed uint8 payload in
+kernel orientation plus an escape COO —
+
+    {"codes": uint8 (…, out, ceil(in/2)), "s": (…, in), "t": (…, out),
+     "esc_row"/"esc_col": int32 (…, cap), "esc_dval": f32 (…, cap)}
+
+— halving the weight HBM bytes again vs int8.  dense/moe dispatch on the
+payload dtype (uint8 ⇒ packed) and route through the fused packed kernel.
+
 Two producers:
   * ``from_watersic``    — real codes/scales from a quant.pipeline run
-                           (small models, tests/examples),
-  * ``quantize_params_tree(..., synthetic=True)`` — traceable absmax-scaled
-    int8 codes used by the dry-run (eval_shape only needs shapes/dtypes).
+                           (small models, tests/examples); ``nbits=4``
+                           yields the packed leaf with exact escapes,
+  * ``quantize_params_tree`` — traceable absmax-scaled codes used by the
+    dry-run and the synthetic serving benchmarks (escape-free by
+    construction, so the packed payload is lossless).
 """
 from __future__ import annotations
 
@@ -25,8 +37,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["quantize_params_tree", "is_qweight", "from_watersic",
-           "qweight_bytes"]
+from repro.core.packing import pack_codes_jnp, pack_int4_planar_jnp
+
+__all__ = ["quantize_params_tree", "is_qweight", "is_packed_qweight",
+           "from_watersic", "qweight_bytes"]
 
 #: param-dict keys eligible for weight quantization (the big matmuls)
 _WEIGHT_KEYS = ("w",)
@@ -36,6 +50,11 @@ _EXPERT_KEYS = ("w_gate", "w_up", "w_in", "w_out")
 
 def is_qweight(x) -> bool:
     return isinstance(x, dict) and "codes" in x
+
+
+def is_packed_qweight(x) -> bool:
+    """Packed-int4 leaf: uint8 planar payload in (…, out, in/2) orientation."""
+    return is_qweight(x) and x["codes"].dtype == jnp.uint8
 
 
 def _quantize_leaf(w: jnp.ndarray, nbits: int = 8) -> Dict[str, jnp.ndarray]:
@@ -54,6 +73,25 @@ def _quantize_leaf(w: jnp.ndarray, nbits: int = 8) -> Dict[str, jnp.ndarray]:
     return {"codes": codes, "s": s.astype(jnp.float32), "t": t}
 
 
+def _quantize_leaf_packed(w: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Traceable packed-int4 leaf for (…, in, out) weights (DESIGN.md §8).
+
+    Codes are clipped to [-7, 7] by construction, so the payload is
+    escape-free and the leaf carries zero-capacity COO arrays (stackable
+    across scanned layers; the correction is a static no-op)."""
+    base = _quantize_leaf(w, nbits=4)
+    codes = jnp.swapaxes(base["codes"].astype(jnp.int8), -1, -2)  # (…, o, i)
+    if codes.shape[-1] % 2:
+        pad = [(0, 0)] * (codes.ndim - 1) + [(0, 1)]
+        codes = jnp.pad(codes, pad)
+    lead = w.shape[:-2]
+    return {"codes": pack_int4_planar_jnp(codes),
+            "s": base["s"], "t": base["t"],
+            "esc_row": jnp.zeros(lead + (0,), jnp.int32),
+            "esc_col": jnp.zeros(lead + (0,), jnp.int32),
+            "esc_dval": jnp.zeros(lead + (0,), jnp.float32)}
+
+
 def _eligible(path_keys: Tuple[str, ...], leaf, min_dim: int) -> bool:
     if not path_keys or not hasattr(leaf, "ndim") or leaf.ndim < 2:
         return False
@@ -68,12 +106,17 @@ def _eligible(path_keys: Tuple[str, ...], leaf, min_dim: int) -> bool:
 
 
 def quantize_params_tree(params, *, min_dim: int = 64,
-                         skip_embed: bool = True, nbits: int = 8):
+                         skip_embed: bool = True, nbits: int = 8,
+                         packed: bool = False):
     """Replace eligible weight leaves with int8/int4 code dicts (traceable).
 
     Model param trees are nested dicts/lists of arrays (see models/); the
     walk preserves structure and rewrites eligible weights in place.
+    ``packed=True`` (requires nbits=4) emits the planar nibble-packed leaf
+    format served by the fused packed kernel — half the HBM bytes of int8.
     """
+    if packed and nbits != 4:
+        raise ValueError("packed leaves require nbits=4")
 
     def walk(node, path):
         if isinstance(node, dict):
@@ -87,17 +130,25 @@ def quantize_params_tree(params, *, min_dim: int = 64,
         if skip_embed and "embed" in path:
             return node
         if _eligible(path, node, min_dim):
-            return _quantize_leaf(node, nbits)
+            return _quantize_leaf_packed(node) if packed \
+                else _quantize_leaf(node, nbits)
         return node
 
     return walk(params, ())
 
 
-def from_watersic(q, *, transpose: bool = True) -> Dict[str, jnp.ndarray]:
+def from_watersic(q, *, transpose: bool = True, nbits: int = 8,
+                  escape_capacity: Optional[int] = None
+                  ) -> Dict[str, jnp.ndarray]:
     """core.QuantizedLinear -> serving dict.
 
-    QuantizedLinear stores W (out, in); serving uses (in, out):
-    codes (in, out) = Zᵀ, s = α⊙γ (in-features), t (out,)."""
+    ``nbits=8``: QuantizedLinear stores W (out, in); serving uses (in, out):
+    codes (in, out) = Zᵀ, s = α⊙γ (in-features), t (out,).
+
+    ``nbits=4``: the packed leaf — planar uint8 payload in KERNEL
+    orientation (out, ceil(in/2)) plus exact escape COO (codes outside
+    [-8, 7] become sparse deltas, packing never loses them).  Pass
+    ``escape_capacity`` to fix the COO length (stackable across layers)."""
     codes = np.asarray(q.codes)
     if q.dead_mask.any():
         full = np.zeros((q.out_features, q.in_features), codes.dtype)
@@ -108,6 +159,13 @@ def from_watersic(q, *, transpose: bool = True) -> Dict[str, jnp.ndarray]:
         s_full[live] = q.column_scale
     else:
         s_full = q.column_scale.astype(np.float32)
+    if nbits == 4:
+        payload, er, ec, ev = pack_codes_jnp(
+            jnp.asarray(codes, jnp.int32), escape_capacity=escape_capacity)
+        return {"codes": payload,
+                "s": jnp.asarray(s_full, jnp.float32),
+                "t": jnp.asarray(q.t, jnp.float32),
+                "esc_row": er, "esc_col": ec, "esc_dval": ev}
     if np.abs(codes).max() > 127:
         # clip escapes (negligible mass; exact path uses packing escapes)
         codes = np.clip(codes, -127, 127)
@@ -117,15 +175,22 @@ def from_watersic(q, *, transpose: bool = True) -> Dict[str, jnp.ndarray]:
 
 
 def qweight_bytes(tree) -> Tuple[int, int]:
-    """(quantized bytes, would-be bf16 bytes) over the tree — the HBM win."""
+    """(quantized bytes, would-be bf16 bytes) over the tree — the HBM win.
+
+    A uint8 codes leaf holds TWO int4 codes per byte (packed serving
+    format), so it stands in for 2 logical weights = 4 bf16 bytes."""
     qb = fb = 0
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     for path, leaf in flat:
         keys = tuple(str(getattr(p, "key", getattr(p, "idx", p)))
                      for p in path)
         if "codes" in keys:
-            qb += leaf.size
-            fb += leaf.size * 2
+            if leaf.dtype == jnp.uint8:
+                qb += leaf.size
+                fb += leaf.size * 4
+            else:
+                qb += leaf.size
+                fb += leaf.size * 2
         elif hasattr(leaf, "dtype"):
             qb += leaf.size * leaf.dtype.itemsize
             fb += leaf.size * leaf.dtype.itemsize

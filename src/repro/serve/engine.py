@@ -1,22 +1,39 @@
 """Batched serving engine (static batching rounds).
 
 Requests queue in; each *round* admits up to ``n_slots`` requests with equal
-prompt length (the queue is grouped by length), prefills them in lockstep by
-stepping the prompt through ``decode_step`` (exact w.r.t. the cache), then
-generates greedily until every admitted request hits its token budget.
-Rounds are independent: the cache is re-initialized per round, so no state
-leaks between requests.  Continuous batching (per-slot positions) is listed
-as future work in DESIGN.md; static rounds keep the reference engine exactly
-equivalent to the tested decode path.
+prompt length (the queue is grouped by length), prefills them in lockstep
+(exact w.r.t. the cache), then generates greedily until every admitted
+request hits its token budget.  Rounds are independent: the cache is
+re-initialized per round, so no state leaks between requests.  Continuous
+batching (per-slot positions) is listed as future work in DESIGN.md; static
+rounds keep the reference engine exactly equivalent to the tested decode
+path.
+
+Prefill has two modes (DESIGN.md §8):
+
+  * per-token (``prefill_chunk=None``) — one ``decode_step`` dispatch per
+    prompt token, the reference semantics;
+  * chunked (``prefill_chunk=C``) — ``models.decode_chunk`` steps the cache
+    C tokens per device call (a lax.scan whose body IS decode_step, so the
+    logits and cache are bit-exact vs the per-token path), cutting prompt
+    dispatch count from O(prompt_len) to ceil(prompt_len/C).  Each distinct
+    chunk shape jits once; a prompt costs at most two shapes (full chunks +
+    one remainder).
+
+Per-round timing hooks land in ``engine.round_stats`` (prefill/decode wall
+clock and device-call counts) — the source for benchmarks/serve_bench.py's
+tokens/s and HBM-bytes/weight report.
 
 Weights may be served dequantized-on-the-fly from WaterSIC int codes
 (quant/qlinear) — the paper's deployment story: decode is weight-bytes
-bound, so 2–4 bit codes cut the dominant roofline term.  launch/serve.py
-wraps the same decode_step in pjit for the production mesh.
+bound, so 2–4 bit codes cut the dominant roofline term; the packed-int4
+leaf format halves the weight bytes again vs int8.  launch/serve.py wraps
+the same decode_step in pjit for the production mesh.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Callable, Dict, List, Optional
 
@@ -25,9 +42,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.models import decode_step, init_cache
+from repro.models import decode_chunk, decode_step, init_cache
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = ["Request", "RoundStats", "ServeEngine"]
 
 
 @dataclasses.dataclass
@@ -39,18 +56,38 @@ class Request:
     done: bool = False
 
 
+@dataclasses.dataclass
+class RoundStats:
+    """Wall-clock + dispatch accounting for one static-batching round."""
+
+    batch: int
+    prompt_len: int
+    prefill_calls: int               # device dispatches spent on the prompt
+    prefill_s: float
+    decode_calls: int                # generation decode dispatches
+    decode_s: float
+    new_tokens: int                  # tokens emitted across the batch
+
+
 class ServeEngine:
     def __init__(self, cfg: ArchConfig, params, *, n_slots: int = 4,
                  max_len: int = 256, cache_dtype=jnp.float32,
-                 decode_fn: Optional[Callable] = None):
+                 decode_fn: Optional[Callable] = None,
+                 prefill_chunk: Optional[int] = None,
+                 decode_chunk_fn: Optional[Callable] = None):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
         self.cache_dtype = cache_dtype
+        self.prefill_chunk = prefill_chunk
         self.queue: deque[Request] = deque()
+        self.round_stats: List[RoundStats] = []
         self._decode = decode_fn or jax.jit(
             lambda params, cache, tok: decode_step(cfg, params, cache, tok))
+        self._decode_chunk = decode_chunk_fn or jax.jit(
+            lambda params, cache, toks: decode_chunk(cfg, params, cache,
+                                                     toks))
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
@@ -71,6 +108,29 @@ class ServeEngine:
         self.queue = rest
         return admitted
 
+    def _prefill(self, cache, prompts: np.ndarray):
+        """Feed the prompt through the cache; returns (logits, cache, calls).
+
+        Chunked mode issues ceil(plen/chunk) decode_chunk dispatches (each a
+        scanned run of decode_step — bit-exact vs per-token); per-token mode
+        is the plen-dispatch reference path.
+        """
+        plen = prompts.shape[1]
+        logits = None
+        calls = 0
+        if self.prefill_chunk and plen > 1:
+            c = self.prefill_chunk
+            for s0 in range(0, plen, c):
+                seg = jnp.asarray(prompts[:, s0:s0 + c])
+                logits, cache = self._decode_chunk(self.params, cache, seg)
+                calls += 1
+        else:
+            for t in range(plen):               # lockstep exact prefill
+                logits, cache = self._decode(self.params, cache,
+                                             jnp.asarray(prompts[:, t:t + 1]))
+                calls += 1
+        return logits, cache, calls
+
     def run_round(self) -> List[Request]:
         """One static-batching round; returns the finished requests."""
         batch = self._admit()
@@ -83,11 +143,10 @@ class ServeEngine:
         cache = init_cache(self.cfg, b, self.max_len, self.cache_dtype)
 
         prompts = np.stack([r.prompt for r in batch]).astype(np.int32)
-        logits = None
-        for t in range(plen):                       # lockstep exact prefill
-            logits, cache = self._decode(self.params, cache,
-                                         jnp.asarray(prompts[:, t:t + 1]))
+        t0 = time.perf_counter()
+        logits, cache, prefill_calls = self._prefill(cache, prompts)
         last = np.argmax(np.asarray(logits), axis=-1).astype(np.int32)
+        t1 = time.perf_counter()
         # Budget-exact generation: consume `last` first, decode only while
         # some request still has budget left.  Each slot stops at exactly
         # its own max_new_tokens (mixed budgets share the batch; finished
@@ -106,6 +165,11 @@ class ServeEngine:
             logits, cache = self._decode(self.params, cache,
                                          jnp.asarray(last[:, None]))
             last = np.argmax(np.asarray(logits), axis=-1).astype(np.int32)
+        t2 = time.perf_counter()
+        self.round_stats.append(RoundStats(
+            batch=b, prompt_len=plen, prefill_calls=prefill_calls,
+            prefill_s=t1 - t0, decode_calls=decode_steps, decode_s=t2 - t1,
+            new_tokens=sum(len(r.out_tokens) for r in batch)))
         for r in batch:
             r.done = True
         return batch

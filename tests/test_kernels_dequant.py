@@ -3,8 +3,11 @@ import numpy as np
 import pytest
 import jax.numpy as jnp
 
-from repro.kernels.dequant import (dequant_matmul, dequant_matmul_ref,
-                                   dequant_matmul_xla, dequantize_ref)
+from repro.core import pack_codes_jnp
+from repro.kernels.dequant import (dequant_matmul, dequant_matmul_packed,
+                                   dequant_matmul_packed_xla,
+                                   dequant_matmul_ref, dequant_matmul_xla,
+                                   dequantize_ref)
 
 
 def _case(m, k, n, seed=0, xdtype=np.float32):
@@ -56,6 +59,76 @@ def test_xla_path_matches():
     args = _case(16, 384, 256, seed=11)
     out = dequant_matmul_xla(*args)
     ref = dequant_matmul_ref(*args)
+    scale = float(jnp.abs(ref).max()) + 1e-6
+    assert float(jnp.abs(out - ref).max()) / scale < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Packed-int4 path (planar payload, in-kernel unpack, escape COO)
+# ---------------------------------------------------------------------------
+
+
+def _packed_case(m, k, n, seed=0, esc=True):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    hi = 12 if esc else 8                 # >7 ⇒ some codes escape int4 range
+    z = rng.integers(-hi, hi, (n, k)).astype(np.int32)
+    s = jnp.asarray(rng.random(k) * 0.2 + 0.01, jnp.float32)
+    t = jnp.asarray(rng.random(n) + 0.5, jnp.float32)
+    payload, er, ec, ev = pack_codes_jnp(jnp.asarray(z))
+    return x, z, s, t, payload, (er, ec, ev)
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (1, 128, 128),       # decode batch 1
+    (8, 256, 256),
+    (3, 129, 70),        # odd in-features: pad nibble column
+    (16, 300, 200),      # non-aligned both dims
+])
+def test_packed_matches_int8_kernel(m, k, n):
+    """Acceptance: packed dispatch ≡ int8 kernel within 1e-5, escapes incl.
+
+    Codes are clipped to the int8 range for the reference, so drawing them
+    in [-12, 12) exercises real escapes on the packed side while the int8
+    kernel stores them exactly."""
+    x, z, s, t, payload, escapes = _packed_case(m, k, n, seed=m + k + n)
+    out_i8 = dequant_matmul(x, jnp.asarray(z, jnp.int8), s, t,
+                            interpret=True)
+    out_p = dequant_matmul(x, payload, s, t, escapes=escapes, interpret=True)
+    scale = float(jnp.abs(out_i8).max()) + 1e-6
+    assert float(jnp.abs(out_p - out_i8).max()) / scale < 1e-5
+    assert escapes[0].shape[0] > 0        # the sweep actually had escapes
+
+
+def test_packed_dispatches_on_dtype():
+    """dequant_matmul routes uint8 payloads to the packed kernel."""
+    x, z, s, t, payload, escapes = _packed_case(4, 128, 64, seed=5,
+                                                esc=False)
+    via_dispatch = dequant_matmul(x, payload, s, t, interpret=True)
+    direct = dequant_matmul_packed(x, payload, s, t, interpret=True)
+    np.testing.assert_array_equal(np.asarray(via_dispatch),
+                                  np.asarray(direct))
+
+
+def test_packed_xla_path_matches_oracle():
+    x, z, s, t, payload, escapes = _packed_case(6, 200, 96, seed=11)
+    ref = ((x * s[None, :]) @ jnp.asarray(z, jnp.float32).T) * t[None, :]
+    k_even = 2 * payload.shape[1]
+    xp = jnp.pad(x, ((0, 0), (0, k_even - x.shape[1])))
+    sp = jnp.pad(s, (0, k_even - s.shape[0]))
+    out = dequant_matmul_packed_xla(xp, payload, sp, t)
+    from repro.kernels.dequant.ops import _apply_escapes
+    out = _apply_escapes(out, x, s, t, escapes)
+    scale = float(jnp.abs(ref).max()) + 1e-6
+    assert float(jnp.abs(out - ref).max()) / scale < 1e-5
+
+
+def test_packed_escape_correction_exact():
+    """With escapes applied, packed output equals the FULL-code oracle
+    (not the clipped one) — packing loses nothing."""
+    x, z, s, t, payload, escapes = _packed_case(5, 160, 80, seed=21)
+    ref = ((x * s[None, :]) @ jnp.asarray(z, jnp.float32).T) * t[None, :]
+    out = dequant_matmul(x, payload, s, t, escapes=escapes, interpret=True)
     scale = float(jnp.abs(ref).max()) + 1e-6
     assert float(jnp.abs(out - ref).max()) / scale < 1e-5
 

@@ -5,7 +5,9 @@ try:
 except ImportError:  # container without hypothesis (see fallback)
     from _hypothesis_fallback import given, settings, st
 
-from repro.core import pack_codes, pack_int4, unpack_codes, unpack_int4
+from repro.core import (escapes_to_coo, pack_codes, pack_codes_jnp,
+                        pack_int4, pack_int4_planar_jnp, unpack_codes,
+                        unpack_int4, unpack_int4_planar_jnp)
 
 
 def test_int4_roundtrip():
@@ -41,3 +43,78 @@ def test_property_pack_roundtrip(seed, rows, cols, scale):
     for nbits in (4, 8):
         p = pack_codes(z, nbits=nbits)
         np.testing.assert_array_equal(unpack_codes(p), z)
+
+
+def test_storage_bits_exact_with_odd_pad():
+    """Odd-n int4 payload: the pad nibble column must NOT count as payload,
+    and small matrices get uint32 (not int64) escape indices."""
+    z = np.zeros((6, 5), np.int64)           # odd n, no escapes
+    p = pack_codes(z, nbits=4)
+    assert p.payload.shape == (6, 3)          # padded to 6 nibble pairs
+    assert p.storage_bits_per_entry == 4.0    # exact — pad excluded
+    assert p.escape_idx.dtype == np.uint32
+    z[1, 2] = 99
+    p2 = pack_codes(z, nbits=4)
+    # (payload 144 bits − pad column 24 bits + one uint32+int32 escape) / 30
+    assert p2.storage_bits_per_entry == (144 - 24 + 64) / 30
+
+
+def test_escapes_to_coo_matches_packed_delta():
+    rng = np.random.default_rng(7)
+    z = rng.integers(-30, 30, size=(12, 9)).astype(np.int64)
+    p = pack_codes(z, nbits=4)
+    rows, cols, dval = escapes_to_coo(p)
+    body = unpack_codes(
+        pack_codes(np.clip(z, -8, 7), nbits=4)).astype(np.float64)
+    body[rows, cols] += dval
+    np.testing.assert_array_equal(body, z)
+
+
+# ---------------------------------------------------------------------------
+# Device-side (jnp) planar layout — the packed serving path
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), rows=st.integers(1, 24),
+       cols=st.integers(1, 31), scale=st.floats(0.5, 40.0))
+def test_property_device_pack_roundtrip_with_escapes(seed, rows, cols, scale):
+    """pack_codes_jnp: planar payload + escape COO reconstructs z exactly."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    z = (rng.standard_normal((rows, cols)) * scale).round().astype(np.int64)
+    payload, er, ec, ev = pack_codes_jnp(jnp.asarray(z, jnp.int32))
+    body = np.asarray(unpack_int4_planar_jnp(payload))[:, :cols]
+    body = body.astype(np.float64)
+    body[np.asarray(er), np.asarray(ec)] += np.asarray(ev)
+    np.testing.assert_array_equal(body, z)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), rows=st.integers(1, 16),
+       cols=st.integers(1, 12))
+def test_property_device_pack_capacity_padding(seed, rows, cols):
+    """Fixed escape_capacity: excess slots are dval=0 no-ops, truth kept."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    z = rng.integers(-40, 40, size=(rows, cols)).astype(np.int64)
+    cap = int(((np.clip(z, -8, 7) != z).sum()) + 3)
+    payload, er, ec, ev = pack_codes_jnp(jnp.asarray(z, jnp.int32),
+                                         escape_capacity=cap)
+    assert er.shape == (cap,) and ev.shape == (cap,)
+    body = np.asarray(unpack_int4_planar_jnp(payload))[:, :cols]
+    body = body.astype(np.float64)
+    np.add.at(body, (np.asarray(er), np.asarray(ec)), np.asarray(ev))
+    np.testing.assert_array_equal(body, z)
+
+
+def test_planar_pack_matches_paired_values():
+    """Planar and paired layouts store the same codes, different order."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(3)
+    z = rng.integers(-8, 8, size=(5, 10))
+    planar = np.asarray(unpack_int4_planar_jnp(
+        pack_int4_planar_jnp(jnp.asarray(z, jnp.int32))))
+    paired = unpack_int4(pack_int4(z))
+    np.testing.assert_array_equal(planar, z)
+    np.testing.assert_array_equal(paired, z)

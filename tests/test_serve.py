@@ -108,3 +108,87 @@ def test_quantized_weights_serve():
     assert len(done) == 3
     for r in done:
         assert all(0 <= t < CFG.vocab for t in r.out_tokens)
+
+
+def test_packed_int4_weights_serve_match_s4():
+    """Packed planar-uint8 leaves serve end-to-end and decode the SAME
+    greedy tokens as the native-s4 leaf format (identical codes/scales —
+    only the storage layout and matmul path differ)."""
+    base = _params()
+    p_s4 = quantize_params_tree(base, nbits=4)
+    p_packed = quantize_params_tree(base, nbits=4, packed=True)
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, CFG.vocab, 5).astype(np.int32)
+               for _ in range(2)]
+
+    def run(params):
+        eng = ServeEngine(CFG, params, n_slots=2, max_len=24)
+        for i, pr in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=pr.copy(), max_new_tokens=3))
+        return {r.rid: r.out_tokens for r in eng.run_until_done()}
+
+    assert run(p_s4) == run(p_packed)
+
+
+def test_chunked_prefill_bit_identical_and_fewer_calls():
+    """Acceptance: chunked prefill issues ≤ ceil(plen/chunk) device calls
+    with BIT-identical logits/tokens vs the per-token reference path."""
+    params = _params()
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, CFG.vocab, 7).astype(np.int32)
+               for _ in range(2)]
+
+    def run(chunk, count_chunk_calls=False):
+        calls = {"n": 0}
+        kw = {}
+        if count_chunk_calls:
+            from repro.models import decode_chunk
+            base = jax.jit(lambda p, c, tk: decode_chunk(CFG, p, c, tk))
+
+            def counting(p, c, tk):
+                calls["n"] += 1
+                return base(p, c, tk)
+            kw["decode_chunk_fn"] = counting
+        eng = ServeEngine(CFG, params, n_slots=2, max_len=32,
+                          prefill_chunk=chunk, **kw)
+        for i, pr in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=pr.copy(), max_new_tokens=4))
+        done = {r.rid: r.out_tokens for r in eng.run_until_done()}
+        return done, eng.round_stats[0], calls["n"]
+
+    ref, st_ref, _ = run(None)
+    assert st_ref.prefill_calls == 7                  # per-token reference
+    for chunk in (1, 3, 4, 7, 16):
+        out, st, n_calls = run(chunk, count_chunk_calls=True)
+        assert out == ref, chunk                      # same greedy tokens
+        assert st.prefill_calls == -(-7 // chunk), chunk
+        assert n_calls == st.prefill_calls            # hooks count devices
+
+    # logits bit-exactness of the chunk primitive itself
+    from repro.models import decode_chunk
+    toks = jnp.asarray(prompts[0][None, :])
+    cache = init_cache(CFG, 1, 32, jnp.float32)
+    lg_tok = None
+    step = jax.jit(lambda p, c, tk: decode_step(CFG, p, c, tk))
+    for t in range(toks.shape[1]):
+        lg_tok, cache = step(params, cache, toks[:, t:t + 1])
+    lg_chunk, cache2 = jax.jit(
+        lambda p, c, tk: decode_chunk(CFG, p, c, tk))(
+            params, init_cache(CFG, 1, 32, jnp.float32), toks)
+    assert jnp.array_equal(lg_tok, lg_chunk)
+    for a, b in zip(jax.tree.leaves(cache), jax.tree.leaves(cache2)):
+        assert jnp.array_equal(a, b)
+
+
+def test_round_stats_timing_hooks():
+    params = _params()
+    rng = np.random.default_rng(6)
+    eng = ServeEngine(CFG, params, n_slots=2, max_len=32, prefill_chunk=4)
+    eng.submit(Request(rid=0, prompt=rng.integers(0, CFG.vocab, 6)
+                       .astype(np.int32), max_new_tokens=3))
+    eng.run_until_done()
+    (st,) = eng.round_stats
+    assert st.batch == 1 and st.prompt_len == 6
+    assert st.prefill_calls == 2 and st.decode_calls == 2
+    assert st.new_tokens == 3
+    assert st.prefill_s > 0 and st.decode_s > 0
