@@ -1,8 +1,8 @@
-"""Serving benchmark: tokens/s + modeled HBM bytes/weight per weight format.
+"""Serving benchmark: weight-format ladder + scheduler comparison.
 
-Runs the static-batching ServeEngine (chunked prefill, DESIGN.md §8) over
-the same request set with bf16, int8-code, and packed-int4 weights and
-reports, per format:
+Part 1 (ladder): runs the static-batching ServeEngine (chunked prefill,
+DESIGN.md §8) over the same request set with bf16, int8-code, and
+packed-int4 weights and reports, per format:
 
   * decode tokens/s (greedy generation wall clock, per-round timing hooks),
   * prefill device calls (ceil(prompt_len/chunk) with chunking),
@@ -10,8 +10,17 @@ reports, per format:
     quantized formats shrink (measured from the actual param tree via
     quant.qweight_bytes, so scale vectors and escape COO overhead count).
 
+Part 2 (scheduler): a mixed-prompt-length, mixed-budget workload with
+Poisson arrivals driven through the static-rounds engine and the
+continuous-batching engine (DESIGN.md §9), reporting end-to-end tokens/s
+and p50/p99 TTFT.  Static rounds head-of-line-block mixed-length traffic
+(each round admits one equal-length group and pays the round's max budget
+in decode dispatches); continuous batching refills slots mid-flight, so
+it must win tokens/s on this workload — asserted below.
+
 CPU wall-clock is NOT the TPU story (the dry-run roofline is); the bytes
-model is the hardware-portable claim.
+model is the hardware-portable claim.  The scheduler comparison is
+dispatch-count-structural, so it survives the backend change.
 
     python benchmarks/serve_bench.py [--quick]
 """
@@ -23,9 +32,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.models import init_params, split_tree
+from repro.models import decode_chunk, decode_step, init_params, split_tree
 from repro.quant import quantize_params_tree, qweight_bytes
-from repro.serve import Request, ServeEngine
+from repro.serve import ContinuousEngine, Request, ServeEngine
 
 
 def _engine_run(cfg, params, prompts, max_new, chunk):
@@ -44,6 +53,113 @@ def _engine_run(cfg, params, prompts, max_new, chunk):
             "prefill_calls": st.prefill_calls,
             "prefill_s": st.prefill_s,
             "out": {r.rid: tuple(r.out_tokens) for r in done}}
+
+
+# ---------------------------------------------------------------------------
+# Part 2 — scheduler comparison (static rounds vs continuous batching)
+# ---------------------------------------------------------------------------
+
+
+def _mixed_workload(cfg, quick):
+    """Mixed lengths + skewed budgets + Poisson arrivals.
+
+    Budget skew is the static scheduler's structural weakness: each
+    equal-length round pays max(budgets) decode dispatches while its short
+    requests idle; continuous batching backfills those slots.
+    """
+    rng = np.random.default_rng(7)
+    if quick:
+        # every equal-length pair holds one long and one short budget, so a
+        # static round always pays the long budget while its short slot idles
+        plens = [4, 6, 8, 10, 4, 6, 8, 10]
+        budgets = [24, 2, 24, 2, 2, 24, 2, 24]
+        mean_gap_s = 0.002
+    else:
+        # six distinct lengths × 2 against 4 slots: static rounds can never
+        # fill their batch, continuous packs slots regardless of length
+        plens = [8, 10, 12, 14, 16, 18, 8, 10, 12, 14, 16, 18]
+        budgets = [24, 2, 24, 2, 24, 2, 2, 24, 2, 24, 2, 24]
+        mean_gap_s = 0.005
+    prompts = [rng.integers(0, cfg.vocab, p).astype(np.int32) for p in plens]
+    arrivals = np.cumsum(rng.exponential(mean_gap_s, len(plens)))
+    return prompts, budgets, arrivals
+
+
+def _drive(eng, prompts, budgets, arrivals):
+    """Feed requests at their (simulated) arrival times; run to drain.
+
+    Arrival timestamps are pinned to the simulated schedule so TTFT counts
+    queue wait from the *arrival*, not from submit.
+    """
+    reqs = [Request(rid=i, prompt=p.copy(), max_new_tokens=b)
+            for i, (p, b) in enumerate(zip(prompts, budgets))]
+    continuous = isinstance(eng, ContinuousEngine)
+    n = len(reqs)
+    i = 0
+    t0 = time.perf_counter()
+
+    def busy():
+        return bool(eng.queue) or (continuous and eng.active_slots > 0)
+
+    while i < n or busy():
+        now = time.perf_counter() - t0
+        while i < n and arrivals[i] <= now:
+            reqs[i].arrival_s = t0 + arrivals[i]
+            eng.submit(reqs[i])
+            i += 1
+        if busy():
+            eng.step() if continuous else eng.run_round()
+        elif i < n:
+            time.sleep(min(arrivals[i] - now, 5e-4))
+    wall = time.perf_counter() - t0
+    assert all(r.done for r in reqs)
+    toks = sum(len(r.out_tokens) for r in reqs)
+    ttft = np.array([r.ttft_s for r in reqs])
+    return {"tok_s": toks / wall, "wall_s": wall, "tokens": toks,
+            "ttft_p50": float(np.percentile(ttft, 50)),
+            "ttft_p99": float(np.percentile(ttft, 99)),
+            "out": {r.rid: tuple(r.out_tokens) for r in reqs}}
+
+
+def scheduler_compare(rows_out, cfg, params, quick=False):
+    prompts, budgets, arrivals = _mixed_workload(cfg, quick)
+    n_slots = 4
+    max_len = max(len(p) for p in prompts) + max(budgets) + 2
+    chunk = 4 if quick else 8
+    # one shared pair of jitted decode fns: both schedulers (and the warmup
+    # pass) reuse the same compile cache, so the timed run is compile-free
+    shared = dict(
+        decode_fn=jax.jit(
+            lambda p, c, t: decode_step(cfg, p, c, t)),
+        decode_chunk_fn=jax.jit(
+            lambda p, c, tk: decode_chunk(cfg, p, c, tk)))
+
+    def make(cls):
+        return cls(cfg, params, n_slots=n_slots, max_len=max_len,
+                   prefill_chunk=chunk, **shared)
+
+    results = {}
+    for name, cls in (("static", ServeEngine),
+                      ("continuous", ContinuousEngine)):
+        # admission burst sizes depend on wall-clock arrival timing, so a
+        # timed run can hit a prefill batch shape the warmup never
+        # compiled; best-of-N absorbs that (and OS noise) for both engines
+        _drive(make(cls), prompts, budgets, arrivals)          # warm compile
+        res = max((_drive(make(cls), prompts, budgets, arrivals)
+                   for _ in range(3)), key=lambda r: r["tok_s"])
+        results[name] = res
+        rows_out.append((
+            f"sched/{name}", res["tok_s"],
+            f"tokens={res['tokens']};wall_s={res['wall_s']:.3f};"
+            f"ttft_p50_ms={res['ttft_p50']*1e3:.1f};"
+            f"ttft_p99_ms={res['ttft_p99']*1e3:.1f}"))
+    # both schedulers emit identical greedy token streams (differential
+    # invariant) and continuous batching must beat static rounds on
+    # end-to-end tokens/s for mixed-length traffic (ISSUE acceptance)
+    assert results["continuous"]["out"] == results["static"]["out"]
+    assert results["continuous"]["tok_s"] > results["static"]["tok_s"], \
+        (results["continuous"]["tok_s"], results["static"]["tok_s"])
+    return results
 
 
 def run(rows_out, quick=False):
@@ -83,6 +199,7 @@ def run(rows_out, quick=False):
     assert results["bf16"]["prefill_calls"] == -(-plen // chunk)
     assert results["int4_packed"]["bytes_per_w"] < results["int8"][
         "bytes_per_w"] < 2.0
+    results["sched"] = scheduler_compare(rows_out, cfg, params, quick=quick)
     return results
 
 

@@ -143,7 +143,10 @@ def random_covariance(n: int, *, condition: float = 100.0,
       * "log-linear" — eigenvalues log-spaced between 1 and 1/condition,
       * "two-level"  — half the spectrum at 1, half at 1/condition (makes the
         AMGM term large → GPTQ gap blow-up of §3),
-      * "flat"       — identity spectrum (GPTQ and WaterSIC coincide).
+      * "flat"       — identity spectrum (GPTQ and WaterSIC coincide),
+      * "heavy-tail" — power law λ_i = i^{-p} with p set so λ_n = 1/condition
+        (a slowly decaying bulk with a long tail — the activation-covariance
+        shape the rate-gap property tests sweep).
     Eigenvectors are a random rotation (Haar via QR).
     """
     rng = np.random.default_rng(seed)
@@ -153,6 +156,9 @@ def random_covariance(n: int, *, condition: float = 100.0,
         lam = np.where(np.arange(n) < n // 2, 1.0, 1.0 / condition)
     elif decay == "flat":
         lam = np.ones(n)
+    elif decay == "heavy-tail":
+        p = math.log(condition) / math.log(n)
+        lam = np.arange(1, n + 1, dtype=np.float64) ** (-p)
     else:
         raise ValueError(f"unknown decay {decay!r}")
     q, _ = np.linalg.qr(rng.standard_normal((n, n)))

@@ -2,8 +2,13 @@
 WaterSIC-quantized weights — int8 codes or the packed-int4 serving format
 (planar nibble payload + escape COO, DESIGN.md §8).
 
+``--continuous`` swaps the static-rounds scheduler for the
+continuous-batching engine (per-slot decode streams with in-flight
+admission, DESIGN.md §9); the static path stays the default and the
+differential reference.
+
     PYTHONPATH=src python -m repro.launch.serve --arch minicpm-2b --reduced \
-        --requests 6 --wbits 4 --prefill-chunk 8
+        --requests 6 --wbits 4 --prefill-chunk 8 --continuous
 """
 from __future__ import annotations
 
@@ -19,7 +24,7 @@ from repro.dist.sharding import use_mesh
 from repro.launch.mesh import make_host_mesh
 from repro.models import init_params, split_tree
 from repro.quant import quantize_params_tree, qweight_bytes
-from repro.serve import Request, ServeEngine
+from repro.serve import ContinuousEngine, Request, ServeEngine
 
 
 def main(argv=None):
@@ -33,6 +38,9 @@ def main(argv=None):
     ap.add_argument("--wbits", type=int, default=16, choices=[16, 8, 4])
     ap.add_argument("--prefill-chunk", type=int, default=8,
                     help="tokens per prefill device call (0 = per-token)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching (per-slot decode streams, "
+                         "in-flight admission) instead of static rounds")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -53,9 +61,10 @@ def main(argv=None):
             qb, fb = qweight_bytes(params)
             print(f"  param bytes {qb/1e6:.2f} MB vs bf16 {fb/1e6:.2f} MB "
                   f"({fb/max(qb,1):.2f}x HBM win)")
-        eng = ServeEngine(cfg, params, n_slots=args.slots,
-                          max_len=args.prompt_len + args.max_new + 2,
-                          prefill_chunk=args.prefill_chunk or None)
+        cls = ContinuousEngine if args.continuous else ServeEngine
+        eng = cls(cfg, params, n_slots=args.slots,
+                  max_len=args.prompt_len + args.max_new + 2,
+                  prefill_chunk=args.prefill_chunk or None)
         for i in range(args.requests):
             eng.submit(Request(
                 rid=i,
@@ -66,13 +75,26 @@ def main(argv=None):
         done = eng.run_until_done()
         dt = time.time() - t0
         total_tokens = sum(len(r.out_tokens) for r in done)
+        sched = "continuous" if args.continuous else "static"
         print(f"served {len(done)} requests, {total_tokens} tokens "
-              f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s)")
-        for st in eng.round_stats:
-            print(f"  round: b={st.batch} plen={st.prompt_len} "
-                  f"prefill={st.prefill_calls} calls/{st.prefill_s*1e3:.0f}ms "
-                  f"decode={st.decode_calls} calls/{st.decode_s*1e3:.0f}ms "
-                  f"new={st.new_tokens}")
+              f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s, {sched})")
+        if args.continuous:
+            print(f"  steps={len(eng.step_stats)} "
+                  f"prefill={eng.prefill_calls} calls/"
+                  f"{eng.prefill_s*1e3:.0f}ms "
+                  f"decode={eng.decode_calls} calls/"
+                  f"{eng.decode_s*1e3:.0f}ms")
+        else:
+            for st in eng.round_stats:
+                print(f"  round: b={st.batch} plen={st.prompt_len} "
+                      f"prefill={st.prefill_calls} calls/"
+                      f"{st.prefill_s*1e3:.0f}ms "
+                      f"decode={st.decode_calls} calls/"
+                      f"{st.decode_s*1e3:.0f}ms new={st.new_tokens}")
+        ttfts = sorted(r.ttft_s for r in done if r.ttft_s is not None)
+        if ttfts:
+            p50 = ttfts[len(ttfts) // 2]
+            print(f"  TTFT p50={p50*1e3:.0f}ms max={ttfts[-1]*1e3:.0f}ms")
         for r in done[:4]:
             print(f"  rid={r.rid} out={r.out_tokens[:8]}")
         return done

@@ -1,9 +1,9 @@
 """repro.models — unified model zoo for the assigned architectures."""
-from .transformer import (decode_chunk, decode_step, forward_train,
-                          init_cache, init_params, loss_fn, param_specs_tree,
-                          prefill)
+from .transformer import (cache_reset_slot, cache_write_slot, decode_chunk,
+                          decode_step, forward_train, init_cache, init_params,
+                          loss_fn, param_specs_tree, prefill)
 from .layers import split_tree
 
-__all__ = ["decode_chunk", "decode_step", "forward_train", "init_cache",
-           "init_params", "loss_fn", "param_specs_tree", "prefill",
-           "split_tree"]
+__all__ = ["cache_reset_slot", "cache_write_slot", "decode_chunk",
+           "decode_step", "forward_train", "init_cache", "init_params",
+           "loss_fn", "param_specs_tree", "prefill", "split_tree"]

@@ -355,20 +355,38 @@ def attention_decode(p, x_t, cache: KVCache, pos, *, n_q, n_kv, head_dim,
                      use_rope=True):
     """Single-token decode against a (ring-buffered) cache.
 
-    x_t: (B, 1, d); pos: scalar int32 — absolute position of this token.
-    For local attention the buffer length equals the window and indexing is
-    mod-window; entries older than ``window`` are masked out by recency.
+    x_t: (B, 1, d); pos: absolute position of this token — either a scalar
+    int32 (lockstep: every batch row sits at the same offset) or a (B,)
+    int32 vector (continuous batching, DESIGN.md §9: each *slot* carries its
+    own position, so slots at different sequence offsets decode in one
+    dispatch).  For local attention the buffer length equals the window and
+    indexing is mod-window; entries older than ``window`` are masked out by
+    recency.
     """
     b = x_t.shape[0]
     buf = cache.k.shape[1]
+    pos = jnp.asarray(pos)
+    per_slot = pos.ndim == 1
     q = _split_heads(dense(p["wq"], x_t), n_q, head_dim)
     k_t = _split_heads(dense(p["wk"], x_t), n_kv, head_dim)
     v_t = _split_heads(dense(p["wv"], x_t), n_kv, head_dim)
-    posv = jnp.full((b, 1), pos)
+    posv = pos[:, None] if per_slot else jnp.full((b, 1), pos)
     if use_rope:
         q = rope(q, posv, rope_theta)
         k_t = rope(k_t, posv, rope_theta)
     slot = pos % buf if window is not None else pos
+    if per_slot:
+        # one scatter row per batch element, each at its own slot; a row
+        # whose slot is out of range (an idle serving slot stepped past the
+        # buffer) is dropped by the scatter, never clamped onto live data
+        rows = jnp.arange(b)
+
+        def upd(big, new):
+            return big.at[rows, slot].set(new[:, 0].astype(big.dtype))
+    else:
+        def upd(big, new):
+            return jax.lax.dynamic_update_slice_in_dim(
+                big, new.astype(big.dtype), slot, axis=1)
     int8_kv = cache.k.dtype == jnp.int8
     k_scale, v_scale = cache.k_scale, cache.v_scale
     if int8_kv:
@@ -379,17 +397,13 @@ def attention_decode(p, x_t, cache: KVCache, pos, *, n_q, n_kv, head_dim,
                     s_t.astype(jnp.float32))
         k_t_c, ks_t = q8(k_t)
         v_t_c, vs_t = q8(v_t)
-        k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_t_c, slot, axis=1)
-        v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_t_c, slot, axis=1)
-        k_scale = jax.lax.dynamic_update_slice_in_dim(
-            cache.k_scale, ks_t, slot, axis=1)
-        v_scale = jax.lax.dynamic_update_slice_in_dim(
-            cache.v_scale, vs_t, slot, axis=1)
+        k = upd(cache.k, k_t_c)
+        v = upd(cache.v, v_t_c)
+        k_scale = upd(cache.k_scale, ks_t)
+        v_scale = upd(cache.v_scale, vs_t)
     else:
-        k = jax.lax.dynamic_update_slice_in_dim(
-            cache.k, k_t.astype(cache.k.dtype), slot, axis=1)
-        v = jax.lax.dynamic_update_slice_in_dim(
-            cache.v, v_t.astype(cache.v.dtype), slot, axis=1)
+        k = upd(cache.k, k_t)
+        v = upd(cache.v, v_t)
     from repro.dist.sharding import current_mesh
     from repro.opts import enabled as _opt
     mesh = current_mesh()
@@ -407,14 +421,23 @@ def attention_decode(p, x_t, cache: KVCache, pos, *, n_q, n_kv, head_dim,
     v_eff = (v.astype(q.dtype) * v_scale.astype(q.dtype)) if int8_kv else v
     scores = _attn_scores(q, k_eff, 1.0 / math.sqrt(head_dim))  # (B,nkv,G,1,buf)
     idx = jnp.arange(buf)
-    if window is not None:
-        # entry j holds absolute position: j + buf*floor((pos - j)/buf) — valid
-        # iff its absolute position ∈ (pos-window, pos]
-        age = (slot - idx) % buf
-        valid = age < jnp.minimum(pos + 1, buf)
+    if per_slot:
+        # (B, buf) mask: every slot masks by ITS OWN position
+        if window is not None:
+            age = (slot[:, None] - idx[None, :]) % buf
+            valid = age < jnp.minimum(pos[:, None] + 1, buf)
+        else:
+            valid = idx[None, :] <= pos[:, None]
+        scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
     else:
-        valid = idx <= pos
-    scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+        if window is not None:
+            # entry j holds absolute position: j + buf*floor((pos - j)/buf) —
+            # valid iff its absolute position ∈ (pos-window, pos]
+            age = (slot - idx) % buf
+            valid = age < jnp.minimum(pos + 1, buf)
+        else:
+            valid = idx <= pos
+        scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
     probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
     out = _attn_out(probs.astype(x_t.dtype), v_eff)
     out = dense(p["wo"], out)

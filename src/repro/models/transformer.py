@@ -39,7 +39,8 @@ from .layers import (KVCache, KeyGen, Px, attention_decode, attention_init,
                      sinusoidal_positions, split_tree, unembed)
 
 __all__ = ["init_params", "forward_train", "loss_fn", "prefill", "init_cache",
-           "decode_step", "param_specs_tree"]
+           "decode_step", "param_specs_tree", "cache_write_slot",
+           "cache_reset_slot"]
 
 
 def _norm_init(cfg, d=None):
@@ -358,7 +359,9 @@ def loss_fn(cfg: ArchConfig, params, batch) -> jnp.ndarray:
 
 class DecodeCache(NamedTuple):
     kv: Any                   # per-family state (stacked over layers)
-    pos: jnp.ndarray          # scalar int32 current position
+    pos: jnp.ndarray          # int32 current position: scalar (lockstep
+                              # static batching) or (B,) per-slot vector
+                              # (continuous batching, DESIGN.md §9)
     extras: Any = ()          # enc-dec: (enc_k, enc_v) stacked; else ()
 
 
@@ -376,11 +379,17 @@ def _kv_buf(cfg, batch, buf_len, dtype, n_layers=None):
 
 
 def init_cache(cfg: ArchConfig, batch: int, max_len: int,
-               dtype=jnp.bfloat16) -> DecodeCache:
+               dtype=jnp.bfloat16, *, per_slot: bool = False) -> DecodeCache:
+    """Fresh decode cache.  ``per_slot=True`` makes ``pos`` a (batch,) int32
+    vector — one independent position counter per serving slot (continuous
+    batching, DESIGN.md §9) — instead of the scalar lockstep counter.  Slot
+    state is refreshed by :func:`cache_write_slot` (admission graft) and
+    :func:`cache_reset_slot` (eviction)."""
+    pos0 = (jnp.zeros((batch,), jnp.int32) if per_slot
+            else jnp.zeros((), jnp.int32))
     if cfg.family in ("dense", "moe", "vlm"):
         buf = min(max_len, cfg.local_window) if cfg.local_window else max_len
-        return DecodeCache(_kv_buf(cfg, batch, buf, dtype),
-                           jnp.zeros((), jnp.int32))
+        return DecodeCache(_kv_buf(cfg, batch, buf, dtype), pos0)
     if cfg.family == "ssm":
         h = cfg.d_model // cfg.wkv_head_dim
         st = rk.RWKVState(
@@ -388,7 +397,7 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int,
             cm_shift=jnp.zeros((cfg.n_layers, batch, cfg.d_model), dtype),
             wkv=jnp.zeros((cfg.n_layers, batch, h, cfg.wkv_head_dim,
                            cfg.wkv_head_dim), jnp.float32))
-        return DecodeCache(st, jnp.zeros((), jnp.int32))
+        return DecodeCache(st, pos0)
     if cfg.family == "hybrid":
         pat = cfg.block_pattern
         types = cfg._layer_types()
@@ -400,15 +409,58 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int,
         rec = rg.RGLRUState(
             h=jnp.zeros((n_rec, batch, lru), dtype),
             conv=jnp.zeros((n_rec, batch, cfg.conv_width - 1, lru), dtype))
-        return DecodeCache({"kv": kv, "rec": rec},
-                           jnp.zeros((), jnp.int32))
+        return DecodeCache({"kv": kv, "rec": rec}, pos0)
     if cfg.family == "encdec":
         kv = _kv_buf(cfg, batch, max_len, dtype)
         ek_shape = (cfg.n_layers, batch, cfg.enc_seq, cfg.n_kv,
                     cfg.resolved_head_dim)
         extras = (jnp.zeros(ek_shape, dtype), jnp.zeros(ek_shape, dtype))
-        return DecodeCache(kv, jnp.zeros((), jnp.int32), extras)
+        return DecodeCache(kv, pos0, extras)
     raise ValueError(cfg.family)
+
+
+def cache_write_slot(cache: DecodeCache, sub: DecodeCache,
+                     slot) -> DecodeCache:
+    """Graft a batch-1 ``sub`` cache into row ``slot`` of a per-slot cache.
+
+    Admission primitive of the continuous engine (DESIGN.md §9): a new
+    request is prefilled on its own batch-1 cache (via decode_chunk, exact
+    w.r.t. the per-token reference) and its state rows are copied into the
+    free slot, leaving every other slot's state untouched.  All state leaves
+    carry batch on axis 1 (layer-stacked); ``pos`` carries batch on axis 0.
+    ``slot`` may be a traced int32 — one jit covers all slots.
+    """
+    assert cache.pos.ndim == 1, "cache_write_slot needs a per-slot cache"
+
+    def graft(big, small):
+        return jax.lax.dynamic_update_slice_in_dim(
+            big, small.astype(big.dtype), slot, axis=1)
+
+    kv = jax.tree.map(graft, cache.kv, sub.kv)
+    extras = jax.tree.map(graft, cache.extras, sub.extras)
+    sub_pos = sub.pos if sub.pos.ndim == 0 else sub.pos[0]
+    pos = cache.pos.at[slot].set(sub_pos.astype(jnp.int32))
+    return DecodeCache(kv, pos, extras)
+
+
+def cache_reset_slot(cache: DecodeCache, slot) -> DecodeCache:
+    """Zero row ``slot`` of a per-slot cache (eviction hygiene).
+
+    Functionally optional — a freed slot's stale K/V rows are never attended
+    to (its position mask resets on the next graft) — but zeroing keeps the
+    idle slot's position at 0 so it re-writes its own row instead of
+    scattering past the buffer, and makes state leaks impossible rather than
+    merely masked.
+    """
+    assert cache.pos.ndim == 1, "cache_reset_slot needs a per-slot cache"
+
+    def zero(big):
+        row = jnp.zeros(big.shape[:1] + (1,) + big.shape[2:], big.dtype)
+        return jax.lax.dynamic_update_slice_in_dim(big, row, slot, axis=1)
+
+    kv = jax.tree.map(zero, cache.kv)
+    extras = jax.tree.map(zero, cache.extras)
+    return DecodeCache(kv, cache.pos.at[slot].set(0), extras)
 
 
 def prefill(cfg: ArchConfig, params, batch, max_len: int,
@@ -737,9 +789,14 @@ def decode_step(cfg: ArchConfig, params, cache: DecodeCache, token,
 
     if cfg.family == "encdec":
         enc_k, enc_v = cache.extras
-        pos_emb = jax.lax.dynamic_slice_in_dim(
-            params["dec_pos"], pos % params["dec_pos"].shape[0], 1, axis=0)
-        x = x + pos_emb[None].astype(x.dtype)
+        n_pos = params["dec_pos"].shape[0]
+        if jnp.ndim(pos) == 1:          # per-slot: one table row per slot
+            pos_emb = jnp.take(params["dec_pos"], pos % n_pos,
+                               axis=0)[:, None]
+        else:
+            pos_emb = jax.lax.dynamic_slice_in_dim(
+                params["dec_pos"], pos % n_pos, 1, axis=0)[None]
+        x = x + pos_emb.astype(x.dtype)
 
         def body(carry, lps):
             h, = carry

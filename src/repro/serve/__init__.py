@@ -1,3 +1,5 @@
-from .engine import Request, RoundStats, ServeEngine
+from .engine import (ContinuousEngine, Request, RoundStats, ServeEngine,
+                     StepStats)
 
-__all__ = ["Request", "RoundStats", "ServeEngine"]
+__all__ = ["ContinuousEngine", "Request", "RoundStats", "ServeEngine",
+           "StepStats"]

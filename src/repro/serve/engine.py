@@ -1,13 +1,27 @@
-"""Batched serving engine (static batching rounds).
+"""Batched serving engines: static rounds + continuous batching.
 
-Requests queue in; each *round* admits up to ``n_slots`` requests with equal
-prompt length (the queue is grouped by length), prefills them in lockstep
-(exact w.r.t. the cache), then generates greedily until every admitted
-request hits its token budget.  Rounds are independent: the cache is
-re-initialized per round, so no state leaks between requests.  Continuous
-batching (per-slot positions) is listed as future work in DESIGN.md; static
-rounds keep the reference engine exactly equivalent to the tested decode
-path.
+Two schedulers share the decode path (DESIGN.md §6/§9):
+
+  * :class:`ServeEngine` — static batching rounds.  Requests queue in; each
+    *round* admits up to ``n_slots`` requests with equal prompt length (the
+    queue is grouped by length), prefills them in lockstep (exact w.r.t.
+    the cache), then generates greedily until every admitted request hits
+    its token budget.  Rounds are independent: the cache is re-initialized
+    per round, so no state leaks between requests.  This engine stays
+    deliberately simple — it is the *differential-testing oracle* the
+    continuous engine is fuzzed against (DESIGN.md §9).
+
+  * :class:`ContinuousEngine` — continuous batching.  The KV cache is
+    slot-indexed with per-slot position counters and per-slot attention
+    masks (models.init_cache(per_slot=True)), so slots at different
+    sequence offsets decode in ONE lockstep dispatch.  Finished slots are
+    evicted and refilled mid-flight from the queue: an admission burst is
+    co-prefilled over its common prefix via ``decode_chunk`` (bit-exact vs
+    the per-token path), ragged tails finish per-row, and each row is
+    grafted into its free slot with ``models.cache_write_slot`` while the
+    other slots keep their state.  No equal-length grouping, no
+    head-of-line blocking, no idle slots waiting for the longest request
+    in a round.
 
 Prefill has two modes (DESIGN.md §8):
 
@@ -20,9 +34,13 @@ Prefill has two modes (DESIGN.md §8):
     chunk shape jits once; a prompt costs at most two shapes (full chunks +
     one remainder).
 
-Per-round timing hooks land in ``engine.round_stats`` (prefill/decode wall
-clock and device-call counts) — the source for benchmarks/serve_bench.py's
-tokens/s and HBM-bytes/weight report.
+Requests carry arrival timestamps; both engines stamp first-token and
+finish times, so ``Request.ttft_s`` / ``Request.tpot_s`` give per-request
+time-to-first-token and time-per-output-token — the latency axes
+benchmarks/serve_bench.py reports p50/p99 over.  Per-round timing hooks
+land in ``engine.round_stats`` (static) / ``engine.step_stats``
+(continuous); ``prefill_s`` is device wall-clock up to the last prefill
+logits being ready — the host-side argmax transfer is decode-side.
 
 Weights may be served dequantized-on-the-fly from WaterSIC int codes
 (quant/qlinear) — the paper's deployment story: decode is weight-bytes
@@ -42,9 +60,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.models import decode_chunk, decode_step, init_cache
+from repro.models import (cache_reset_slot, cache_write_slot, decode_chunk,
+                          decode_step, init_cache)
 
-__all__ = ["Request", "RoundStats", "ServeEngine"]
+__all__ = ["Request", "RoundStats", "StepStats", "ServeEngine",
+           "ContinuousEngine"]
 
 
 @dataclasses.dataclass
@@ -54,6 +74,26 @@ class Request:
     max_new_tokens: int = 16
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # latency accounting (perf_counter seconds; stamped by the engines)
+    arrival_s: Optional[float] = None      # set by submit() if unset
+    first_token_s: Optional[float] = None  # first output token materialized
+    finish_s: Optional[float] = None       # budget filled
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        """Time to first token: queue wait + prefill + first argmax."""
+        if self.arrival_s is None or self.first_token_s is None:
+            return None
+        return self.first_token_s - self.arrival_s
+
+    @property
+    def tpot_s(self) -> Optional[float]:
+        """Mean time per output token after the first (None if < 2 tokens)."""
+        if self.first_token_s is None or self.finish_s is None \
+                or len(self.out_tokens) < 2:
+            return None
+        return (self.finish_s - self.first_token_s) \
+            / (len(self.out_tokens) - 1)
 
 
 @dataclasses.dataclass
@@ -63,13 +103,55 @@ class RoundStats:
     batch: int
     prompt_len: int
     prefill_calls: int               # device dispatches spent on the prompt
-    prefill_s: float
+    prefill_s: float                 # up to last prefill logits ready (the
+                                     # host argmax transfer is decode-side)
     decode_calls: int                # generation decode dispatches
     decode_s: float
     new_tokens: int                  # tokens emitted across the batch
+    ttft_s: List[float] = dataclasses.field(default_factory=list)
+    tpot_s: List[float] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class StepStats:
+    """One continuous-batching scheduler step (DESIGN.md §9)."""
+
+    active: int                      # slots decoding this step
+    admitted: int                    # requests admitted before the dispatch
+    finished: int                    # requests evicted after the dispatch
+    new_tokens: int                  # tokens emitted (admission + decode)
+    step_s: float                    # wall clock of the whole step
+
+
+def _run_prefill(decode_fn, decode_chunk_fn, params, cache,
+                 prompts: np.ndarray, chunk: Optional[int]):
+    """Feed the prompt through the cache; returns (logits, cache, calls).
+
+    Chunked mode issues ceil(plen/chunk) decode_chunk dispatches (each a
+    scanned run of decode_step — bit-exact vs per-token); per-token mode
+    is the plen-dispatch reference path.  Shared by both engines so the
+    prefill semantics can never drift between the oracle and the
+    continuous scheduler.
+    """
+    plen = prompts.shape[1]
+    logits = None
+    calls = 0
+    if chunk and plen > 1:
+        for s0 in range(0, plen, chunk):
+            seg = jnp.asarray(prompts[:, s0:s0 + chunk])
+            logits, cache = decode_chunk_fn(params, cache, seg)
+            calls += 1
+    else:
+        for t in range(plen):               # lockstep exact prefill
+            logits, cache = decode_fn(params, cache,
+                                      jnp.asarray(prompts[:, t:t + 1]))
+            calls += 1
+    return logits, cache, calls
 
 
 class ServeEngine:
+    """Static-batching rounds — the reference scheduler (DESIGN.md §6)."""
+
     def __init__(self, cfg: ArchConfig, params, *, n_slots: int = 4,
                  max_len: int = 256, cache_dtype=jnp.float32,
                  decode_fn: Optional[Callable] = None,
@@ -90,6 +172,8 @@ class ServeEngine:
                                                      toks))
 
     def submit(self, req: Request) -> None:
+        if req.arrival_s is None:
+            req.arrival_s = time.perf_counter()
         self.queue.append(req)
 
     def _admit(self) -> List[Request]:
@@ -109,27 +193,8 @@ class ServeEngine:
         return admitted
 
     def _prefill(self, cache, prompts: np.ndarray):
-        """Feed the prompt through the cache; returns (logits, cache, calls).
-
-        Chunked mode issues ceil(plen/chunk) decode_chunk dispatches (each a
-        scanned run of decode_step — bit-exact vs per-token); per-token mode
-        is the plen-dispatch reference path.
-        """
-        plen = prompts.shape[1]
-        logits = None
-        calls = 0
-        if self.prefill_chunk and plen > 1:
-            c = self.prefill_chunk
-            for s0 in range(0, plen, c):
-                seg = jnp.asarray(prompts[:, s0:s0 + c])
-                logits, cache = self._decode_chunk(self.params, cache, seg)
-                calls += 1
-        else:
-            for t in range(plen):               # lockstep exact prefill
-                logits, cache = self._decode(self.params, cache,
-                                             jnp.asarray(prompts[:, t:t + 1]))
-                calls += 1
-        return logits, cache, calls
+        return _run_prefill(self._decode, self._decode_chunk, self.params,
+                            cache, prompts, self.prefill_chunk)
 
     def run_round(self) -> List[Request]:
         """One static-batching round; returns the finished requests."""
@@ -145,8 +210,11 @@ class ServeEngine:
         prompts = np.stack([r.prompt for r in batch]).astype(np.int32)
         t0 = time.perf_counter()
         logits, cache, prefill_calls = self._prefill(cache, prompts)
+        jax.block_until_ready(logits)
+        t1 = time.perf_counter()   # BEFORE the host argmax transfer: the
+        # transfer + argmax consume the first generated token, so they are
+        # decode-side work, not prompt work.
         last = np.argmax(np.asarray(logits), axis=-1).astype(np.int32)
-        t1 = time.perf_counter()
         # Budget-exact generation: consume `last` first, decode only while
         # some request still has budget left.  Each slot stops at exactly
         # its own max_new_tokens (mixed budgets share the batch; finished
@@ -155,9 +223,14 @@ class ServeEngine:
         # whose logits nobody consumes.
         decode_steps = 0
         while True:
+            t_tok = time.perf_counter()
             for i, r in enumerate(batch):
                 if len(r.out_tokens) < r.max_new_tokens:
                     r.out_tokens.append(int(last[i]))
+                    if r.first_token_s is None:
+                        r.first_token_s = t_tok
+                    if len(r.out_tokens) >= r.max_new_tokens:
+                        r.finish_s = t_tok
             if all(len(r.out_tokens) >= r.max_new_tokens for r in batch):
                 break
             assert decode_steps < budget, "decode loop exceeded round budget"
@@ -169,7 +242,9 @@ class ServeEngine:
         self.round_stats.append(RoundStats(
             batch=b, prompt_len=plen, prefill_calls=prefill_calls,
             prefill_s=t1 - t0, decode_calls=decode_steps, decode_s=t2 - t1,
-            new_tokens=sum(len(r.out_tokens) for r in batch)))
+            new_tokens=sum(len(r.out_tokens) for r in batch),
+            ttft_s=[r.ttft_s for r in batch],
+            tpot_s=[r.tpot_s for r in batch if r.tpot_s is not None]))
         for r in batch:
             r.done = True
         return batch
@@ -180,4 +255,193 @@ class ServeEngine:
             if not self.queue:
                 break
             done.extend(self.run_round())
+        return done
+
+
+class ContinuousEngine:
+    """Continuous-batching scheduler: per-slot decode streams with
+    in-flight admission and eviction (DESIGN.md §9).
+
+    One persistent cache of ``n_slots`` rows with a per-slot position
+    vector.  Every :meth:`step` (i) admits queued requests into free slots
+    — the whole admission burst co-prefills its common prefix in one
+    lockstep chunked ``decode_chunk`` stream, finishes ragged tails
+    per-row, and grafts each row into its slot — then (ii) issues ONE
+    lockstep ``decode_step`` over all slots (idle slots feed a pad token;
+    their rows are isolated garbage), appends each active slot's argmax
+    token, and (iii) evicts slots whose budget filled, freeing them for
+    the next step's admissions.
+
+    Token streams are exactly those of the static reference: prefill is
+    decode_chunk (bit-exact vs per-token), attention/MLP decode is
+    row-wise so the mixed batch never couples slots (MoE capacity buffers
+    DO couple rows across a batch — continuous-vs-static token exactness
+    is a dense/ssm/hybrid property; see DESIGN.md §9).
+    """
+
+    def __init__(self, cfg: ArchConfig, params, *, n_slots: int = 4,
+                 max_len: int = 256, cache_dtype=jnp.float32,
+                 decode_fn: Optional[Callable] = None,
+                 prefill_chunk: Optional[int] = None,
+                 decode_chunk_fn: Optional[Callable] = None,
+                 reset_on_evict: bool = False):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.cache_dtype = cache_dtype
+        self.prefill_chunk = prefill_chunk
+        self.reset_on_evict = reset_on_evict
+        self.queue: deque[Request] = deque()
+        self.step_stats: List[StepStats] = []
+        self.finished: List[Request] = []
+        self._decode = decode_fn or jax.jit(
+            lambda params, cache, tok: decode_step(cfg, params, cache, tok))
+        self._decode_chunk = decode_chunk_fn or jax.jit(
+            lambda params, cache, toks: decode_chunk(cfg, params, cache,
+                                                     toks))
+        # the engine is the sole owner of the slot cache, so graft/reset can
+        # donate it — in-place row updates instead of a full cache copy
+        self._write_slot = jax.jit(cache_write_slot, donate_argnums=(0,))
+        self._reset_slot = jax.jit(cache_reset_slot, donate_argnums=(0,))
+        self.cache = init_cache(cfg, n_slots, max_len, cache_dtype,
+                                per_slot=True)
+        self.slots: List[Optional[Request]] = [None] * n_slots
+        self._last = np.zeros((n_slots,), np.int32)   # next input token
+        # aggregate dispatch/wall accounting (serve_bench reads these)
+        self.prefill_calls = 0
+        self.prefill_s = 0.0
+        self.decode_calls = 0
+        self.decode_s = 0.0
+
+    # -- scheduler ----------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        if req.arrival_s is None:
+            req.arrival_s = time.perf_counter()
+        assert len(req.prompt) + req.max_new_tokens <= self.max_len, \
+            f"request {req.rid} exceeds cache length"
+        self.queue.append(req)
+
+    @property
+    def active_slots(self) -> int:
+        return sum(1 for r in self.slots if r is not None)
+
+    def _admit_many(self, pairs, finished: List[Request]) -> None:
+        """Prefill a burst of admissions together, then graft each slot.
+
+        All requests admitted in the same scheduler step share a lockstep
+        chunked prefill over their COMMON prefix length (one batch-G
+        dispatch per chunk — the same amortization a static round gets),
+        and each longer prompt finishes its ragged tail on its own batch-1
+        row.  decode_chunk is row-independent and bit-exact vs per-token,
+        so the grouped prefill changes no request's stream (fuzzed in
+        tests/test_continuous_batching.py).
+        """
+        g = len(pairs)
+        reqs = [r for _, r in pairs]
+        common = min(len(r.prompt) for r in reqs)
+        # prefill_s bills ONLY the prefill device work (same contract as
+        # RoundStats.prefill_s): each timed region ends at logits-ready,
+        # before the host argmax transfer / graft / bookkeeping
+        t0 = time.perf_counter()
+        sub = init_cache(self.cfg, g, self.max_len, self.cache_dtype)
+        toks = np.stack([np.asarray(r.prompt[:common], np.int32)
+                         for r in reqs])
+        logits, sub, calls = _run_prefill(
+            self._decode, self._decode_chunk, self.params, sub, toks,
+            self.prefill_chunk)
+        jax.block_until_ready(logits)
+        self.prefill_s += time.perf_counter() - t0
+        for i, (slot, req) in enumerate(pairs):
+            if g == 1:
+                sub_i, log_i = sub, logits
+            else:
+                kv_i, ex_i = jax.tree.map(lambda t: t[:, i:i + 1],
+                                          (sub.kv, sub.extras))
+                sub_i = sub._replace(kv=kv_i, extras=ex_i)
+                log_i = logits[i:i + 1]
+            tail = np.asarray(req.prompt[common:], np.int32)
+            if tail.size:
+                t_tail = time.perf_counter()
+                log_i, sub_i, c_tail = _run_prefill(
+                    self._decode, self._decode_chunk, self.params, sub_i,
+                    tail[None, :], self.prefill_chunk)
+                jax.block_until_ready(log_i)
+                self.prefill_s += time.perf_counter() - t_tail
+                calls += c_tail
+            first = int(np.argmax(np.asarray(log_i)[0]))
+            self.cache = self._write_slot(self.cache, sub_i,
+                                          jnp.asarray(slot, jnp.int32))
+            t_tok = time.perf_counter()
+            req.first_token_s = t_tok
+            req.out_tokens.append(first)
+            self.slots[slot] = req
+            self._last[slot] = first
+            if len(req.out_tokens) >= req.max_new_tokens:
+                self._finish(slot, req, t_tok, finished)
+        self.prefill_calls += calls
+
+    def _finish(self, slot: int, req: Request, t: float,
+                finished: List[Request]) -> None:
+        req.done = True
+        req.finish_s = t
+        self.slots[slot] = None
+        self._last[slot] = 0
+        if self.reset_on_evict:
+            # hygiene mode: zero the freed row now.  Functionally optional —
+            # the admission graft fully overwrites a slot's state rows and
+            # position, and an idle slot's garbage decode is row-isolated —
+            # but it costs one dispatch per eviction, so the default leaves
+            # the stale row in place until refill.
+            self.cache = self._reset_slot(self.cache,
+                                          jnp.asarray(slot, jnp.int32))
+        self.finished.append(req)
+        finished.append(req)
+
+    def step(self) -> List[Request]:
+        """One scheduler iteration: admit → lockstep decode → evict.
+
+        Returns the requests that finished during this step.
+        """
+        finished: List[Request] = []
+        t0 = time.perf_counter()
+        pairs = []
+        while self.queue and None in self.slots:
+            slot = self.slots.index(None)
+            req = self.queue.popleft()
+            self.slots[slot] = req          # reserve before the next index()
+            pairs.append((slot, req))
+        admitted = len(pairs)
+        if pairs:
+            self._admit_many(pairs, finished)
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        decoded = 0
+        if active:
+            td = time.perf_counter()
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(self._last[:, None]))
+            last = np.argmax(np.asarray(logits), axis=-1).astype(np.int32)
+            t_tok = time.perf_counter()
+            self.decode_calls += 1
+            self.decode_s += t_tok - td
+            for i in active:
+                r = self.slots[i]
+                r.out_tokens.append(int(last[i]))
+                self._last[i] = last[i]
+                decoded += 1
+                if len(r.out_tokens) >= r.max_new_tokens:
+                    self._finish(i, r, t_tok, finished)
+        self.step_stats.append(StepStats(
+            active=len(active), admitted=admitted, finished=len(finished),
+            new_tokens=admitted + decoded,
+            step_s=time.perf_counter() - t0))
+        return finished
+
+    def run_until_done(self, max_steps: int = 100_000) -> List[Request]:
+        done: List[Request] = []
+        for _ in range(max_steps):
+            if not self.queue and self.active_slots == 0:
+                break
+            done.extend(self.step())
         return done

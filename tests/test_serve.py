@@ -192,3 +192,58 @@ def test_round_stats_timing_hooks():
     assert st.prefill_calls == 2 and st.decode_calls == 2
     assert st.new_tokens == 3
     assert st.prefill_s > 0 and st.decode_s > 0
+
+
+def test_prefill_time_excludes_first_token_transfer(monkeypatch):
+    """RoundStats.prefill_s stops at the last prefill logits being device-
+    ready; the host transfer + argmax that consume the first token are
+    decode-side.  Pin it by making argmax artificially slow (50ms): with
+    the correct timestamp placement the slowdown lands in decode_s; with
+    the pre-fix placement (t1 after the argmax) it would land in
+    prefill_s and both assertions below flip."""
+    import time as _time
+
+    real_argmax = np.argmax
+
+    def slow_argmax(*a, **kw):
+        _time.sleep(0.05)
+        return real_argmax(*a, **kw)
+
+    monkeypatch.setattr(np, "argmax", slow_argmax)
+    params = _params()
+    rng = np.random.default_rng(8)
+    # pre-compiled decode fn so prefill_s measures dispatches, not jit
+    base = jax.jit(lambda p, c, t: decode_step(CFG, p, c, t))
+    cache = init_cache(CFG, 1, 32, jnp.float32)
+    jax.block_until_ready(base(params, cache, jnp.zeros((1, 1), jnp.int32)))
+    eng = ServeEngine(CFG, params, n_slots=1, max_len=32, decode_fn=base)
+    eng.submit(Request(rid=0, prompt=rng.integers(0, CFG.vocab, 5)
+                       .astype(np.int32), max_new_tokens=1))
+    eng.run_until_done()
+    (st,) = eng.round_stats
+    # budget-1 round: the only argmax is the one consuming the prefill
+    # logits, so the injected 50ms must be billed to decode_s even though
+    # zero decode dispatches ran — and never to prefill_s
+    assert st.decode_calls == 0 and st.new_tokens == 1
+    assert st.decode_s >= 0.05
+    assert st.prefill_s < 0.05
+
+
+def test_request_latency_fields_static():
+    """Per-request TTFT/TPOT accounting on the static engine (the fields
+    the continuous scheduler shares via the Request dataclass)."""
+    params = _params()
+    rng = np.random.default_rng(7)
+    eng = ServeEngine(CFG, params, n_slots=2, max_len=32)
+    for i, b in enumerate((3, 1)):
+        eng.submit(Request(rid=i, prompt=rng.integers(0, CFG.vocab, 4)
+                           .astype(np.int32), max_new_tokens=b))
+    done = {r.rid: r for r in eng.run_until_done()}
+    (st,) = eng.round_stats
+    for r in done.values():
+        assert r.arrival_s is not None and r.first_token_s is not None
+        assert r.finish_s is not None and r.done
+        assert r.ttft_s >= 0 and r.finish_s >= r.first_token_s
+    assert done[0].tpot_s is not None and done[0].tpot_s >= 0
+    assert done[1].tpot_s is None            # single-token request
+    assert len(st.ttft_s) == 2 and len(st.tpot_s) == 1
