@@ -1,0 +1,144 @@
+"""Planner benchmark: even-spread vs waterfilled allocation + executor
+parallelism (DESIGN.md §10).
+
+Part 1 (allocation quality): L synthetic matrices with heterogeneous
+calibration spectra (mixed decay shapes and condition numbers — the
+regime where the even split is provably suboptimal).  At each global
+budget B ∈ {2, 3, 4} bits/param the benchmark reports the total weighted
+output distortion Σ w·N·D of
+
+  * the even-spread RateBudget baseline (every matrix at B),
+  * the continuous waterfilled allocation,
+  * the snapped (2/3/4/8-bit serving grid) allocation,
+
+both as the planner's model prediction (exact reverse-waterfilling
+curves) and realized by actually quantizing every matrix with WaterSIC at
+the allocated rates.  The waterfilled plan must realize strictly lower
+distortion at a matched realized budget — asserted.
+
+Part 2 (executor): the same plan executed with 1 worker vs all host
+devices; reports wall clock, speedup, and asserts the parallel result is
+bit-identical to the sequential one (the determinism contract of
+plan/executor.py).
+
+    python benchmarks/plan_bench.py [--quick]
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import CalibStats
+from repro.core.theory import random_covariance
+from repro.plan import (allocation_distortion, build_plan, even_plan,
+                        execute_plan, sensitivity_from_matrix,
+                        waterfill_bits)
+
+
+def make_layers(n_layers, dim, out_dim, seed=0):
+    """Heterogeneous synthetic layers: varied spectra shapes/conditioning
+    and varied weight scales."""
+    rng = np.random.default_rng(seed)
+    decays = ["log-linear", "two-level", "flat", "heavy-tail"]
+    conds = [3.0, 30.0, 300.0, 3000.0]
+    layers = []
+    for i in range(n_layers):
+        sigma, _ = random_covariance(dim, decay=decays[i % len(decays)],
+                                     condition=conds[i % len(conds)],
+                                     seed=seed + i)
+        w = rng.standard_normal((out_dim, dim)) * (0.3 + 0.6 * (i % 3))
+        layers.append((f"syn{i}/mat", w, sigma))
+    return layers
+
+
+def allocation_quality(layers, budgets, rows):
+    sens = [sensitivity_from_matrix(name, w, sigma)
+            for name, w, sigma in layers]
+    weights = {name: w for name, w, _ in layers}
+    stats = {name: CalibStats(sigma_x=np.asarray(sigma, np.float32))
+             for name, _, sigma in layers}
+
+    def realized(plan):
+        execute_plan(plan, weights, stats, damp=1e-4,
+                     compute_distortion=True)
+        return (sum(e.weight * e.n_params * e.realized_distortion
+                    for e in plan), plan.realized_bits_per_param)
+
+    print(f"{'B':>4} {'pred even':>11} {'pred WF':>11} {'pred snap':>11} "
+          f"{'real even':>11} {'real WF':>11} {'win':>6}")
+    for b in budgets:
+        cont = waterfill_bits(sens, b)
+        pred_even = allocation_distortion(sens, [b] * len(sens))
+        pred_wf = allocation_distortion(sens, cont)
+        snapped = build_plan(sens, b, weighting="uniform")
+        pred_snap = allocation_distortion(
+            sens, [e.snapped_bits for e in snapped])
+        # realized comparison runs the CONTINUOUS allocation: WaterSIC's
+        # secant rate targeting is continuous; the integer grid is a
+        # serving-format constraint (at B=2 it collapses to the even split
+        # — the grid has nothing below 2 bits to trade with)
+        plan = build_plan(sens, b, snap=False, weighting="uniform")
+        d_even, r_even = realized(even_plan(sens, b))
+        d_wf, r_wf = realized(plan)
+        win = d_even / max(d_wf, 1e-30)
+        rows.append({"budget": b, "pred_even": pred_even,
+                     "pred_wf": pred_wf, "real_even": d_even,
+                     "real_wf": d_wf, "real_bits_even": r_even,
+                     "real_bits_wf": r_wf, "win": win})
+        print(f"{b:>4} {pred_even:>11.4e} {pred_wf:>11.4e} "
+              f"{pred_snap:>11.4e} {d_even:>11.4e} {d_wf:>11.4e} "
+              f"{win:>5.2f}x   (bits {r_even:.3f} vs {r_wf:.3f})")
+        assert d_wf < d_even, \
+            f"waterfilled allocation must beat even-spread at B={b}"
+        assert r_wf <= r_even + 0.05, "budget mismatch in the comparison"
+    return sens, weights, stats
+
+
+def executor_scaling(sens, weights, stats, rows):
+    import jax
+    plan1 = build_plan(sens, 3.0, weighting="uniform")
+    # warm the jit caches so the timing compares execution, not compiles
+    execute_plan(plan1, weights, stats, damp=1e-4, n_workers=1)
+    t0 = time.perf_counter()
+    q1, rep1 = execute_plan(plan1, weights, stats, damp=1e-4, n_workers=1)
+    t1 = time.perf_counter() - t0
+    nw = max(2, len(jax.devices()))
+    planN = build_plan(sens, 3.0, weighting="uniform")
+    t0 = time.perf_counter()
+    qN, repN = execute_plan(planN, weights, stats, damp=1e-4, n_workers=nw)
+    tN = time.perf_counter() - t0
+    for name in q1:
+        assert np.array_equal(q1[name].codes, qN[name].codes), name
+        assert np.array_equal(q1[name].gamma, qN[name].gamma), name
+        assert np.array_equal(q1[name].t, qN[name].t), name
+    # no speedup assertion: on CPU with toy matrices the per-task host
+    # work is GIL-bound, so threads only pay off at production matrix
+    # sizes (BLAS/XLA release the GIL) or with devices="all" on real
+    # multi-device hosts — the determinism contract is the invariant here
+    print(f"executor: sequential {t1:.2f}s vs {nw} workers {tN:.2f}s "
+          f"({t1 / max(tN, 1e-9):.2f}x) — parallel output bit-identical "
+          f"to sequential")
+    rows.append({"exec_seq_s": t1, "exec_par_s": tN, "workers": nw})
+
+
+def run(rows, quick=False):
+    n_layers = 8 if quick else 16
+    dim = 48 if quick else 96
+    out_dim = 32 if quick else 64
+    budgets = (2.0, 3.0) if quick else (2.0, 3.0, 4.0)
+    layers = make_layers(n_layers, dim, out_dim)
+    sens, weights, stats = allocation_quality(layers, budgets, rows)
+    executor_scaling(sens, weights, stats, rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    rows = []
+    run(rows, quick=args.quick)
+    print("plan_bench OK")
+
+
+if __name__ == "__main__":
+    main()

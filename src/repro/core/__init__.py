@@ -11,17 +11,18 @@ Public API:
   Theory (§3):         waterfilling_rate, high_rate_bound, gptq_gap_bits,
                        watersic_gap_bits, GAP_CUBE_BITS, random_covariance
   Rescalers (Alg. 4):  find_optimal_rescalers
-  Budget (App. D):     RateBudget
+  Budget (App. D):     RateBudget, PlanBudget (shims over repro.plan §10)
 """
 from .entropy import (HuffmanCode, codec_bits_lzma, codec_bits_zlib,
                       column_entropies, effective_rate, empirical_entropy,
                       huffman_bits)
 from .gptq import gptq_frantar, gptq_via_zsic, huffman_gptq, rate_log_cardinality
 from .packing import (PackedCodes, escapes_to_coo, pack_codes, pack_codes_jnp,
-                      pack_int4, pack_int4_planar_jnp, unpack_codes,
-                      unpack_int4, unpack_int4_planar_jnp)
+                      pack_int3_planar_jnp, pack_int4, pack_int4_planar_jnp,
+                      unpack_codes, unpack_int3_planar_jnp, unpack_int4,
+                      unpack_int4_planar_jnp)
 from .rans import RansCodec
-from .rate_alloc import RateBudget
+from .rate_alloc import PlanBudget, RateBudget
 from .rescalers import RescalerResult, find_optimal_rescalers, rescaler_loss
 from .rtn import huffman_rtn, rtn_absmax
 from .theory import (GAP_CUBE_BITS, chol_lower, gptq_gap_bits, high_rate_bound,

@@ -18,6 +18,13 @@ Two nibble layouts exist (DESIGN.md §8):
 
 ``pack_codes_jnp`` is the device-side producer: jnp pack + escape-to-COO
 export, so serving codes never round-trip through host numpy.
+
+int3 (DESIGN.md §10; the §7 tracked sub-4-bit extension): 8 codes per
+3 bytes, stored as three *bit-plane* bytes over 8 planar column groups —
+byte b holds bit b of the (biased, code+4) values of planes 0..7 at one
+in-feature index.  Exactly 3.0 bits/entry of payload; the escape-COO path
+is shared with int4 unchanged (codes outside [-4, 3] become sparse
+deltas), so the planner's 3-bit snap targets have a real serving format.
 """
 from __future__ import annotations
 
@@ -30,7 +37,8 @@ import numpy as np
 
 __all__ = ["pack_int4", "unpack_int4", "PackedCodes", "pack_codes",
            "unpack_codes", "escapes_to_coo", "pack_int4_planar_jnp",
-           "unpack_int4_planar_jnp", "pack_codes_jnp"]
+           "unpack_int4_planar_jnp", "pack_codes_jnp",
+           "pack_int3_planar_jnp", "unpack_int3_planar_jnp"]
 
 
 def pack_int4(z: np.ndarray) -> np.ndarray:
@@ -88,18 +96,53 @@ def unpack_int4_planar_jnp(packed) -> jnp.ndarray:
     return jnp.concatenate([lo, hi], axis=-1).astype(jnp.int8)
 
 
-def pack_codes_jnp(z, *, escape_capacity: Optional[int] = None
+def pack_int3_planar_jnp(z) -> jnp.ndarray:
+    """Bit-plane int3 pack: 8 codes / 3 bytes (DESIGN.md §10).
+
+    ``z`` (..., K) with K a multiple of 8 and values in [-4, 3].  Columns
+    split into 8 planar groups of width K/8 (plane p = cols
+    [p·K/8, (p+1)·K/8)); the biased value u = code + 4 ∈ [0, 8) scatters
+    its three bits over three bytes: returned payload (..., 3, K/8) where
+    byte ``b`` carries bit b of u for all 8 planes at one in-feature
+    index (bit p of byte b = bit b of plane p's code).  Pure jnp —
+    traceable, and the unpack is elementwise shift/mask that XLA fuses
+    into the consumer's operand read.
+    """
+    if z.shape[-1] % 8:
+        raise ValueError("last dim must be a multiple of 8 for int3 packing")
+    k8 = z.shape[-1] // 8
+    u = (jnp.asarray(z).astype(jnp.int32) + 4) & 0x7
+    planes = u.reshape(z.shape[:-1] + (8, k8))           # (..., plane, i)
+    pw = (1 << jnp.arange(8, dtype=jnp.int32))[:, None]  # plane bit weights
+    bytes_ = [jnp.sum(((planes >> b) & 1) * pw, axis=-2) for b in range(3)]
+    return jnp.stack(bytes_, axis=-2).astype(jnp.uint8)  # (..., 3, K/8)
+
+
+def unpack_int3_planar_jnp(payload) -> jnp.ndarray:
+    """Inverse of :func:`pack_int3_planar_jnp` (sign-extended int8)."""
+    p = jnp.asarray(payload).astype(jnp.int32)
+    b0, b1, b2 = p[..., 0, :], p[..., 1, :], p[..., 2, :]
+    cols = [((b0 >> pl) & 1) | (((b1 >> pl) & 1) << 1)
+            | (((b2 >> pl) & 1) << 2) for pl in range(8)]
+    u = jnp.concatenate(cols, axis=-1)                   # planes back in order
+    return (u - 4).astype(jnp.int8)
+
+
+def pack_codes_jnp(z, *, nbits: int = 4,
+                   escape_capacity: Optional[int] = None
                    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
                               jnp.ndarray]:
-    """Device-side int4 pack of ``z`` (a, n) + escape-to-COO export.
+    """Device-side int4/int3 pack of ``z`` (a, n) + escape-to-COO export.
 
     Returns ``(payload, esc_row, esc_col, esc_dval)``:
 
-      payload   uint8 (a, ceil(n/2))  planar-packed clipped codes (odd n is
-                zero-padded with one nibble column),
+      payload   nbits=4: uint8 (a, ceil(n/2)) planar nibble pack (odd n is
+                zero-padded with one nibble column);
+                nbits=3: uint8 (a, 3, ceil(n/8)) bit-plane pack (n padded
+                to a multiple of 8 with zero codes),
       esc_row   int32 (nnz,)          output-row index of each escape,
       esc_col   int32 (nnz,)          input-column index,
-      esc_dval  f32  (nnz,)           ``z - clip(z, -8, 7)`` — the *delta*
+      esc_dval  f32  (nnz,)           ``z - clip(z, lo, hi)`` — the *delta*
                 the sparse correction matmul adds back (so the packed body
                 needs no masking at the escape sites).
 
@@ -113,11 +156,19 @@ def pack_codes_jnp(z, *, escape_capacity: Optional[int] = None
     """
     z = jnp.asarray(z)
     a, n = z.shape
-    clipped = jnp.clip(z, -8, 7)
+    if nbits == 4:
+        lo, hi, mult = -8, 7, 2
+    elif nbits == 3:
+        lo, hi, mult = -4, 3, 8
+    else:
+        raise ValueError("nbits must be 3 or 4")
+    clipped = jnp.clip(z, lo, hi)
     body = clipped.astype(jnp.int8)
-    if n % 2:
-        body = jnp.concatenate([body, jnp.zeros((a, 1), jnp.int8)], axis=1)
-    payload = pack_int4_planar_jnp(body)
+    pad = (-n) % mult
+    if pad:
+        body = jnp.concatenate([body, jnp.zeros((a, pad), jnp.int8)], axis=1)
+    payload = (pack_int4_planar_jnp(body) if nbits == 4
+               else pack_int3_planar_jnp(body))
     delta = (z - clipped).astype(jnp.float32)
     if escape_capacity is None:
         rows, cols = jnp.nonzero(delta != 0)
@@ -141,12 +192,35 @@ def pack_codes_jnp(z, *, escape_capacity: Optional[int] = None
 # ---------------------------------------------------------------------------
 
 
+def _pack_int3_np(body: np.ndarray) -> np.ndarray:
+    """Host twin of :func:`pack_int3_planar_jnp`: (a, 8·k) → (a, 3, k)."""
+    a, n = body.shape
+    u = (body.astype(np.int32) + 4) & 0x7
+    planes = u.reshape(a, 8, n // 8)
+    pw = (1 << np.arange(8, dtype=np.int32))[None, :, None]
+    return np.stack([(((planes >> b) & 1) * pw).sum(axis=1)
+                     for b in range(3)], axis=1).astype(np.uint8)
+
+
+def _unpack_int3_np(payload: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`_pack_int3_np` (sign-extended int8)."""
+    p = payload.astype(np.int32)
+    b0, b1, b2 = p[:, 0, :], p[:, 1, :], p[:, 2, :]
+    cols = [((b0 >> pl) & 1) | (((b1 >> pl) & 1) << 1)
+            | (((b2 >> pl) & 1) << 2) for pl in range(8)]
+    return (np.concatenate(cols, axis=-1) - 4).astype(np.int8)
+
+
+_RANGE = {3: (-4, 3), 4: (-8, 7), 8: (-128, 127)}
+_PAD_MULT = {3: 8, 4: 2, 8: 1}
+
+
 @dataclass
 class PackedCodes:
     """Packed code matrix + escape list for out-of-range entries."""
 
-    payload: np.ndarray          # uint8 (int4) or int8 buffer
-    nbits: int                   # 4 or 8
+    payload: np.ndarray          # uint8 (int4/int3 planes) or int8 buffer
+    nbits: int                   # 3, 4 or 8
     shape: Tuple[int, int]
     escape_idx: np.ndarray       # flat indices of escapes (uint32 when the
                                  # matrix has < 2³² entries, else int64)
@@ -154,12 +228,13 @@ class PackedCodes:
 
     @property
     def storage_bits_per_entry(self) -> float:
-        """Exact bits/entry: excludes the odd-n pad nibble column and uses
-        the actual escape-index width."""
+        """Exact bits/entry: excludes pad columns (odd-n nibble for int4,
+        the up-to-7 zero columns of the int3 8-group) and uses the actual
+        escape-index width."""
         a, n = self.shape
         payload_bits = self.payload.size * 8
-        if self.nbits == 4 and n % 2:
-            payload_bits -= a * 4          # pad nibble column is not payload
+        pad_cols = (-n) % _PAD_MULT[self.nbits]
+        payload_bits -= a * self.nbits * pad_cols    # pad is not payload
         idx_bits = self.escape_idx.dtype.itemsize * 8
         esc = self.escape_idx.size * (idx_bits + 32)
         return (payload_bits + esc) / (a * n)
@@ -168,22 +243,22 @@ class PackedCodes:
 def pack_codes(z: np.ndarray, nbits: int = 4) -> PackedCodes:
     z = np.asarray(z)
     a, n = z.shape
-    if nbits == 4:
-        lo, hi = -8, 7
-    elif nbits == 8:
-        lo, hi = -128, 127
-    else:
-        raise ValueError("nbits must be 4 or 8")
+    if nbits not in _RANGE:
+        raise ValueError("nbits must be 3, 4 or 8")
+    lo, hi = _RANGE[nbits]
     clipped = np.clip(z, lo, hi)
     esc = np.nonzero((z < lo) | (z > hi))
     idx_dtype = np.uint32 if z.size <= np.iinfo(np.uint32).max else np.int64
     flat_idx = np.ravel_multi_index(esc, z.shape).astype(idx_dtype)
     esc_val = z[esc].astype(np.int32)
     body = clipped.astype(np.int8)
+    pad = (-n) % _PAD_MULT[nbits]
+    if pad:
+        body = np.concatenate([body, np.zeros((a, pad), np.int8)], axis=1)
     if nbits == 4:
-        if n % 2:
-            body = np.concatenate([body, np.zeros((a, 1), np.int8)], axis=1)
         payload = pack_int4(body)
+    elif nbits == 3:
+        payload = _pack_int3_np(body)
     else:
         payload = body
     return PackedCodes(payload=payload, nbits=nbits, shape=(a, n),
@@ -194,6 +269,8 @@ def unpack_codes(p: PackedCodes) -> np.ndarray:
     a, n = p.shape
     if p.nbits == 4:
         body = unpack_int4(p.payload)[:, :n].astype(np.int32)
+    elif p.nbits == 3:
+        body = _unpack_int3_np(p.payload)[:, :n].astype(np.int32)
     else:
         body = p.payload.astype(np.int32)
     out = body.copy()
@@ -214,7 +291,6 @@ def escapes_to_coo(p: PackedCodes
     idx = p.escape_idx.astype(np.int64)
     rows = (idx // n).astype(np.int32)
     cols = (idx % n).astype(np.int32)
-    lim = 7 if p.nbits == 4 else 127
-    lo = -8 if p.nbits == 4 else -128
+    lo, lim = _RANGE[p.nbits]
     dval = (p.escape_val - np.clip(p.escape_val, lo, lim)).astype(np.float32)
     return rows, cols, dval

@@ -1,19 +1,29 @@
-"""Global rate-budget controller (paper §4 "Rate assignment", App. D).
+"""Rate-budget controllers — thin compat shim over repro.plan (DESIGN §10).
 
-The model-level PTQ pipeline quantizes layers sequentially.  A running bit
-budget (initialized to target_bits × total_params) is maintained; before each
-layer the remaining budget is spread evenly (parameter-count weighted) over
-the not-yet-quantized matrices, and the achieved bits are subtracted after.
-Dead-feature erasure lowers early-layer rates, so the leftover budget drifts
-to later layers ("a mild increase in per-layer rates toward the end of the
-network" — paper App. D).
+Historically this module owned the model-level bit allocation: a running
+budget spread evenly (parameter-count weighted) over the not-yet-quantized
+matrices (paper §4 "Rate assignment", App. D).  The real allocator now
+lives in ``repro.plan`` — the global waterfilling planner — and this
+module keeps two thin controllers over it:
+
+* :class:`RateBudget` — the legacy sequential even-spread heuristic, kept
+  as the differential oracle (`repro.plan.waterfill` proves it optimal
+  exactly when all layers share spectrum and weight, and strictly
+  suboptimal otherwise).  The even-split arithmetic itself delegates to
+  :func:`repro.plan.waterfill.even_spread_target`.  When its rate floor
+  binds, the overspend is RECORDED (``budget_overrun`` /
+  ``overrun_bits``), never silently clamped — ``realized_rate`` exceeding
+  the target always comes with the flag raised.
+* :class:`PlanBudget` — the same `next_target`/`record` interface driven
+  by a :class:`repro.plan.QuantPlan`, so `quant.pipeline.quantize_model`
+  runs either allocator through one code path.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Any, Dict, List
 
-__all__ = ["RateBudget"]
+__all__ = ["RateBudget", "PlanBudget"]
 
 
 @dataclass
@@ -21,7 +31,10 @@ class RateBudget:
     target_bits_per_param: float
     layer_params: Dict[str, int]                 # name -> a*n
     spent_bits: float = 0.0
+    floor_bits: float = 0.05                     # per-matrix rate floor
     done: Dict[str, float] = field(default_factory=dict)  # name -> achieved
+    budget_overrun: bool = False                 # floor forced an overspend
+    overrun_bits: float = 0.0                    # projected excess, in bits
 
     @property
     def total_params(self) -> int:
@@ -37,14 +50,29 @@ class RateBudget:
                    if k not in self.done)
 
     def next_target(self, name: str) -> float:
-        """Bits/param target for `name`: remaining budget spread evenly."""
+        """Bits/param target for `name`: remaining budget spread evenly.
+
+        Delegates to the planner's even-spread primitive; if the rate
+        floor binds, the budget overrun is recorded on this controller
+        (the old code clamped silently and `realized_rate` could exceed
+        the target with no signal).
+        """
+        from repro.plan.waterfill import even_spread_target
         if name in self.done:
             raise KeyError(f"layer {name} already quantized")
         rem_params = self.remaining_params
         if rem_params <= 0:
             return self.target_bits_per_param
         remaining_bits = self.total_budget_bits - self.spent_bits
-        return max(remaining_bits / rem_params, 0.05)
+        target, floor_bound = even_spread_target(
+            remaining_bits, rem_params, floor=self.floor_bits)
+        if floor_bound:
+            self.budget_overrun = True
+            # overspend if every remaining matrix lands at the floor
+            self.overrun_bits = max(
+                self.overrun_bits,
+                self.floor_bits * rem_params - remaining_bits)
+        return target
 
     def record(self, name: str, achieved_bits_per_param: float) -> None:
         params = self.layer_params[name]
@@ -63,6 +91,71 @@ class RateBudget:
     def summary(self) -> List[str]:
         lines = [f"target={self.target_bits_per_param:.3f} bits/param, "
                  f"realized={self.realized_rate:.3f}"]
+        if self.budget_overrun:
+            lines[0] += (f"  [BUDGET OVERRUN: floor {self.floor_bits} "
+                         f"bound, ≥{self.overrun_bits:.1f} bits over]")
         for k, r in self.done.items():
             lines.append(f"  {k}: {r:.3f} bits ({self.layer_params[k]} params)")
+        return lines
+
+
+@dataclass
+class PlanBudget:
+    """`RateBudget`-shaped view of a :class:`repro.plan.QuantPlan`.
+
+    ``next_target`` returns the plan's snapped per-matrix bits instead of
+    the even spread; ``record`` writes achieved entropy back into the plan
+    entry, so the executed artifact documents plan→realized drift.
+    """
+
+    plan: Any                                     # repro.plan.QuantPlan
+    spent_bits: float = 0.0
+    done: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def target_bits_per_param(self) -> float:
+        return self.plan.budget_bits_per_param
+
+    @property
+    def layer_params(self) -> Dict[str, int]:
+        return {e.name: e.n_params for e in self.plan}
+
+    @property
+    def total_params(self) -> int:
+        return self.plan.n_params_total
+
+    @property
+    def budget_overrun(self) -> bool:
+        return bool(self.plan.budget_overrun)
+
+    def next_target(self, name: str) -> float:
+        if name in self.done:
+            raise KeyError(f"layer {name} already quantized")
+        if name not in self.plan:
+            raise KeyError(
+                f"matrix {name!r} has no plan entry — the plan was built "
+                "for a different model (names must match the budget keys)")
+        return float(self.plan.entry(name).execution_bits)
+
+    def record(self, name: str, achieved_bits_per_param: float) -> None:
+        self.done[name] = achieved_bits_per_param
+        self.spent_bits += achieved_bits_per_param \
+            * self.plan.entry(name).n_params
+        self.plan.entry(name).achieved_bits = float(achieved_bits_per_param)
+
+    @property
+    def realized_rate(self) -> float:
+        if not self.done:
+            return 0.0
+        lp = self.layer_params
+        num = sum(r * lp[k] for k, r in self.done.items())
+        den = sum(lp[k] for k in self.done)
+        return num / den
+
+    def summary(self) -> List[str]:
+        lines = [f"plan budget={self.target_bits_per_param:.3f} bits/param "
+                 f"({self.plan.weighting}), realized={self.realized_rate:.3f}"]
+        for k, r in self.done.items():
+            lines.append(f"  {k}: {r:.3f} bits "
+                         f"(plan {self.plan.entry(k).execution_bits:.3f})")
         return lines

@@ -1,9 +1,11 @@
 from .dequant_matmul import dequant_matmul_packed_pallas, dequant_matmul_pallas
 from .ops import (dequant_matmul, dequant_matmul_packed,
+                  dequant_matmul_packed3, dequant_matmul_packed3_xla,
                   dequant_matmul_packed_xla, dequant_matmul_xla)
 from .ref import dequant_matmul_ref, dequantize_ref
 
 __all__ = ["dequant_matmul_pallas", "dequant_matmul_packed_pallas",
            "dequant_matmul", "dequant_matmul_packed", "dequant_matmul_xla",
+           "dequant_matmul_packed3", "dequant_matmul_packed3_xla",
            "dequant_matmul_packed_xla", "dequant_matmul_ref",
            "dequantize_ref"]

@@ -22,12 +22,14 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.packing import unpack_int4_planar_jnp
+from repro.core.packing import (unpack_int3_planar_jnp,
+                                unpack_int4_planar_jnp)
 from .dequant_matmul import dequant_matmul_packed_pallas, dequant_matmul_pallas
 from .ref import dequant_matmul_ref
 
 __all__ = ["dequant_matmul", "dequant_matmul_packed", "dequant_matmul_xla",
-           "dequant_matmul_packed_xla"]
+           "dequant_matmul_packed_xla", "dequant_matmul_packed3",
+           "dequant_matmul_packed3_xla"]
 
 
 def _pad_to(x, mult, axis):
@@ -65,10 +67,15 @@ def dequant_matmul(x, z, col_scale, row_scale, *, escapes=None,
     """x (m, k) · dequant(z, s, t)ᵀ → (m, n), padding + escapes handled here.
 
     ``z`` int8 (n, k) selects the int8 kernel; ``z`` uint8 (n, ceil(k/2))
-    selects the packed-int4 kernel (planar nibble layout).  ``escapes`` is
-    an optional COO triple (rows, cols, dvals) applied after the kernel.
+    selects the packed-int4 kernel (planar nibble layout); ``z`` uint8
+    (n, 3, ceil(k/8)) — the bit-plane axis of static size 3 — selects the
+    int3 path (DESIGN.md §10, XLA in-graph unpack).  ``escapes`` is an
+    optional COO triple (rows, cols, dvals) applied after the kernel.
     """
     if z.dtype == jnp.uint8:
+        if z.ndim == 3:
+            return dequant_matmul_packed3(x, z, col_scale, row_scale,
+                                          escapes=escapes)
         return dequant_matmul_packed(
             x, z, col_scale, row_scale, escapes=escapes, block_m=block_m,
             block_n=block_n, block_k=block_k, prefer_pallas=prefer_pallas,
@@ -136,6 +143,41 @@ def dequant_matmul_xla(x, z, col_scale, row_scale):
     """Scale-the-activations formulation; XLA keeps weights int8 in HBM."""
     xs = x.astype(jnp.float32) * col_scale.astype(jnp.float32)[None, :]
     acc = jax.lax.dot_general(xs, z.astype(jnp.bfloat16).astype(jnp.float32),
+                              (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    return acc * row_scale.astype(jnp.float32)[None, :]
+
+
+@jax.jit
+def dequant_matmul_packed3(x, payload, col_scale, row_scale, *,
+                           escapes=None):
+    """Int3 serving matmul: x (m, k) × bit-plane payload (n, 3, ceil(k/8)).
+
+    The 8-group pad columns hold code 0 and x/col_scale are zero-padded to
+    the packed width, so the pad contributes nothing.  Unpack is a handful
+    of elementwise shift/masks that XLA fuses into the operand read (a
+    dedicated Pallas int3 kernel is tracked future work — the payload
+    format and escape contract here are what it will consume)."""
+    m, k = x.shape
+    n = payload.shape[0]
+    k_packed = 8 * payload.shape[-1]
+    assert k <= k_packed and k > k_packed - 8, (x.shape, payload.shape)
+    xp = _pad_to(x, k_packed, 1) if k < k_packed else x
+    sp = _pad_to(col_scale, k_packed, 0) if k < k_packed else col_scale
+    out = dequant_matmul_packed3_xla(xp, payload, sp, row_scale)[:m, :n]
+    if escapes is not None:
+        out = _apply_escapes(out, x, col_scale, row_scale, escapes)
+    return out
+
+
+@jax.jit
+def dequant_matmul_packed3_xla(x, payload, col_scale, row_scale):
+    """Bit-plane path for XLA backends: in-graph int3 unpack (elementwise,
+    fused) then the scale-the-activations formulation.  x and col_scale
+    must already span the packed width 8·payload.shape[-1]."""
+    z = unpack_int3_planar_jnp(payload)       # (n, 8·k8), exact in f32
+    xs = x.astype(jnp.float32) * col_scale.astype(jnp.float32)[None, :]
+    acc = jax.lax.dot_general(xs, z.astype(jnp.float32),
                               (((1,), (1,)), ((), ())),
                               preferred_element_type=jnp.float32)
     return acc * row_scale.astype(jnp.float32)[None, :]

@@ -1,0 +1,242 @@
+"""Planner driver: build → inspect → execute → serve (DESIGN.md §10).
+
+    # build a waterfilled plan from calibration spectra
+    PYTHONPATH=src python -m repro.launch.plan build --arch minicpm-2b \
+        --reduced --target-bits 3 --out /tmp/plan.json --floor "*/attn/wo=4"
+
+    # human-readable allocation + diff against another run
+    PYTHONPATH=src python -m repro.launch.plan inspect --plan /tmp/plan.json
+
+    # execute: parallel per-matrix quantization over host devices
+    PYTHONPATH=src python -m repro.launch.plan execute --plan /tmp/plan.json \
+        --workers 8 --compare-even
+
+    # serve the mixed-rate model the plan implies
+    PYTHONPATH=src python -m repro.launch.plan serve --plan /tmp/plan.json
+
+The plan artifact carries its model provenance (arch/seed/calibration
+shape), so `execute`/`serve` reconstruct the exact weights the plan was
+built for — a plan is only valid against its own model.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def _parse_bound(items):
+    out = {}
+    for it in items or []:
+        pat, _, val = it.rpartition("=")
+        if not pat:
+            raise SystemExit(f"--floor/--ceil wants PATTERN=BITS, got {it!r}")
+        out[pat] = float(val)
+    return out
+
+
+def _build_model(prov):
+    """Reconstruct (cfg, params, calib_batches) from plan provenance."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.data import DataConfig, global_batch_for_step
+    from repro.models import init_params, split_tree
+    cfg = get_config(prov["arch"])
+    if prov.get("reduced"):
+        cfg = cfg.reduced()
+    params, _ = split_tree(init_params(cfg,
+                                       jax.random.PRNGKey(prov["seed"])))
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=prov["seq_len"],
+                      global_batch=prov["global_batch"])
+    calib = [global_batch_for_step(dcfg, 10_000 + i)["tokens"]
+             for i in range(prov["calib_batches"])]
+    return cfg, params, calib
+
+
+def _even_from(plan):
+    """The even-spread RateBudget baseline, in plan form, over the SAME
+    matrices (same names/weights) — the differential oracle.  Deliberately
+    ignores per-matrix floors/ceilings: RateBudget spreads the budget
+    uniformly, so this is the matched-budget comparison."""
+    import dataclasses
+
+    from repro.plan import QuantPlan
+    from repro.plan.waterfill import payload_bits_for
+    b = plan.budget_bits_per_param
+    entries = [dataclasses.replace(
+        e, target_bits=b, snapped_bits=b, payload_bits=payload_bits_for(b),
+        achieved_bits=None, realized_distortion=None) for e in plan]
+    return QuantPlan(budget_bits_per_param=b, weighting="even-spread",
+                     entries=entries, provenance=dict(plan.provenance))
+
+
+def _weighted_distortion(plan):
+    vals = [(e.weight, e.n_params, e.realized_distortion) for e in plan]
+    if any(v[2] is None for v in vals):
+        return None
+    return sum(w * n * d for w, n, d in vals)
+
+
+def cmd_build(args):
+    from repro.plan import build_plan, model_sensitivities
+    prov = {"arch": args.arch, "reduced": bool(args.reduced),
+            "seed": args.seed, "calib_batches": args.calib_batches,
+            "seq_len": args.seq_len, "global_batch": args.global_batch}
+    cfg, params, calib = _build_model(prov)
+    t0 = time.time()
+    sens = model_sensitivities(cfg, params, calib,
+                               weighting=args.weighting, seed=args.seed,
+                               floors=_parse_bound(args.floor),
+                               ceils=_parse_bound(args.ceil))
+    plan = build_plan(sens, args.target_bits, snap=not args.no_snap,
+                      weighting=args.weighting, provenance=prov)
+    plan.save(args.out)
+    print(f"built plan for {len(sens)} matrices in {time.time()-t0:.1f}s "
+          f"-> {args.out}")
+    _print_summary(args.out)
+
+
+def _print_summary(path):
+    import json
+
+    from repro.launch.summarize import plan_summary
+    with open(path) as f:
+        print(plan_summary(json.load(f)))
+
+
+def cmd_inspect(args):
+    from repro.plan import QuantPlan
+    _print_summary(args.plan)
+    if args.diff:
+        delta = QuantPlan.load(args.plan).diff(QuantPlan.load(args.diff))
+        print(f"\ndiff vs {args.diff}: "
+              f"{'(allocations identical)' if not delta else ''}")
+        for line in delta:
+            print(f"  {line}")
+
+
+def cmd_execute(args):
+    from repro.plan import QuantPlan, quantize_model_with_plan
+    plan = QuantPlan.load(args.plan)
+    cfg, params, calib = _build_model(plan.provenance)
+    t0 = time.time()
+    _, _, plan, report = quantize_model_with_plan(
+        cfg, params, calib, plan, n_workers=args.workers,
+        devices="all" if args.pin_devices else None,
+        compute_distortion=True)
+    print(f"executed {len(plan.entries)} matrices on {args.workers} "
+          f"worker(s) in {report.wall_s:.1f}s "
+          f"(serial-equivalent {report.serial_s:.1f}s, "
+          f"retries={report.retries}"
+          + (f", stragglers={report.stragglers}" if report.stragglers
+             else "") + ")")
+    print(f"realized {plan.realized_bits_per_param:.3f} bits/param "
+          f"(planned {plan.planned_bits_per_param:.3f})")
+    out = args.out or args.plan.replace(".json", "") + ".executed.json"
+    plan.save(out)
+    reloaded = QuantPlan.load(out)
+    assert reloaded == plan, "artifact round-trip mismatch"
+    print(f"artifact round-trip OK -> {out}")
+    if args.compare_even:
+        even = _even_from(plan)
+        _, _, even, _ = quantize_model_with_plan(
+            cfg, params, calib, even, n_workers=args.workers,
+            compute_distortion=True)
+        d_wf, d_ev = _weighted_distortion(plan), _weighted_distortion(even)
+        print(f"weighted output distortion: waterfilled {d_wf:.4e} vs "
+              f"even-spread {d_ev:.4e} ({d_ev / max(d_wf, 1e-30):.2f}x)"
+              f"  [realized {plan.realized_bits_per_param:.3f} vs "
+              f"{even.realized_bits_per_param:.3f} bits/param]")
+    print(f"wall {time.time()-t0:.1f}s")
+
+
+def cmd_serve(args):
+    import jax
+
+    from repro.dist.sharding import use_mesh
+    from repro.launch.mesh import make_host_mesh
+    from repro.plan import QuantPlan
+    from repro.quant import (leaf_format_histogram, quantize_params_tree,
+                             qweight_bytes, serving_formats_from_plan)
+    from repro.serve import ContinuousEngine, Request
+    plan = QuantPlan.load(args.plan)
+    cfg, params, _ = _build_model(plan.provenance)
+    rng = np.random.default_rng(0)
+    with use_mesh(make_host_mesh()):
+        mixed = quantize_params_tree(
+            params, nbits_by_path=serving_formats_from_plan(plan))
+        qb, fb = qweight_bytes(mixed)
+        print(f"mixed-rate serving formats: {leaf_format_histogram(mixed)}")
+        print(f"  param bytes {qb/1e6:.2f} MB vs bf16 {fb/1e6:.2f} MB "
+              f"({fb/max(qb,1):.2f}x HBM win)")
+        eng = ContinuousEngine(cfg, mixed, n_slots=args.slots,
+                               max_len=args.prompt_len + args.max_new + 2,
+                               prefill_chunk=8)
+        for i in range(args.requests):
+            eng.submit(Request(
+                rid=i, prompt=rng.integers(0, cfg.vocab, args.prompt_len)
+                .astype(np.int32), max_new_tokens=args.max_new))
+        t0 = time.time()
+        done = eng.run_until_done()
+        dt = time.time() - t0
+        tok = sum(len(r.out_tokens) for r in done)
+        print(f"served {len(done)} requests, {tok} tokens in {dt:.2f}s "
+              f"({tok/dt:.1f} tok/s, continuous, mixed-rate)")
+        return done
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(prog="repro.launch.plan")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    b = sub.add_parser("build", help="waterfill a plan from calib spectra")
+    b.add_argument("--arch", required=True)
+    b.add_argument("--reduced", action="store_true")
+    b.add_argument("--target-bits", type=float, default=3.0)
+    b.add_argument("--weighting", default="output",
+                   choices=["uniform", "output", "probe"])
+    b.add_argument("--calib-batches", type=int, default=2)
+    b.add_argument("--seq-len", type=int, default=32)
+    b.add_argument("--global-batch", type=int, default=4)
+    b.add_argument("--seed", type=int, default=0)
+    b.add_argument("--floor", action="append", metavar="PATTERN=BITS",
+                   help='per-matrix floor, e.g. "*/attn/wo=4" (repeatable)')
+    b.add_argument("--ceil", action="append", metavar="PATTERN=BITS")
+    b.add_argument("--no-snap", action="store_true",
+                   help="keep the continuous allocation (no integer grid)")
+    b.add_argument("--out", required=True)
+    b.set_defaults(fn=cmd_build)
+
+    i = sub.add_parser("inspect", help="summarize / diff a plan artifact")
+    i.add_argument("--plan", required=True)
+    i.add_argument("--diff", default=None)
+    i.set_defaults(fn=cmd_inspect)
+
+    e = sub.add_parser("execute", help="parallel plan execution")
+    e.add_argument("--plan", required=True)
+    e.add_argument("--workers", type=int, default=1)
+    e.add_argument("--pin-devices", action="store_true",
+                   help="round-robin tasks over all visible devices "
+                        "(multi-device hosts; costs per-device compiles)")
+    e.add_argument("--out", default=None)
+    e.add_argument("--compare-even", action="store_true",
+                   help="also execute the even-spread baseline and report "
+                        "the weighted-distortion ratio")
+    e.set_defaults(fn=cmd_execute)
+
+    s = sub.add_parser("serve", help="serve the plan's mixed-rate formats")
+    s.add_argument("--plan", required=True)
+    s.add_argument("--requests", type=int, default=4)
+    s.add_argument("--prompt-len", type=int, default=8)
+    s.add_argument("--max-new", type=int, default=8)
+    s.add_argument("--slots", type=int, default=4)
+    s.set_defaults(fn=cmd_serve)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -129,10 +129,13 @@ def dense(p, x):
     w = p["w"]
     if isinstance(w, dict) and "codes" in w:
         if w["codes"].dtype == jnp.uint8:
-            # WaterSIC packed-int4 serving path (DESIGN.md §8): planar
-            # nibble payload (out, ceil(in/2)) streamed through the fused
-            # packed dequant-matmul; escapes applied as a sparse COO
-            # correction.  Half the weight HBM bytes of int8.
+            # WaterSIC sub-byte serving paths (DESIGN.md §8/§10): planar
+            # nibble payload (out, ceil(in/2)) through the fused packed
+            # dequant-matmul, or the int3 bit-plane payload
+            # (out, 3, ceil(in/8)) through the XLA-unpack path — the
+            # wrapper dispatches on the payload rank.  Escapes applied as
+            # a sparse COO correction either way.  Mixed-rate serving
+            # (repro.plan) mixes these formats freely across leaves.
             from repro.kernels.dequant import dequant_matmul
             lead = x.shape[:-1]
             y = dequant_matmul(
@@ -587,6 +590,10 @@ def moe(p, x, *, n_experts, top_k, capacity_factor=1.25, activation="silu",
                 # packed-int4 expert payload (E, dout, ceil(din/2)): unpack
                 # in-graph (elementwise, fused by XLA into the operand
                 # read); synthetic packed experts are escape-free
+                assert not (w["codes"].ndim >= 3
+                            and w["codes"].shape[-2] == 3), \
+                    "int3 expert leaves unsupported — serve experts ≥ 4b " \
+                    "(quantize_params_tree promotes them automatically)"
                 assert w["esc_row"].shape[-1] == 0, \
                     "packed MoE escapes unsupported; use escape_capacity=0"
                 from repro.core.packing import unpack_int4_planar_jnp

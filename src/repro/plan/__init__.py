@@ -1,0 +1,34 @@
+"""repro.plan — global mixed-precision planner (DESIGN.md §10).
+
+Solves the *outer* waterfilling problem the paper leaves to a heuristic:
+given per-matrix distortion-rate curves from calibration spectra
+(``sensitivity``), allocate the global bit budget across layers by
+bisection on a single water level (``waterfill``), serialize the result as
+a versioned, diffable artifact (``artifact``), and execute it with
+independent-layer parallelism over host devices (``executor``).
+
+`core.rate_alloc.RateBudget` — the legacy even-spread controller — is now
+a thin compat shim delegating here; `quant.pipeline.quantize_model`
+accepts a plan and keeps the even-spread path as the differential oracle.
+"""
+from .artifact import PLAN_SCHEMA_VERSION, PlanEntry, QuantPlan
+from .executor import (ExecutorReport, execute_plan, plan_inputs_for_model,
+                       quantize_model_with_plan)
+from .sensitivity import (MatrixSensitivity, apply_constraints,
+                          collect_sigma_x, distortion_at_rate,
+                          model_sensitivities, rd_curve,
+                          sensitivity_from_matrix)
+from .waterfill import (SERVING_FORMATS, allocation_distortion, build_plan,
+                        even_plan, even_spread_target, payload_bits_for,
+                        snap_bits, waterfill_bits)
+
+__all__ = [
+    "PLAN_SCHEMA_VERSION", "PlanEntry", "QuantPlan",
+    "ExecutorReport", "execute_plan", "plan_inputs_for_model",
+    "quantize_model_with_plan",
+    "MatrixSensitivity", "apply_constraints", "collect_sigma_x",
+    "distortion_at_rate", "model_sensitivities", "rd_curve",
+    "sensitivity_from_matrix",
+    "SERVING_FORMATS", "allocation_distortion", "build_plan", "even_plan",
+    "even_spread_target", "payload_bits_for", "snap_bits", "waterfill_bits",
+]

@@ -1,0 +1,303 @@
+"""Per-matrix distortion-rate curves for the global planner (DESIGN.md §10).
+
+WaterSIC waterfills the quantization rate over the *in-features of one
+matrix* (the inner problem, paper §3).  The planner needs the matrix-level
+view of the same object: for every linear layer l, the achievable
+distortion-rate curve
+
+    D_l(R) = (1/n) Σ_i min(s_i, τ(R)),   s_i = σ_W² λ_i(Σ_X),
+
+i.e. the reverse-waterfilling function of the calibration covariance
+spectrum — exactly eq. (2) of the paper, evaluated per matrix.  These
+curves are convex and differentiable with the closed-form marginal
+
+    dD_l/dR = −2·ln2·τ_l                                   (†)
+
+(τ_l is the inner water level), which is what makes the *outer* allocation
+across layers a second waterfilling problem — see plan/waterfill.py.
+
+The linearity-theorem weighting ("Pushing the Limits of LLM Quantization
+via the Linearity Theorem", PAPERS.md) observes that the end-to-end loss
+increase is ≈ linear in each layer's output MSE, with a per-layer transfer
+coefficient.  :func:`model_sensitivities` estimates that coefficient three
+ways:
+
+  * ``uniform``  — w_l = 1: minimize raw Σ-weighted weight distortion,
+  * ``output``   — w_l = 1/tr(W Σ_X Wᵀ): each matrix's *relative* output
+                   error is weighted equally (the zero-extra-forward proxy),
+  * ``probe``    — empirical: inject a small seeded isotropic weight
+                   perturbation per matrix, measure the calibration logits
+                   MSE it causes, and set w_l to the measured
+                   logits-MSE-per-unit-weight-distortion (the
+                   linearity-theorem coefficient itself; costs one extra
+                   forward per matrix per calibration batch).
+
+Everything here is float64 numpy on the curve side; model taps run through
+quant/calibrate (imported lazily so `repro.plan` stays importable without
+pulling the model stack).
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.theory import waterfilling_distortion
+
+__all__ = [
+    "MatrixSensitivity",
+    "rate_at_level",
+    "distortion_at_level",
+    "level_at_rate",
+    "distortion_at_rate",
+    "rd_curve",
+    "sensitivity_from_matrix",
+    "apply_constraints",
+    "collect_sigma_x",
+    "model_sensitivities",
+]
+
+
+@dataclasses.dataclass
+class MatrixSensitivity:
+    """Distortion-rate curve inputs for one (out, in) weight matrix.
+
+    ``lambdas`` are the eigenvalues of the calibration Σ_X; together with
+    ``sigma_w2`` they determine the exact reverse-waterfilling curve
+    D_l(R).  ``weight`` is the linearity-theorem output-error coefficient
+    w_l; the planner minimizes Σ_l w_l · n_params_l · D_l(R_l).
+    ``floor_bits``/``ceil_bits`` are per-layer allocation constraints
+    (e.g. keep lm_head ≥ 4b).
+    """
+
+    name: str
+    out_features: int
+    in_features: int
+    sigma_w2: float
+    lambdas: np.ndarray          # (n,) eigenvalues of Σ_X, float64
+    weight: float = 1.0
+    floor_bits: float = 0.0
+    ceil_bits: float = 16.0
+    provenance: str = ""
+
+    @property
+    def n_params(self) -> int:
+        return self.out_features * self.in_features
+
+    @property
+    def spectrum(self) -> np.ndarray:
+        """s_i = σ_W² λ_i — the per-dimension source variances of eq. (2)."""
+        return self.sigma_w2 * np.asarray(self.lambdas, np.float64)
+
+
+# ---------------------------------------------------------------------------
+# Exact reverse-waterfilling curve evaluation
+# ---------------------------------------------------------------------------
+
+
+def rate_at_level(spectrum: np.ndarray, tau: float) -> float:
+    """R(τ) = (1/2n) Σ log₂ max(1, s_i/τ) bits/weight (eq. (2))."""
+    s = np.asarray(spectrum, np.float64)
+    ratio = np.maximum(1.0, s / max(tau, 1e-300))
+    return float(0.5 * np.mean(np.log2(ratio)))
+
+
+def distortion_at_level(spectrum: np.ndarray, tau: float) -> float:
+    """D(τ) = (1/n) Σ min(s_i, τ) — delegate to core.theory (σ_W² folded
+    into the spectrum)."""
+    return waterfilling_distortion(tau, 1.0, np.asarray(spectrum, np.float64))
+
+
+def level_at_rate(spectrum: np.ndarray, rate: float, *, tol: float = 1e-14,
+                  max_iter: int = 200) -> float:
+    """Inner water level τ with R(τ) = ``rate`` (bisection; R is monotone
+    decreasing in τ).  rate ≤ 0 returns s_max (zero rate, D = mean(s))."""
+    s = np.asarray(spectrum, np.float64)
+    hi = float(s.max())
+    if rate <= 0.0 or hi <= 0.0:
+        return hi
+    lo = 0.0
+    for _ in range(max_iter):
+        mid = 0.5 * (lo + hi)
+        if rate_at_level(s, mid) > rate:
+            lo = mid            # τ too low → too much rate
+        else:
+            hi = mid
+        if hi - lo < tol * max(hi, 1.0):
+            break
+    return 0.5 * (lo + hi)
+
+
+def distortion_at_rate(sens: MatrixSensitivity, rate: float) -> float:
+    """Exact D_l(R): invert the rate to the water level, evaluate D(τ)."""
+    s = sens.spectrum
+    return distortion_at_level(s, level_at_rate(s, rate))
+
+
+def rd_curve(sens: MatrixSensitivity,
+             rates: Sequence[float]) -> np.ndarray:
+    """Sampled D_l(R) over a rate grid (benchmarks / plan inspection)."""
+    return np.array([distortion_at_rate(sens, r) for r in rates], np.float64)
+
+
+# ---------------------------------------------------------------------------
+# Builders
+# ---------------------------------------------------------------------------
+
+
+def sensitivity_from_matrix(name: str, w, sigma_x, *, weight: float = 1.0,
+                            floor_bits: float = 0.0,
+                            ceil_bits: float = 16.0,
+                            provenance: str = "matrix",
+                            ) -> MatrixSensitivity:
+    """Curve inputs from an (out, in) weight matrix and its Σ_X."""
+    w = np.asarray(w, np.float64)
+    sigma = np.asarray(sigma_x, np.float64)
+    lam = np.linalg.eigvalsh(0.5 * (sigma + sigma.T))
+    lam = np.maximum(lam, 0.0)
+    return MatrixSensitivity(
+        name=name, out_features=w.shape[0], in_features=w.shape[1],
+        sigma_w2=float(np.mean(w * w)) + 1e-30, lambdas=lam,
+        weight=float(weight), floor_bits=floor_bits, ceil_bits=ceil_bits,
+        provenance=provenance)
+
+
+def apply_constraints(sens: List[MatrixSensitivity],
+                      floors: Optional[Dict[str, float]] = None,
+                      ceils: Optional[Dict[str, float]] = None,
+                      ) -> List[MatrixSensitivity]:
+    """Set per-layer floor/ceiling bits by fnmatch pattern on the name
+    (e.g. {"*/wo": 4.0} keeps every output projection ≥ 4 bits)."""
+    for s in sens:
+        for pat, b in (floors or {}).items():
+            if fnmatch.fnmatch(s.name, pat):
+                s.floor_bits = max(s.floor_bits, float(b))
+        for pat, b in (ceils or {}).items():
+            if fnmatch.fnmatch(s.name, pat):
+                s.ceil_bits = min(s.ceil_bits, float(b))
+        if s.floor_bits > s.ceil_bits:
+            raise ValueError(f"{s.name}: floor {s.floor_bits} > ceiling "
+                             f"{s.ceil_bits}")
+    return sens
+
+
+# ---------------------------------------------------------------------------
+# Model-level collection (fp forward only — plans are built BEFORE any
+# quantization, so there is no quantized-so-far model and no drift stats;
+# that independence is exactly what lets the executor parallelize)
+# ---------------------------------------------------------------------------
+
+
+def collect_sigma_x(cfg, params, calib_batches):
+    """One fp calibration pass; returns the StatsAccumulator with every
+    (layer, tap) Σ_X (reuses quant/calibrate's tap plumbing — the fp taps
+    stand in for both forward streams, so drift keys degenerate to Σ_X)."""
+    from repro.quant.calibrate import (StatsAccumulator, accumulate_stats,
+                                       forward_with_taps)
+    acc = StatsAccumulator()
+    for tokens in calib_batches:
+        _, taps = forward_with_taps(cfg, params, tokens)
+        for l, t in enumerate(taps):
+            accumulate_stats(acc, l, t, t)
+    return acc
+
+
+def _logits_mse(cfg, params, params_pert, calib_batches) -> float:
+    """Mean squared logits delta over the calibration batches."""
+    import numpy as _np
+
+    from repro.quant.calibrate import forward_with_taps
+    num = cnt = 0.0
+    for tokens in calib_batches:
+        lg0, _ = forward_with_taps(cfg, params, tokens)
+        lg1, _ = forward_with_taps(cfg, params_pert, tokens)
+        d = _np.asarray(lg1, _np.float64) - _np.asarray(lg0, _np.float64)
+        num += float((d ** 2).sum())
+        cnt += d.size
+    return num / max(cnt, 1.0)
+
+
+def model_sensitivities(cfg, params, calib_batches, *,
+                        weighting: str = "output",
+                        probe_eps: float = 0.05,
+                        seed: int = 0,
+                        floors: Optional[Dict[str, float]] = None,
+                        ceils: Optional[Dict[str, float]] = None,
+                        ) -> List[MatrixSensitivity]:
+    """Per-matrix sensitivities for a dense/moe model.
+
+    Names match quant/pipeline's budget keys exactly ("L{l}/attn/wq",
+    "L{l}/moe/w_up/e{e}"), so a plan built here drives either execution
+    path.  ``weighting`` ∈ {"uniform", "output", "probe"} — see module
+    docstring.
+    """
+    import jax.numpy as jnp
+    import numpy as _np
+
+    from repro.quant import pipeline as _pl
+    assert cfg.family in ("dense", "moe"), cfg.family
+    if weighting == "probe" and cfg.n_experts:
+        # probe coefficients (logits MSE per unit distortion) and any
+        # fallback scale for experts are incomparable units inside one
+        # waterfilling objective — refuse instead of silently mixing them
+        raise ValueError("weighting='probe' is dense-only; use 'uniform' "
+                         "or 'output' for moe models")
+    acc = collect_sigma_x(cfg, params, calib_batches)
+    mats = _pl._mats_for(cfg, params)
+    L = _pl._layer_count(params)
+    rng = _np.random.default_rng(seed)
+    out: List[MatrixSensitivity] = []
+
+    def weight_for(name, w, sigma, set_w):
+        if weighting == "uniform":
+            return 1.0
+        if weighting == "output":
+            # w_l = 1/tr(WΣWᵀ): then w_l·N_l·D_l is the matrix's RELATIVE
+            # output MSE (N_l·D_l = tr((W−Ŵ)Σ(W−Ŵ)ᵀ) is the absolute one)
+            tr = float(np.einsum("ij,jk,ik->", w, sigma, w))
+            return 1.0 / max(tr, 1e-30)
+        if weighting == "probe":
+            sw = float(np.sqrt(np.mean(w * w))) + 1e-30
+            delta = rng.standard_normal(w.shape) * (probe_eps * sw)
+            d_inj = float(np.einsum("ij,jk,ik->", delta, sigma, delta)
+                          / w.size)
+            pert = set_w(delta)
+            mse = _logits_mse(cfg, params, pert, calib_batches)
+            return mse / max(w.size * d_inj, 1e-30)
+        raise ValueError(f"unknown weighting {weighting!r}")
+
+    for l in range(L):
+        for path, tap, _ in mats:
+            name = f"L{l}/{'/'.join(path)}"
+            w = _np.asarray(_pl._get_w(params, l, path), _np.float64).T
+            sigma = acc.get(f"L{l}/{tap}/xx")
+
+            def set_w(delta, _l=l, _path=path, _w=w):
+                import copy
+                import jax
+                pert = jax.tree.map(lambda x: x, params)
+                pert = copy.deepcopy(jax.device_get(pert))
+                pert = jax.tree.map(jnp.asarray, pert)
+                _pl._set_w(pert, _l, _path, jnp.asarray((_w + delta).T))
+                return pert
+
+            out.append(sensitivity_from_matrix(
+                name, w, sigma, weight=weight_for(name, w, sigma, set_w),
+                provenance=f"calib:{len(calib_batches)}b/{weighting}"))
+        if cfg.n_experts:
+            for key in _pl._expert_keys(params):
+                tap = "hid" if key == "w_out" else "in"
+                for e in range(cfg.n_experts):
+                    name = f"L{l}/moe/{key}/e{e}"
+                    w = _np.asarray(params["layers"]["moe"][key][l, e],
+                                    _np.float64).T
+                    sigma = acc.get(f"L{l}/e{e}/{tap}/xx")
+                    wt = (1.0 if weighting != "output" else
+                          1.0 / max(float(np.einsum("ij,jk,ik->",
+                                                    w, sigma, w)), 1e-30))
+                    out.append(sensitivity_from_matrix(
+                        name, w, sigma, weight=wt,
+                        provenance=f"calib:{len(calib_batches)}b/routed"))
+    return apply_constraints(out, floors, ceils)

@@ -15,9 +15,17 @@ Quantizes a dense-family LM layer by layer:
 Methods: "watersic" (full), "watersic-plain" (no LMMSE/rescalers/drift),
 "hptq" (uniform lattice + entropy = Huffman-GPTQ), "rtn" (per-row absmax).
 
-Returns (quantized params, per-matrix QuantizedLinear dict, RateBudget,
-report rows) — examples/quantize_model.py turns this into the Table 1/2
-analogue; from_watersic converts entries into int8 serving weights.
+Rate allocation has two modes (DESIGN.md §10): the default legacy
+even-spread `RateBudget` (this pipeline IS the differential oracle the
+planner is tested against), or an explicit ``plan=`` `repro.plan.QuantPlan`
+whose waterfilled per-matrix targets drive the same sequential loop with
+the full drift/residual machinery intact.  (The *parallel* plan path —
+independent-layer statistics, fanned over host devices — lives in
+`repro.plan.executor`.)
+
+Returns (quantized params, per-matrix QuantizedLinear dict, budget
+controller, report rows) — examples/quantize_model.py turns this into the
+Table 1/2 analogue; from_watersic converts entries into serving weights.
 """
 from __future__ import annotations
 
@@ -31,8 +39,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core import (CalibStats, QuantizedLinear, RateBudget, huffman_rtn,
-                        quantize_at_rate, rtn_absmax)
+from repro.core import (CalibStats, PlanBudget, QuantizedLinear, RateBudget,
+                        huffman_rtn, quantize_at_rate, rtn_absmax)
 from .calibrate import (StatsAccumulator, accumulate_stats,
                         forward_with_taps, stats_for_matrix,
                         _attention_with_probs)
@@ -124,9 +132,14 @@ def _rtn_matrix(w_alg, target_bits: float) -> Tuple[np.ndarray, float]:
 
 
 def quantize_model(cfg: ArchConfig, params, calib_batches: List[np.ndarray],
-                   ptq: PTQConfig):
+                   ptq: PTQConfig, plan=None):
     """Sequential PTQ of a dense- or moe-family model.  calib_batches:
     token arrays (B, S).  Returns (qparams, qlinears, budget, rows).
+
+    ``plan``: an optional `repro.plan.QuantPlan` — per-matrix targets come
+    from the plan's waterfilled allocation instead of the even spread, and
+    achieved bits are written back into the plan entries.  The plan must
+    cover every budget key of this model (names like "L0/attn/wq").
 
     MoE: attention matrices get the full machinery; each expert's FFN
     matrices are calibrated on exactly its routed tokens (per-expert Σ_X
@@ -150,7 +163,14 @@ def quantize_model(cfg: ArchConfig, params, calib_batches: List[np.ndarray],
                 per = int(np.prod(we.shape[2:]))
                 for e in range(cfg.n_experts):
                     layer_params[f"L{l}/moe/{key}/e{e}"] = per
-    budget = RateBudget(ptq.target_bits, layer_params)
+    if plan is not None:
+        missing = sorted(set(layer_params) - set(plan.names()))
+        if missing:
+            raise KeyError(f"plan is missing entries for {missing[:5]}"
+                           f"{'...' if len(missing) > 5 else ''}")
+        budget = PlanBudget(plan)
+    else:
+        budget = RateBudget(ptq.target_bits, layer_params)
     qlinears: Dict[str, QuantizedLinear] = {}
     rows = []
 

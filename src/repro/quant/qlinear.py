@@ -21,26 +21,36 @@ kernel orientation plus an escape COO —
 — halving the weight HBM bytes again vs int8.  dense/moe dispatch on the
 payload dtype (uint8 ⇒ packed) and route through the fused packed kernel.
 
+``nbits=3`` emits the int3 bit-plane leaf (DESIGN.md §10) — payload
+``(…, out, 3, ceil(in/8))`` at exactly 3 bits/code, same escape-COO
+contract — the serving format behind the planner's 2/3-bit snap targets.
+Mixed-rate serving (repro.plan): ``nbits_by_path`` picks the format PER
+LEAF, so a 3-bit MLP stack, 4-bit attention projections, and an 8-bit
+output projection coexist in one served param tree; models/layers.dense
+dispatches per leaf, the engines never care.
+
 Two producers:
   * ``from_watersic``    — real codes/scales from a quant.pipeline run
-                           (small models, tests/examples); ``nbits=4``
-                           yields the packed leaf with exact escapes,
+                           (small models, tests/examples); ``nbits=4``/
+                           ``nbits=3`` yield packed leaves w/ exact escapes,
   * ``quantize_params_tree`` — traceable absmax-scaled codes used by the
     dry-run and the synthetic serving benchmarks (escape-free by
     construction, so the packed payload is lossless).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.packing import pack_codes_jnp, pack_int4_planar_jnp
+from repro.core.packing import (pack_codes_jnp, pack_int3_planar_jnp,
+                                pack_int4_planar_jnp)
 
 __all__ = ["quantize_params_tree", "is_qweight", "is_packed_qweight",
-           "from_watersic", "qweight_bytes"]
+           "is_packed3_qweight", "from_watersic", "qweight_bytes",
+           "leaf_format_histogram", "serving_formats_from_plan"]
 
 #: param-dict keys eligible for weight quantization (the big matmuls)
 _WEIGHT_KEYS = ("w",)
@@ -52,9 +62,18 @@ def is_qweight(x) -> bool:
     return isinstance(x, dict) and "codes" in x
 
 
+def is_packed3_qweight(x) -> bool:
+    """Int3 bit-plane leaf: uint8 payload (…, out, 3, ceil(in/8)) — the
+    plane axis of static size 3 discriminates it from the int4 nibble
+    payload (weight dims are ≥ min_dim, so out == 3 cannot occur)."""
+    return (is_qweight(x) and x["codes"].dtype == jnp.uint8
+            and x["codes"].ndim >= 3 and x["codes"].shape[-2] == 3)
+
+
 def is_packed_qweight(x) -> bool:
     """Packed-int4 leaf: uint8 planar payload in (…, out, in/2) orientation."""
-    return is_qweight(x) and x["codes"].dtype == jnp.uint8
+    return is_qweight(x) and x["codes"].dtype == jnp.uint8 \
+        and not is_packed3_qweight(x)
 
 
 def _quantize_leaf(w: jnp.ndarray, nbits: int = 8) -> Dict[str, jnp.ndarray]:
@@ -92,6 +111,30 @@ def _quantize_leaf_packed(w: jnp.ndarray) -> Dict[str, jnp.ndarray]:
             "esc_dval": jnp.zeros(lead + (0,), jnp.float32)}
 
 
+def _quantize_leaf_packed3(w: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Traceable int3 bit-plane leaf for (…, in, out) weights (DESIGN §10).
+
+    Absmax codes clipped to [-3, 3] ⊂ [-4, 3], so the payload is
+    escape-free and the zero-capacity COO arrays make the correction a
+    static no-op (stackable across scanned layers)."""
+    qmax = 3.0
+    absmax = jnp.max(jnp.abs(w), axis=-1, keepdims=True)
+    s = (absmax[..., 0] / qmax + 1e-12)
+    codes = jnp.clip(jnp.rint(w / absmax * qmax), -qmax, qmax)
+    codes = jnp.swapaxes(codes.astype(jnp.int8), -1, -2)        # (…, o, i)
+    pad = (-codes.shape[-1]) % 8
+    if pad:
+        widths = [(0, 0)] * (codes.ndim - 1) + [(0, pad)]
+        codes = jnp.pad(codes, widths)
+    lead = w.shape[:-2]
+    return {"codes": pack_int3_planar_jnp(codes),
+            "s": s.astype(jnp.float32),
+            "t": jnp.ones(w.shape[:-2] + (w.shape[-1],), jnp.float32),
+            "esc_row": jnp.zeros(lead + (0,), jnp.int32),
+            "esc_col": jnp.zeros(lead + (0,), jnp.int32),
+            "esc_dval": jnp.zeros(lead + (0,), jnp.float32)}
+
+
 def _eligible(path_keys: Tuple[str, ...], leaf, min_dim: int) -> bool:
     if not path_keys or not hasattr(leaf, "ndim") or leaf.ndim < 2:
         return False
@@ -105,18 +148,51 @@ def _eligible(path_keys: Tuple[str, ...], leaf, min_dim: int) -> bool:
     return True
 
 
+def _leaf_for_nbits(node, nbits: int, packed: bool):
+    if nbits == 3:
+        return _quantize_leaf_packed3(node)
+    if nbits == 4 and packed:
+        return _quantize_leaf_packed(node)
+    return _quantize_leaf(node, nbits)
+
+
 def quantize_params_tree(params, *, min_dim: int = 64,
                          skip_embed: bool = True, nbits: int = 8,
-                         packed: bool = False):
-    """Replace eligible weight leaves with int8/int4 code dicts (traceable).
+                         packed: bool = False,
+                         nbits_by_path: Optional[
+                             Callable[[Tuple[str, ...]], Optional[int]]
+                         ] = None):
+    """Replace eligible weight leaves with int8/int4/int3 code dicts
+    (traceable).
 
     Model param trees are nested dicts/lists of arrays (see models/); the
     walk preserves structure and rewrites eligible weights in place.
     ``packed=True`` (requires nbits=4) emits the planar nibble-packed leaf
-    format served by the fused packed kernel — half the HBM bytes of int8.
+    format served by the fused packed kernel — half the HBM bytes of int8;
+    ``nbits=3`` the int3 bit-plane leaf (3/8 the bytes of int8).
+
+    ``nbits_by_path`` enables MIXED-RATE serving (DESIGN.md §10): called
+    with each eligible leaf's path, it returns 3 | 4 | 8 to pick that
+    leaf's format, or None/16 to leave it full precision — e.g. a 3-bit
+    MLP stack next to an 8-bit output projection in one served model.
+    Granularity is per leaf: scanned models stack all layers of one
+    matrix type in a single leaf, which therefore shares a format
+    (per-layer mixing within a stack belongs to the PTQ pipeline, whose
+    dequantized write-back has no format constraint).
     """
     if packed and nbits != 4:
         raise ValueError("packed leaves require nbits=4")
+
+    def fmt_for(path):
+        if nbits_by_path is None:
+            return nbits, packed
+        b = nbits_by_path(path)
+        if b in (None, 16):
+            return None, False
+        if b not in (3, 4, 8):
+            raise ValueError(f"nbits_by_path({path}) = {b!r}; expected "
+                             "3, 4, 8, 16 or None")
+        return b, (b == 4)   # 4-bit serving always means the packed leaf
 
     def walk(node, path):
         if isinstance(node, dict):
@@ -130,8 +206,14 @@ def quantize_params_tree(params, *, min_dim: int = 64,
         if skip_embed and "embed" in path:
             return node
         if _eligible(path, node, min_dim):
-            return _quantize_leaf_packed(node) if packed \
-                else _quantize_leaf(node, nbits)
+            b, pk = fmt_for(path)
+            if b is None:
+                return node
+            if b == 3 and path[-1] in _EXPERT_KEYS:
+                # MoE experts contract via einsum, where only the nibble
+                # unpack is wired up — serve experts at 4 bits instead
+                b, pk = 4, True
+            return _leaf_for_nbits(node, b, pk)
         return node
 
     return walk(params, ())
@@ -148,7 +230,11 @@ def from_watersic(q, *, transpose: bool = True, nbits: int = 8,
     ``nbits=4``: the packed leaf — planar uint8 payload in KERNEL
     orientation (out, ceil(in/2)) plus exact escape COO (codes outside
     [-8, 7] become sparse deltas, packing never loses them).  Pass
-    ``escape_capacity`` to fix the COO length (stackable across layers)."""
+    ``escape_capacity`` to fix the COO length (stackable across layers).
+
+    ``nbits=3``: the int3 bit-plane leaf (out, 3, ceil(in/8)) with the
+    same exact-escape contract over [-4, 3] — the planner's 2/3-bit
+    serving format (DESIGN.md §10)."""
     codes = np.asarray(q.codes)
     if q.dead_mask.any():
         full = np.zeros((q.out_features, q.in_features), codes.dtype)
@@ -159,9 +245,10 @@ def from_watersic(q, *, transpose: bool = True, nbits: int = 8,
         s_full[live] = q.column_scale
     else:
         s_full = q.column_scale.astype(np.float32)
-    if nbits == 4:
+    if nbits in (3, 4):
         payload, er, ec, ev = pack_codes_jnp(
-            jnp.asarray(codes, jnp.int32), escape_capacity=escape_capacity)
+            jnp.asarray(codes, jnp.int32), nbits=nbits,
+            escape_capacity=escape_capacity)
         return {"codes": payload,
                 "s": jnp.asarray(s_full, jnp.float32),
                 "t": jnp.asarray(q.t, jnp.float32),
@@ -177,21 +264,80 @@ def from_watersic(q, *, transpose: bool = True, nbits: int = 8,
 def qweight_bytes(tree) -> Tuple[int, int]:
     """(quantized bytes, would-be bf16 bytes) over the tree — the HBM win.
 
-    A uint8 codes leaf holds TWO int4 codes per byte (packed serving
-    format), so it stands in for 2 logical weights = 4 bf16 bytes."""
+    A uint8 int4 codes leaf holds TWO codes per byte (packed serving
+    format), so it stands in for 2 logical weights = 4 bf16 bytes; an
+    int3 bit-plane leaf (plane axis of size 3) holds 8 codes per 3 bytes
+    = 16/3 bf16 bytes per payload byte."""
     qb = fb = 0
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     for path, leaf in flat:
         keys = tuple(str(getattr(p, "key", getattr(p, "idx", p)))
                      for p in path)
         if "codes" in keys:
+            qb += leaf.size
             if leaf.dtype == jnp.uint8:
-                qb += leaf.size
-                fb += leaf.size * 4
+                if leaf.ndim >= 3 and leaf.shape[-2] == 3:   # int3 planes
+                    fb += (leaf.size // 3) * 8 * 2
+                else:                                        # int4 nibbles
+                    fb += leaf.size * 4
             else:
-                qb += leaf.size
                 fb += leaf.size * 2
         elif hasattr(leaf, "dtype"):
             qb += leaf.size * leaf.dtype.itemsize
             fb += leaf.size * leaf.dtype.itemsize
     return qb, fb
+
+
+def leaf_format_histogram(tree) -> Dict[str, int]:
+    """Weight-leaf serving formats → leaf count (mixed-rate visibility:
+    the engines and launch/plan.py print this next to tokens/s)."""
+    out: Dict[str, int] = {}
+
+    def bump(k):
+        out[k] = out.get(k, 0) + 1
+
+    def walk(node):
+        if isinstance(node, dict):
+            if is_qweight(node):
+                bump("packed-int3" if is_packed3_qweight(node)
+                     else "packed-int4" if is_packed_qweight(node)
+                     else "int4" if node["codes"].dtype == jnp.int4
+                     else "int8")
+                return
+            for v in node.values():
+                walk(v)
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                walk(v)
+        elif hasattr(node, "ndim") and getattr(node, "ndim", 0) >= 2:
+            bump(str(node.dtype))
+
+    walk(tree)
+    return dict(sorted(out.items()))
+
+
+def serving_formats_from_plan(plan, *, default: Optional[int] = None
+                              ) -> Callable[[Tuple[str, ...]], Optional[int]]:
+    """QuantPlan → ``nbits_by_path`` for :func:`quantize_params_tree`.
+
+    Serving leaves stack every layer of one matrix type, so the per-layer
+    payloads of the plan aggregate to per-leaf formats: each group takes
+    the MAX payload bits across its layers/experts (never serve a matrix
+    below its planned format).  A leaf with no matching plan entries gets
+    ``default`` (None = leave full precision).
+    """
+    groups: Dict[str, int] = {}
+    for e in plan:
+        key = e.matrix
+        if key.startswith("moe/"):
+            key = "/".join(key.split("/")[:2])      # strip the /e{i} suffix
+        groups[key] = max(groups.get(key, 0), int(e.payload_bits))
+
+    def nbits_by_path(path: Tuple[str, ...]) -> Optional[int]:
+        # dense leaves: (…, "attn", "wq", "w") → "attn/wq";
+        # expert leaves: (…, "moe", "w_up") → "moe/w_up"
+        key = "/".join(path[-2:]) if path[-1] in _EXPERT_KEYS \
+            else "/".join(path[-3:-1])
+        return groups.get(key, default)
+
+    return nbits_by_path

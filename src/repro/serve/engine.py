@@ -45,8 +45,14 @@ logits being ready — the host-side argmax transfer is decode-side.
 Weights may be served dequantized-on-the-fly from WaterSIC int codes
 (quant/qlinear) — the paper's deployment story: decode is weight-bytes
 bound, so 2–4 bit codes cut the dominant roofline term; the packed-int4
-leaf format halves the weight bytes again vs int8.  launch/serve.py wraps
-the same decode_step in pjit for the production mesh.
+leaf format halves the weight bytes again vs int8, the int3 bit-plane
+leaf takes 3/8 of them.  Mixed-rate param trees (repro.plan, DESIGN.md
+§10) serve directly: models.layers.dense dispatches per leaf, so a 3-bit
+MLP stack and an 8-bit output projection coexist in one engine — both
+engines record the realized ``weight_bytes`` and per-format
+``weight_formats`` histogram at construction so benchmarks and drivers
+report the mix next to tokens/s.  launch/serve.py wraps the same
+decode_step in pjit for the production mesh.
 """
 from __future__ import annotations
 
@@ -62,6 +68,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.models import (cache_reset_slot, cache_write_slot, decode_chunk,
                           decode_step, init_cache)
+from repro.quant import leaf_format_histogram, qweight_bytes
 
 __all__ = ["Request", "RoundStats", "StepStats", "ServeEngine",
            "ContinuousEngine"]
@@ -165,6 +172,10 @@ class ServeEngine:
         self.prefill_chunk = prefill_chunk
         self.queue: deque[Request] = deque()
         self.round_stats: List[RoundStats] = []
+        # mixed-rate serving visibility (DESIGN.md §10): realized weight
+        # HBM bytes vs bf16 and the per-leaf format mix of this engine
+        self.weight_bytes, self.weight_bytes_bf16 = qweight_bytes(params)
+        self.weight_formats = leaf_format_histogram(params)
         self._decode = decode_fn or jax.jit(
             lambda params, cache, tok: decode_step(cfg, params, cache, tok))
         self._decode_chunk = decode_chunk_fn or jax.jit(
@@ -295,6 +306,8 @@ class ContinuousEngine:
         self.queue: deque[Request] = deque()
         self.step_stats: List[StepStats] = []
         self.finished: List[Request] = []
+        self.weight_bytes, self.weight_bytes_bf16 = qweight_bytes(params)
+        self.weight_formats = leaf_format_histogram(params)
         self._decode = decode_fn or jax.jit(
             lambda params, cache, tok: decode_step(cfg, params, cache, tok))
         self._decode_chunk = decode_chunk_fn or jax.jit(

@@ -147,3 +147,70 @@ def test_dequantize_matches_quantized_linear():
                                   jnp.asarray(q.t, jnp.float32))
     np.testing.assert_allclose(np.asarray(w_hat_kernel),
                                np.asarray(q.dequant()), rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# int3 bit-plane payload (DESIGN.md §10): XLA-unpack path parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (1, 128, 128),       # decode batch 1
+    (8, 120, 96),        # k % 8 == 0
+    (5, 67, 96),         # ragged k: pad columns must contribute nothing
+])
+def test_packed3_matches_int8_path(m, k, n):
+    rng = np.random.default_rng(m + k + n)
+    x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    z = rng.integers(-4, 4, (n, k)).astype(np.int8)
+    s = jnp.asarray((rng.random(k) * 0.2 + 0.01).astype(np.float32))
+    t = jnp.asarray((rng.random(n) + 0.5).astype(np.float32))
+    payload, er, ec, ev = pack_codes_jnp(jnp.asarray(z, jnp.int32), nbits=3)
+    assert payload.shape == (n, 3, -(-k // 8))
+    assert er.shape[0] == 0              # in-range codes: no escapes
+    out = dequant_matmul(x, payload, s, t)
+    ref = dequant_matmul_xla(x, jnp.asarray(z), s, t)
+    scale = float(jnp.abs(ref).max()) + 1e-6
+    assert float(jnp.abs(out - ref).max()) / scale < 1e-5
+
+
+def test_packed3_escape_correction_exact():
+    """Codes outside [-4, 3] must be restored exactly by the COO deltas."""
+    rng = np.random.default_rng(33)
+    m, k, n = 4, 40, 64
+    z = rng.integers(-4, 4, (n, k)).astype(np.int32)
+    z[0, 3], z[7, 11], z[63, 39] = 21, -9, 3  # 3 in-range: not an escape
+    x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    s = jnp.asarray((rng.random(k) * 0.2 + 0.01).astype(np.float32))
+    t = jnp.asarray((rng.random(n) + 0.5).astype(np.float32))
+    payload, er, ec, ev = pack_codes_jnp(jnp.asarray(z), nbits=3)
+    assert er.shape[0] == 2
+    out = dequant_matmul(x, payload, s, t, escapes=(er, ec, ev))
+    ref = jnp.asarray(np.asarray(x) @ (np.asarray(z).T
+                                       * np.asarray(s)[:, None])
+                      * np.asarray(t)[None, :])
+    scale = float(jnp.abs(ref).max()) + 1e-6
+    assert float(jnp.abs(out - ref).max()) / scale < 1e-5
+
+
+def test_packed3_from_watersic_serving_matches_dequant():
+    """from_watersic(nbits=3) leaf through models.layers.dense equals the
+    QuantizedLinear dequant oracle — the planner's 3-bit serving format."""
+    import jax
+
+    from repro.core import CalibStats, quantize_at_rate
+    from repro.models.layers import dense
+    from repro.quant import from_watersic
+    rng = np.random.default_rng(5)
+    a, nn = 48, 40
+    sigma = np.eye(nn) + 0.1 * np.ones((nn, nn))
+    w = rng.standard_normal((a, nn)).astype(np.float32)
+    q = quantize_at_rate(jnp.asarray(w),
+                         CalibStats(sigma_x=jnp.asarray(sigma, jnp.float32)),
+                         2.5, damp=1e-4)
+    leaf = from_watersic(q, nbits=3)
+    x = jnp.asarray(rng.standard_normal((3, nn)).astype(np.float32))
+    y = dense({"w": leaf}, x)
+    ref = x @ q.dequant().T
+    scale = float(jnp.abs(ref).max()) + 1e-6
+    assert float(jnp.abs(y - ref).max()) / scale < 1e-4

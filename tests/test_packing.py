@@ -118,3 +118,75 @@ def test_planar_pack_matches_paired_values():
     paired = unpack_int4(pack_int4(z))
     np.testing.assert_array_equal(planar, z)
     np.testing.assert_array_equal(paired, z)
+
+
+# ---------------------------------------------------------------------------
+# int3 bit-plane payload (8 codes / 3 bytes — DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+def test_int3_planar_roundtrip():
+    import jax.numpy as jnp
+
+    from repro.core import pack_int3_planar_jnp, unpack_int3_planar_jnp
+    rng = np.random.default_rng(0)
+    z = rng.integers(-4, 4, size=(16, 40))
+    pk = pack_int3_planar_jnp(jnp.asarray(z))
+    assert pk.shape == (16, 3, 5)          # 8 codes per 3 bytes
+    np.testing.assert_array_equal(np.asarray(unpack_int3_planar_jnp(pk)), z)
+
+
+def test_pack_codes_int3_with_escapes():
+    rng = np.random.default_rng(1)
+    z = rng.integers(-4, 4, size=(8, 10)).astype(np.int64)
+    z[3, 4] = 1000
+    z[7, 9] = -77
+    p = pack_codes(z, nbits=3)
+    assert p.escape_idx.size == 2
+    np.testing.assert_array_equal(unpack_codes(p), z)
+    rows, cols, dval = escapes_to_coo(p)
+    body = unpack_codes(
+        pack_codes(np.clip(z, -4, 3), nbits=3)).astype(np.float64)
+    body[rows, cols] += dval
+    np.testing.assert_array_equal(body, z)
+
+
+def test_int3_storage_bits_exact_with_pad():
+    """8-group pad columns must NOT count as payload: exactly 3 bits/code."""
+    z = np.zeros((6, 13), np.int64)           # 13 → padded to 16 columns
+    p = pack_codes(z, nbits=3)
+    assert p.payload.shape == (6, 3, 2)
+    assert p.storage_bits_per_entry == 3.0    # exact — pad excluded
+    z[1, 2] = 99
+    p2 = pack_codes(z, nbits=3)
+    # (payload 6·13·3 bits + one uint32+int32 escape) / 78
+    assert p2.storage_bits_per_entry == (6 * 13 * 3 + 64) / 78
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), rows=st.integers(1, 24),
+       cols=st.integers(1, 31), scale=st.floats(0.5, 40.0))
+def test_property_int3_roundtrip(seed, rows, cols, scale):
+    rng = np.random.default_rng(seed)
+    z = (rng.standard_normal((rows, cols)) * scale).round().astype(np.int64)
+    p = pack_codes(z, nbits=3)
+    np.testing.assert_array_equal(unpack_codes(p), z)
+
+
+def test_pack_codes_jnp_int3_capacity():
+    import jax.numpy as jnp
+
+    from repro.core import unpack_int3_planar_jnp
+    rng = np.random.default_rng(3)
+    z = rng.integers(-4, 4, size=(5, 9)).astype(np.int64)
+    z[2, 7] = 30
+    payload, er, ec, ev = pack_codes_jnp(jnp.asarray(z, jnp.int32), nbits=3,
+                                         escape_capacity=4)
+    assert er.shape == (4,)                   # static COO length
+    body = np.asarray(unpack_int3_planar_jnp(payload))[:, :9].astype(float)
+    body[np.asarray(er), np.asarray(ec)] += np.asarray(ev)
+    np.testing.assert_array_equal(body, z)
+    import pytest as _pytest
+    with _pytest.raises(ValueError):          # undersized capacity rejected
+        pack_codes_jnp(jnp.asarray(z, jnp.int32), nbits=3,
+                       escape_capacity=0)

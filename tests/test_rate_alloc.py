@@ -1,7 +1,7 @@
-"""Global rate budget controller (paper App. D)."""
+"""Global rate budget controllers (paper App. D; now shims over repro.plan)."""
 import pytest
 
-from repro.core import RateBudget
+from repro.core import PlanBudget, RateBudget
 
 
 def test_even_allocation_and_redistribution():
@@ -14,6 +14,7 @@ def test_even_allocation_and_redistribution():
     rb.record("b", 10 / 3)
     rb.record("c", rb.next_target("c"))
     assert rb.realized_rate == pytest.approx(3.0, abs=1e-9)
+    assert not rb.budget_overrun
 
 
 def test_already_quantized_raises():
@@ -23,7 +24,47 @@ def test_already_quantized_raises():
         rb.next_target("a")
 
 
-def test_floor_rate():
+def test_floor_rate_records_overrun():
+    """Satellite fix: a binding floor must RAISE the overrun flag instead of
+    silently hiding the overspend (realized_rate > target with no signal)."""
     rb = RateBudget(1.0, {"a": 100, "b": 100})
-    rb.record("a", 1.9)  # overspend
-    assert rb.next_target("b") >= 0.05
+    rb.record("a", 1.98)  # near-total overspend: 2 of 200 bits left
+    t = rb.next_target("b")
+    assert t >= 0.05
+    assert rb.budget_overrun                    # the clamp is not silent
+    assert rb.overrun_bits == pytest.approx(0.05 * 100 - (200 - 198))
+    rb.record("b", t)
+    assert rb.realized_rate > rb.target_bits_per_param  # and explained
+    assert any("OVERRUN" in line for line in rb.summary())
+
+
+def test_no_overrun_when_floor_does_not_bind():
+    rb = RateBudget(3.0, {"a": 10, "b": 10})
+    rb.record("a", rb.next_target("a"))
+    rb.next_target("b")
+    assert not rb.budget_overrun
+    assert rb.overrun_bits == 0.0
+
+
+def test_plan_budget_delegates_to_plan():
+    from repro.plan import MatrixSensitivity, build_plan
+    import numpy as np
+    sens = [MatrixSensitivity(name=f"L0/m{i}", out_features=8,
+                              in_features=16, sigma_w2=1.0,
+                              lambdas=np.full(16, v))
+            for i, v in enumerate([16.0, 1.0])]
+    plan = build_plan(sens, 3.0, snap=False, weighting="uniform")
+    pb = PlanBudget(plan)
+    assert pb.target_bits_per_param == 3.0
+    t0 = pb.next_target("L0/m0")
+    t1 = pb.next_target("L0/m1")
+    assert t0 == pytest.approx(4.0, abs=1e-6)   # two-level waterfilling
+    assert t1 == pytest.approx(2.0, abs=1e-6)
+    pb.record("L0/m0", t0)
+    pb.record("L0/m1", t1)
+    assert pb.realized_rate == pytest.approx(3.0, abs=1e-6)
+    assert plan.entry("L0/m0").achieved_bits == pytest.approx(t0)
+    with pytest.raises(KeyError):
+        pb.next_target("L0/m0")                 # already quantized
+    with pytest.raises(KeyError):
+        pb.next_target("L9/nope")               # not in the plan
