@@ -1,0 +1,95 @@
+"""CI bytes gate: serve_bench-reported weight bytes vs exact accounting.
+
+Stdlib-only (no jax / no repro import — runs anywhere, including a bare
+CI step) audit of the ``serve_bench.py --json`` artifact: for every
+served format it recomputes each quantized leaf's payload, scale, and
+escape-COO bytes from the packing-layout formulas (core/packing,
+DESIGN.md §8) —
+
+    int8          stack · out · in                         1 B / code
+    packed-int4   stack · out · ceil(in/2)                 2 codes / B
+    packed-int3   stack · out · 3 · ceil(in/8)             8 codes / 3 B
+    packed-int2   stack · out · ceil(in/4)                 4 codes / B
+    scales        stack · (in + out) · 4                   f32 s and t
+    escape COO    stack · capacity · 12                    i32 r/c + f32 d
+
+— and asserts (1) each leaf's recorded byte counts match the formulas,
+(2) the inventory sums to the ENGINE-reported ``weight_bytes``, and
+(3) the headline bytes-per-weight ladder is consistent with that total.
+A drifting payload layout, a leaf format silently falling back to a
+wider payload, or an engine accounting bug all fail this gate.
+
+    python benchmarks/check_bytes.py /tmp/serve_bench.json
+"""
+import json
+import math
+import sys
+
+#: payload bytes per (stack, out, in) by leaf format — the storage side of
+#: core/packing's ``storage_bits_per_entry`` accounting (pad bytes stored;
+#: "int4" is the unpacked jnp.int4 dtype, which XLA stores one per byte)
+PAYLOAD_BYTES = {
+    "int8": lambda o, i: o * i,
+    "int4": lambda o, i: o * i,
+    "packed-int4": lambda o, i: o * math.ceil(i / 2),
+    "packed-int3": lambda o, i: o * 3 * math.ceil(i / 8),
+    "packed-int2": lambda o, i: o * math.ceil(i / 4),
+}
+
+#: the serving ladder must exercise every packed rung + int8 — a format
+#: silently dropping out of serve_bench would un-gate its accounting
+REQUIRED_FORMATS = {"int8", "packed-int4", "packed-int3", "packed-int2"}
+
+
+def check_format(name, entry):
+    reported = entry["weight_bytes"]
+    total = 0
+    n_checked = 0
+    for rec in entry["inventory"]:
+        if rec["format"] == "raw":
+            total += rec["bytes"]
+            continue
+        if rec["format"] not in PAYLOAD_BYTES:
+            raise SystemExit(f"{name}: unknown leaf format {rec['format']!r}"
+                             f" at {rec['path']} — extend check_bytes.py")
+        st, o, i = rec["stack"], rec["out"], rec["in"]
+        payload = st * PAYLOAD_BYTES[rec["format"]](o, i)
+        scale = st * (i + o) * 4
+        esc = st * rec["esc_capacity"] * 12
+        for field, want in (("payload_bytes", payload),
+                            ("scale_bytes", scale), ("esc_bytes", esc)):
+            got = rec[field]
+            if got != want:
+                raise SystemExit(
+                    f"{name}: {rec['path']} ({rec['format']}) {field} "
+                    f"mismatch: reported {got}, accounting says {want}")
+        total += rec["bytes"]
+        n_checked += 1
+    if total != reported:
+        raise SystemExit(f"{name}: inventory sums to {total} B but the "
+                         f"engine reported weight_bytes={reported}")
+    return n_checked
+
+
+def main(path):
+    with open(path) as f:
+        data = json.load(f)
+    ladder = data["ladder"]
+    served_formats = set()
+    for name, entry in sorted(ladder.items()):
+        n = check_format(name, entry)
+        served_formats.update(k for k in entry["weight_formats"]
+                              if k in PAYLOAD_BYTES)
+        print(f"  {name}: {n} quantized leaves, "
+              f"{entry['weight_bytes']} B — accounting exact")
+    missing = REQUIRED_FORMATS - served_formats
+    if missing:
+        raise SystemExit(f"ladder never served formats {sorted(missing)} — "
+                         "the bytes gate no longer covers them")
+    print(f"check_bytes: OK ({len(ladder)} formats, all accounted)")
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 2:
+        raise SystemExit("usage: check_bytes.py <serve_bench.json>")
+    main(sys.argv[1])

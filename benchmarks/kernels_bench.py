@@ -12,6 +12,7 @@ the TPU roofline is bound by at decode batch sizes (DESIGN.md §8).
     python benchmarks/kernels_bench.py [--quick]
 """
 import argparse
+import functools
 import time
 
 import numpy as np
@@ -19,7 +20,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import chol_lower, pack_codes_jnp, random_covariance, zsic_numpy
-from repro.kernels.dequant import (dequant_matmul_packed_xla,
+from repro.kernels.dequant import (dequant_matmul_packed_ref,
+                                   dequant_matmul_packed_xla,
                                    dequant_matmul_ref, dequant_matmul_xla)
 from repro.kernels.zsic import zsic_block_pallas, zsic_quantize
 
@@ -58,6 +60,25 @@ def run(rows_out, quick=False):
     rows_out.append(("kernels/dequant_matmul_packed_xla", us_packed,
                      f"int8_us={us_xla:.0f};vs_int8_err={err:.2e};"
                      f"hbm_bytes_per_w=0.5"))
+
+    # sub-4-bit ladder rungs (DESIGN.md §8): int3 bit-plane and int2 field
+    # payloads through the same XLA-twin formulation (in-graph unpack; the
+    # in-kernel Pallas unpack parity is gated by the packed-kernel-parity
+    # CI matrix, which runs interpret mode on these exact layouts)
+    for nbits, bpw in ((3, 3 / 8), (2, 0.25)):
+        zc = jnp.clip(jnp.asarray(z, jnp.int32), *{3: (-4, 3),
+                                                   2: (-2, 1)}[nbits])
+        pl_n, _, _, _ = pack_codes_jnp(zc, nbits=nbits)
+        us_n = _time(functools.partial(dequant_matmul_packed_ref,
+                                       nbits=nbits),
+                     x, pl_n, s, t, reps=reps)
+        out_n = dequant_matmul_packed_ref(x, pl_n, s, t, nbits=nbits)
+        ref_n = dequant_matmul_xla(x, zc.astype(jnp.int8), s, t)
+        err_n = float(jnp.abs(out_n - ref_n).max()) / (
+            float(jnp.abs(ref_n).max()) + 1e-6)
+        rows_out.append((f"kernels/dequant_matmul_packed{nbits}_xla", us_n,
+                         f"int8_us={us_xla:.0f};vs_int8_err={err_n:.2e};"
+                         f"hbm_bytes_per_w={bpw:.3f}"))
 
     nn, aa = (64, 128) if quick else (128, 256)
     sigma, _ = random_covariance(nn, condition=20.0, seed=1)

@@ -134,9 +134,17 @@ def run(rows, quick=False):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the result rows as JSON (CI artifact)")
     args = ap.parse_args()
     rows = []
     run(rows, quick=args.quick)
+    if args.json:
+        import json
+        with open(args.json, "w") as f:
+            json.dump({"rows": rows}, f, indent=1, sort_keys=True,
+                      default=float)
+        print(f"wrote {args.json}")
     print("plan_bench OK")
 
 

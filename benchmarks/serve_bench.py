@@ -1,14 +1,21 @@
 """Serving benchmark: weight-format ladder + scheduler comparison.
 
 Part 1 (ladder): runs the static-batching ServeEngine (chunked prefill,
-DESIGN.md §8) over the same request set with bf16, int8-code, and
-packed-int4 weights and reports, per format:
+DESIGN.md §8) over the same request set with bf16, int8-code, and the
+full packed sub-byte ladder (int4 nibbles / int3 bit-planes / int2
+fields) and reports, per format:
 
   * decode tokens/s (greedy generation wall clock, per-round timing hooks),
   * prefill device calls (ceil(prompt_len/chunk) with chunking),
   * modeled HBM bytes per logical weight — the decode roofline term the
     quantized formats shrink (measured from the actual param tree via
     quant.qweight_bytes, so scale vectors and escape COO overhead count).
+
+``--json PATH`` dumps the rows plus, per ladder format, the
+engine-reported ``weight_bytes`` and the exact per-leaf storage
+inventory (quant.leaf_inventory) — CI uploads the file as a workflow
+artifact and ``benchmarks/check_bytes.py`` (stdlib-only) gates that the
+reported bytes match the packing-layout accounting for every format.
 
 Part 2 (scheduler): a mixed-prompt-length, mixed-budget workload with
 Poisson arrivals driven through the static-rounds engine and the
@@ -25,6 +32,7 @@ dispatch-count-structural, so it survives the backend change.
     python benchmarks/serve_bench.py [--quick]
 """
 import argparse
+import json
 import time
 
 import numpy as np
@@ -33,7 +41,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.models import decode_chunk, decode_step, init_params, split_tree
-from repro.quant import quantize_params_tree, qweight_bytes
+from repro.quant import leaf_inventory, quantize_params_tree, qweight_bytes
 from repro.serve import ContinuousEngine, Request, ServeEngine
 
 
@@ -52,6 +60,8 @@ def _engine_run(cfg, params, prompts, max_new, chunk):
             "wall_s": wall, "tokens": toks,
             "prefill_calls": st.prefill_calls,
             "prefill_s": st.prefill_s,
+            "weight_bytes": eng.weight_bytes,
+            "weight_formats": dict(eng.weight_formats),
             "out": {r.rid: tuple(r.out_tokens) for r in done}}
 
 
@@ -181,13 +191,18 @@ def run(rows_out, quick=False):
         "bf16": params,
         "int8": quantize_params_tree(params),
         "int4_packed": quantize_params_tree(params, nbits=4, packed=True),
+        "int3_packed": quantize_params_tree(params, nbits=3),
+        "int2_packed": quantize_params_tree(params, nbits=2),
     }
     results = {}
     for name, tree in trees.items():
-        qb, fb = qweight_bytes(tree)
+        _, fb = qweight_bytes(tree)
         n_weights = fb / 2                      # logical bf16 elements
         res = _engine_run(cfg, tree, prompts, max_new, chunk)
-        res["bytes_per_w"] = qb / n_weights
+        # engine-reported bytes feed the headline ratio; check_bytes.py
+        # independently re-derives them from the inventory's layout math
+        res["bytes_per_w"] = res["weight_bytes"] / n_weights
+        res["inventory"] = leaf_inventory(tree)
         results[name] = res
         rows_out.append((
             f"serve/{name}", res["tok_s"],
@@ -196,19 +211,46 @@ def run(rows_out, quick=False):
             f"wall_s={res['wall_s']:.2f}"))
     # invariants the smoke run enforces: chunked dispatch count and the
     # strictly-shrinking bytes/weight ladder bf16 > int8 > packed-int4
+    # > int3 > int2 (the full 2–8 bit serving ladder, DESIGN.md §8)
     assert results["bf16"]["prefill_calls"] == -(-plen // chunk)
-    assert results["int4_packed"]["bytes_per_w"] < results["int8"][
-        "bytes_per_w"] < 2.0
+    assert (results["int2_packed"]["bytes_per_w"]
+            < results["int3_packed"]["bytes_per_w"]
+            < results["int4_packed"]["bytes_per_w"]
+            < results["int8"]["bytes_per_w"] < 2.0)
     results["sched"] = scheduler_compare(rows_out, cfg, params, quick=quick)
     return results
+
+
+def _json_payload(rows, results):
+    """JSON-able snapshot: ladder formats carry the engine-reported bytes
+    and the per-leaf storage inventory check_bytes.py audits."""
+    ladder = {}
+    for name, res in results.items():
+        if name == "sched":
+            continue
+        ladder[name] = {
+            "tok_s": res["tok_s"], "tokens": res["tokens"],
+            "bytes_per_w": res["bytes_per_w"],
+            "weight_bytes": res["weight_bytes"],
+            "weight_formats": res["weight_formats"],
+            "inventory": res["inventory"]}
+    return {"rows": [list(r) for r in rows], "ladder": ladder}
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="tiny model / few requests (CI smoke)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write rows + per-format storage inventory as "
+                         "JSON (CI artifact; input to check_bytes.py)")
     args = ap.parse_args()
     rows = []
-    run(rows, quick=args.quick)
+    results = run(rows, quick=args.quick)
     for r in rows:
         print(",".join(str(x) for x in r))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(_json_payload(rows, results), f, indent=1,
+                      sort_keys=True)
+        print(f"wrote {args.json}")

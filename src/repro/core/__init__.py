@@ -18,9 +18,10 @@ from .entropy import (HuffmanCode, codec_bits_lzma, codec_bits_zlib,
                       huffman_bits)
 from .gptq import gptq_frantar, gptq_via_zsic, huffman_gptq, rate_log_cardinality
 from .packing import (PackedCodes, escapes_to_coo, pack_codes, pack_codes_jnp,
-                      pack_int3_planar_jnp, pack_int4, pack_int4_planar_jnp,
-                      unpack_codes, unpack_int3_planar_jnp, unpack_int4,
-                      unpack_int4_planar_jnp)
+                      pack_int2_planar_jnp, pack_int3_planar_jnp, pack_int4,
+                      pack_int4_planar_jnp, unpack_codes,
+                      unpack_int2_planar_jnp, unpack_int3_planar_jnp,
+                      unpack_int4, unpack_int4_planar_jnp)
 from .rans import RansCodec
 from .rate_alloc import PlanBudget, RateBudget
 from .rescalers import RescalerResult, find_optimal_rescalers, rescaler_loss

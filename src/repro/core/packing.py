@@ -25,6 +25,15 @@ byte b holds bit b of the (biased, code+4) values of planes 0..7 at one
 in-feature index.  Exactly 3.0 bits/entry of payload; the escape-COO path
 is shared with int4 unchanged (codes outside [-4, 3] become sparse
 deltas), so the planner's 3-bit snap targets have a real serving format.
+
+int2 (DESIGN.md §8): 4 codes per byte over 4 planar column groups —
+byte j holds the 2-bit fields of columns (j, j+K/4, j+2K/4, j+3K/4),
+field f at bits [2f, 2f+2), values in [-2, 1] two's-complement.  The
+payload carries a singleton *plane axis* (…, 1, ceil(K/4)) so the three
+uint8 serving formats stay shape-discriminable everywhere (shape[-2] ==
+3 ⇒ int3 bit-planes, == 1 ⇒ int2 fields, 2-D ⇒ int4 nibbles) without
+out-of-band metadata.  Escape COO is shared unchanged — the planner's
+lowest rung serves at ~0.25 B/weight + escapes.
 """
 from __future__ import annotations
 
@@ -38,7 +47,8 @@ import numpy as np
 __all__ = ["pack_int4", "unpack_int4", "PackedCodes", "pack_codes",
            "unpack_codes", "escapes_to_coo", "pack_int4_planar_jnp",
            "unpack_int4_planar_jnp", "pack_codes_jnp",
-           "pack_int3_planar_jnp", "unpack_int3_planar_jnp"]
+           "pack_int3_planar_jnp", "unpack_int3_planar_jnp",
+           "pack_int2_planar_jnp", "unpack_int2_planar_jnp"]
 
 
 def pack_int4(z: np.ndarray) -> np.ndarray:
@@ -128,18 +138,49 @@ def unpack_int3_planar_jnp(payload) -> jnp.ndarray:
     return (u - 4).astype(jnp.int8)
 
 
+def pack_int2_planar_jnp(z) -> jnp.ndarray:
+    """Planar int2 pack: 4 codes per byte (DESIGN.md §8).
+
+    ``z`` (..., K) with K a multiple of 4 and values in [-2, 1].  Columns
+    split into 4 planar groups of width K/4 (group f = cols
+    [f·K/4, (f+1)·K/4)); byte j carries group f's code at bits
+    [2f, 2f+2) (two's complement).  Returns uint8 (..., 1, K/4) — the
+    singleton plane axis tags the format (see module docstring).  Pure
+    jnp — traceable, and the unpack is one shift/mask per field that XLA
+    (or the Pallas kernel's VPU) fuses into the operand read.
+    """
+    if z.shape[-1] % 4:
+        raise ValueError("last dim must be a multiple of 4 for int2 packing")
+    k4 = z.shape[-1] // 4
+    u = jnp.asarray(z).astype(jnp.int32) & 0x3
+    groups = u.reshape(z.shape[:-1] + (4, k4))           # (..., field, i)
+    shifts = (2 * jnp.arange(4, dtype=jnp.int32))[:, None]
+    byte = jnp.sum(groups << shifts, axis=-2)
+    return byte[..., None, :].astype(jnp.uint8)          # (..., 1, K/4)
+
+
+def unpack_int2_planar_jnp(payload) -> jnp.ndarray:
+    """Inverse of :func:`pack_int2_planar_jnp` (sign-extended int8)."""
+    p = jnp.asarray(payload).astype(jnp.int32)[..., 0, :]
+    cols = [(p >> (2 * f)) & 0x3 for f in range(4)]
+    u = jnp.concatenate(cols, axis=-1)                   # groups back in order
+    return jnp.where(u > 1, u - 4, u).astype(jnp.int8)
+
+
 def pack_codes_jnp(z, *, nbits: int = 4,
                    escape_capacity: Optional[int] = None
                    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
                               jnp.ndarray]:
-    """Device-side int4/int3 pack of ``z`` (a, n) + escape-to-COO export.
+    """Device-side int4/int3/int2 pack of ``z`` (a, n) + escape-to-COO export.
 
     Returns ``(payload, esc_row, esc_col, esc_dval)``:
 
       payload   nbits=4: uint8 (a, ceil(n/2)) planar nibble pack (odd n is
                 zero-padded with one nibble column);
                 nbits=3: uint8 (a, 3, ceil(n/8)) bit-plane pack (n padded
-                to a multiple of 8 with zero codes),
+                to a multiple of 8 with zero codes);
+                nbits=2: uint8 (a, 1, ceil(n/4)) planar 2-bit fields (n
+                padded to a multiple of 4 with zero codes),
       esc_row   int32 (nnz,)          output-row index of each escape,
       esc_col   int32 (nnz,)          input-column index,
       esc_dval  f32  (nnz,)           ``z - clip(z, lo, hi)`` — the *delta*
@@ -157,18 +198,19 @@ def pack_codes_jnp(z, *, nbits: int = 4,
     z = jnp.asarray(z)
     a, n = z.shape
     if nbits == 4:
-        lo, hi, mult = -8, 7, 2
+        lo, hi, mult, packer = -8, 7, 2, pack_int4_planar_jnp
     elif nbits == 3:
-        lo, hi, mult = -4, 3, 8
+        lo, hi, mult, packer = -4, 3, 8, pack_int3_planar_jnp
+    elif nbits == 2:
+        lo, hi, mult, packer = -2, 1, 4, pack_int2_planar_jnp
     else:
-        raise ValueError("nbits must be 3 or 4")
+        raise ValueError("nbits must be 2, 3 or 4")
     clipped = jnp.clip(z, lo, hi)
     body = clipped.astype(jnp.int8)
     pad = (-n) % mult
     if pad:
         body = jnp.concatenate([body, jnp.zeros((a, pad), jnp.int8)], axis=1)
-    payload = (pack_int4_planar_jnp(body) if nbits == 4
-               else pack_int3_planar_jnp(body))
+    payload = packer(body)
     delta = (z - clipped).astype(jnp.float32)
     if escape_capacity is None:
         rows, cols = jnp.nonzero(delta != 0)
@@ -211,16 +253,32 @@ def _unpack_int3_np(payload: np.ndarray) -> np.ndarray:
     return (np.concatenate(cols, axis=-1) - 4).astype(np.int8)
 
 
-_RANGE = {3: (-4, 3), 4: (-8, 7), 8: (-128, 127)}
-_PAD_MULT = {3: 8, 4: 2, 8: 1}
+def _pack_int2_np(body: np.ndarray) -> np.ndarray:
+    """Host twin of :func:`pack_int2_planar_jnp`: (a, 4·k) → (a, 1, k)."""
+    a, n = body.shape
+    u = body.astype(np.int32) & 0x3
+    groups = u.reshape(a, 4, n // 4)
+    shifts = (2 * np.arange(4, dtype=np.int32))[None, :, None]
+    return (groups << shifts).sum(axis=1)[:, None, :].astype(np.uint8)
+
+
+def _unpack_int2_np(payload: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`_pack_int2_np` (sign-extended int8)."""
+    p = payload.astype(np.int32)[:, 0, :]
+    u = np.concatenate([(p >> (2 * f)) & 0x3 for f in range(4)], axis=-1)
+    return np.where(u > 1, u - 4, u).astype(np.int8)
+
+
+_RANGE = {2: (-2, 1), 3: (-4, 3), 4: (-8, 7), 8: (-128, 127)}
+_PAD_MULT = {2: 4, 3: 8, 4: 2, 8: 1}
 
 
 @dataclass
 class PackedCodes:
     """Packed code matrix + escape list for out-of-range entries."""
 
-    payload: np.ndarray          # uint8 (int4/int3 planes) or int8 buffer
-    nbits: int                   # 3, 4 or 8
+    payload: np.ndarray          # uint8 (int4/int3/int2 planes) or int8
+    nbits: int                   # 2, 3, 4 or 8
     shape: Tuple[int, int]
     escape_idx: np.ndarray       # flat indices of escapes (uint32 when the
                                  # matrix has < 2³² entries, else int64)
@@ -229,8 +287,8 @@ class PackedCodes:
     @property
     def storage_bits_per_entry(self) -> float:
         """Exact bits/entry: excludes pad columns (odd-n nibble for int4,
-        the up-to-7 zero columns of the int3 8-group) and uses the actual
-        escape-index width."""
+        the up-to-7 zero columns of the int3 8-group, up-to-3 of the int2
+        4-group) and uses the actual escape-index width."""
         a, n = self.shape
         payload_bits = self.payload.size * 8
         pad_cols = (-n) % _PAD_MULT[self.nbits]
@@ -244,7 +302,7 @@ def pack_codes(z: np.ndarray, nbits: int = 4) -> PackedCodes:
     z = np.asarray(z)
     a, n = z.shape
     if nbits not in _RANGE:
-        raise ValueError("nbits must be 3, 4 or 8")
+        raise ValueError("nbits must be 2, 3, 4 or 8")
     lo, hi = _RANGE[nbits]
     clipped = np.clip(z, lo, hi)
     esc = np.nonzero((z < lo) | (z > hi))
@@ -259,6 +317,8 @@ def pack_codes(z: np.ndarray, nbits: int = 4) -> PackedCodes:
         payload = pack_int4(body)
     elif nbits == 3:
         payload = _pack_int3_np(body)
+    elif nbits == 2:
+        payload = _pack_int2_np(body)
     else:
         payload = body
     return PackedCodes(payload=payload, nbits=nbits, shape=(a, n),
@@ -271,6 +331,8 @@ def unpack_codes(p: PackedCodes) -> np.ndarray:
         body = unpack_int4(p.payload)[:, :n].astype(np.int32)
     elif p.nbits == 3:
         body = _unpack_int3_np(p.payload)[:, :n].astype(np.int32)
+    elif p.nbits == 2:
+        body = _unpack_int2_np(p.payload)[:, :n].astype(np.int32)
     else:
         body = p.payload.astype(np.int32)
     out = body.copy()

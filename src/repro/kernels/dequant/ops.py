@@ -1,19 +1,30 @@
 """Jit'd public wrapper for the fused dequant-matmul.
 
-``dequant_matmul`` dispatches on the payload dtype: int8/int4 code matrices
-go to the int8 kernel, uint8 planar-packed int4 payloads (two codes per
-byte, core/packing) to the packed kernel.  It pads to MXU-aligned block
-multiples (including the odd-in-features pad column of a packed payload),
-dispatches to the Pallas kernels on TPU (or interpret mode when requested)
-and to a fused-by-XLA path on CPU, slices the padding off, and applies the
-sparse escape correction — out-of-range codes stored as a COO delta list —
-outside the kernel (DESIGN.md §8).
+``dequant_matmul`` dispatches on the payload dtype and shape: int8 code
+matrices go to the int8 kernel; uint8 payloads select the packed kernel
+with the payload nbits read off the shape (core/packing layouts) —
+
+    (n, ceil(k/2))        planar int4 nibbles          → nbits=4
+    (n, 3, ceil(k/8))     int3 bit-planes              → nbits=3
+    (n, 1, ceil(k/4))     planar int2 fields           → nbits=2
+
+All three route through the SAME generalized Pallas kernel
+(``dequant_matmul_packed_pallas``), which unpacks in-VMEM and contracts
+plane-by-plane — the full 2/3/4-bit serving ladder runs in-kernel
+(DESIGN.md §8).  This wrapper pads to MXU-aligned block multiples
+(including the ragged-in-features pad columns of any packed payload),
+splits the activation columns into the payload's planar groups,
+dispatches to the Pallas kernels on TPU (or interpret mode when
+requested) and to the XLA reference twins (kernels/dequant/ref.py) on
+CPU, slices the padding off, and applies the sparse escape correction —
+out-of-range codes stored as a COO delta list — outside the kernel.
 
 ``dequant_matmul_xla`` is the collective-friendly pure-XLA formulation used
-inside pjit'd serve graphs (the dry-run path): XLA fuses the int8→f32 convert
-+ scale into the matmul's operand read, preserving the HBM-bytes advantage
-that the roofline analysis measures.  ``dequant_matmul_packed_xla`` is its
-packed sibling (in-graph nibble unpack, fused by XLA).
+inside pjit'd serve graphs (the dry-run path): XLA fuses the int8→f32
+convert + scale into the matmul's operand read, preserving the HBM-bytes
+advantage that the roofline analysis measures.  The packed XLA siblings
+(``dequant_matmul_packed_xla`` / ``_packed3_xla`` / ``_packed2_xla``) are
+thin aliases of the ref-twin with the payload nbits pinned.
 """
 from __future__ import annotations
 
@@ -22,14 +33,29 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.packing import (unpack_int3_planar_jnp,
-                                unpack_int4_planar_jnp)
-from .dequant_matmul import dequant_matmul_packed_pallas, dequant_matmul_pallas
-from .ref import dequant_matmul_ref
+from .dequant_matmul import (PLANE_GROUPS, dequant_matmul_packed_pallas,
+                             dequant_matmul_pallas)
+from .ref import dequant_matmul_packed_ref, dequant_matmul_ref
 
 __all__ = ["dequant_matmul", "dequant_matmul_packed", "dequant_matmul_xla",
            "dequant_matmul_packed_xla", "dequant_matmul_packed3",
-           "dequant_matmul_packed3_xla"]
+           "dequant_matmul_packed3_xla", "dequant_matmul_packed2",
+           "dequant_matmul_packed2_xla", "payload_nbits"]
+
+
+def payload_nbits(payload) -> int:
+    """Payload nbits from the uint8 payload shape (see module docstring).
+
+    The int3/int2 formats carry a plane axis of static size 3/1; a 2-D
+    payload is the int4 nibble layout.  Weight matrices have ≥ 2 big dims
+    (quant/qlinear `min_dim`), so a genuine out-features of 1 or 3 cannot
+    alias the plane axis in practice.
+    """
+    if payload.ndim >= 3 and payload.shape[-2] == 3:
+        return 3
+    if payload.ndim >= 3 and payload.shape[-2] == 1:
+        return 2
+    return 4
 
 
 def _pad_to(x, mult, axis):
@@ -66,19 +92,16 @@ def dequant_matmul(x, z, col_scale, row_scale, *, escapes=None,
                    interpret: bool = False):
     """x (m, k) · dequant(z, s, t)ᵀ → (m, n), padding + escapes handled here.
 
-    ``z`` int8 (n, k) selects the int8 kernel; ``z`` uint8 (n, ceil(k/2))
-    selects the packed-int4 kernel (planar nibble layout); ``z`` uint8
-    (n, 3, ceil(k/8)) — the bit-plane axis of static size 3 — selects the
-    int3 path (DESIGN.md §10, XLA in-graph unpack).  ``escapes`` is an
-    optional COO triple (rows, cols, dvals) applied after the kernel.
+    ``z`` int8 (n, k) selects the int8 kernel; a uint8 payload selects the
+    packed kernel at the nbits its shape encodes (``payload_nbits``).
+    ``escapes`` is an optional COO triple (rows, cols, dvals) applied after
+    the kernel.
     """
     if z.dtype == jnp.uint8:
-        if z.ndim == 3:
-            return dequant_matmul_packed3(x, z, col_scale, row_scale,
-                                          escapes=escapes)
         return dequant_matmul_packed(
-            x, z, col_scale, row_scale, escapes=escapes, block_m=block_m,
-            block_n=block_n, block_k=block_k, prefer_pallas=prefer_pallas,
+            x, z, col_scale, row_scale, nbits=payload_nbits(z),
+            escapes=escapes, block_m=block_m, block_n=block_n,
+            block_k=block_k, prefer_pallas=prefer_pallas,
             interpret=interpret)
     m, k = x.shape
     n = z.shape[0]
@@ -99,40 +122,47 @@ def dequant_matmul(x, z, col_scale, row_scale, *, escapes=None,
     return out
 
 
-@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
-                                             "prefer_pallas", "interpret"))
-def dequant_matmul_packed(x, payload, col_scale, row_scale, *, escapes=None,
+@functools.partial(jax.jit, static_argnames=("nbits", "block_m", "block_n",
+                                             "block_k", "prefer_pallas",
+                                             "interpret"))
+def dequant_matmul_packed(x, payload, col_scale, row_scale, *,
+                          nbits: int = 4, escapes=None,
                           block_m: int = 128, block_n: int = 128,
                           block_k: int = 512, prefer_pallas: bool = True,
                           interpret: bool = False):
-    """Packed-int4 serving matmul: x (m, k) × planar payload (n, ceil(k/2)).
+    """Packed serving matmul: x (m, k) × planar sub-byte payload.
 
-    Odd in-features are handled here: the payload's pad nibble column holds
-    code 0, and x / col_scale are zero-padded to the packed width before the
-    halves are split, so the pad contributes nothing.
+    Ragged in-features are handled here: the payload's pad columns hold
+    code 0 (or an arbitrary value — see below), and x / col_scale are
+    zero-padded to the packed width G·kg before the planar groups are
+    split, so every pad column multiplies an all-zero activation column
+    and contributes nothing.  The same argument covers the block-align
+    padding of the byte axis.
     """
+    g = PLANE_GROUPS[nbits]
     m, k = x.shape
-    n, kb = payload.shape
-    k_even = 2 * kb
-    assert k in (k_even, k_even - 1), (x.shape, payload.shape)
-    xp = _pad_to(x, k_even, 1) if k < k_even else x
-    sp = _pad_to(col_scale, k_even, 0) if k < k_even else col_scale
+    n, kg = payload.shape[0], payload.shape[-1]
+    k_packed = g * kg
+    assert k_packed - g < k <= k_packed, (x.shape, payload.shape, nbits)
+    xp = _pad_to(x, k_packed, 1) if k < k_packed else x
+    sp = _pad_to(col_scale, k_packed, 0) if k < k_packed else col_scale
     on_tpu = jax.default_backend() == "tpu"
     if prefer_pallas and (on_tpu or interpret):
-        kh = kb
-        block_kh = min(block_k // 2, max(128, kh))
-        x_lo = _pad_to(_pad_to(xp[:, :kh], block_m, 0), block_kh, 1)
-        x_hi = _pad_to(_pad_to(xp[:, kh:], block_m, 0), block_kh, 1)
-        pp = _pad_to(_pad_to(payload, block_n, 0), block_kh, 1)
-        s_lo = _pad_to(sp[:kh], block_kh, 0)
-        s_hi = _pad_to(sp[kh:], block_kh, 0)
+        block_kg = min(max(128, block_k // g), max(128, kg))
+        pp = _pad_to(_pad_to(payload, block_n, 0), block_kg, -1)
+        # planar order is group-major, so the grouped view is a reshape —
+        # but the byte-axis block pad must land INSIDE each group
+        xg = _pad_to(_pad_to(xp, block_m, 0).reshape(-1, g, kg),
+                     block_kg, -1)
+        sg = _pad_to(sp.reshape(g, kg), block_kg, -1)
         tp = _pad_to(row_scale, block_n, 0)
         out = dequant_matmul_packed_pallas(
-            x_lo, x_hi, pp, s_lo, s_hi, tp, block_m=block_m,
-            block_n=block_n, block_kh=block_kh,
+            xg, pp, sg, tp, nbits=nbits, block_m=block_m, block_n=block_n,
+            block_kg=block_kg,
             interpret=interpret or not on_tpu)[:m, :n]
     else:
-        out = dequant_matmul_packed_xla(xp, payload, sp, row_scale)
+        out = dequant_matmul_packed_ref(xp, payload, sp, row_scale,
+                                        nbits=nbits)
     if escapes is not None:
         out = _apply_escapes(out, x, col_scale, row_scale, escapes)
     return out
@@ -148,49 +178,36 @@ def dequant_matmul_xla(x, z, col_scale, row_scale):
     return acc * row_scale.astype(jnp.float32)[None, :]
 
 
-@jax.jit
 def dequant_matmul_packed3(x, payload, col_scale, row_scale, *,
-                           escapes=None):
-    """Int3 serving matmul: x (m, k) × bit-plane payload (n, 3, ceil(k/8)).
-
-    The 8-group pad columns hold code 0 and x/col_scale are zero-padded to
-    the packed width, so the pad contributes nothing.  Unpack is a handful
-    of elementwise shift/masks that XLA fuses into the operand read (a
-    dedicated Pallas int3 kernel is tracked future work — the payload
-    format and escape contract here are what it will consume)."""
-    m, k = x.shape
-    n = payload.shape[0]
-    k_packed = 8 * payload.shape[-1]
-    assert k <= k_packed and k > k_packed - 8, (x.shape, payload.shape)
-    xp = _pad_to(x, k_packed, 1) if k < k_packed else x
-    sp = _pad_to(col_scale, k_packed, 0) if k < k_packed else col_scale
-    out = dequant_matmul_packed3_xla(xp, payload, sp, row_scale)[:m, :n]
-    if escapes is not None:
-        out = _apply_escapes(out, x, col_scale, row_scale, escapes)
-    return out
+                           escapes=None, **kw):
+    """Int3 serving matmul: x (m, k) × bit-plane payload (n, 3, ceil(k/8)),
+    through the generalized in-kernel bit-plane unpack (DESIGN.md §8)."""
+    return dequant_matmul_packed(x, payload, col_scale, row_scale,
+                                 nbits=3, escapes=escapes, **kw)
 
 
-@jax.jit
-def dequant_matmul_packed3_xla(x, payload, col_scale, row_scale):
-    """Bit-plane path for XLA backends: in-graph int3 unpack (elementwise,
-    fused) then the scale-the-activations formulation.  x and col_scale
-    must already span the packed width 8·payload.shape[-1]."""
-    z = unpack_int3_planar_jnp(payload)       # (n, 8·k8), exact in f32
-    xs = x.astype(jnp.float32) * col_scale.astype(jnp.float32)[None, :]
-    acc = jax.lax.dot_general(xs, z.astype(jnp.float32),
-                              (((1,), (1,)), ((), ())),
-                              preferred_element_type=jnp.float32)
-    return acc * row_scale.astype(jnp.float32)[None, :]
+def dequant_matmul_packed2(x, payload, col_scale, row_scale, *,
+                           escapes=None, **kw):
+    """Int2 serving matmul: x (m, k) × planar field payload
+    (n, 1, ceil(k/4)) — ~0.25 B/weight of HBM traffic + escapes."""
+    return dequant_matmul_packed(x, payload, col_scale, row_scale,
+                                 nbits=2, escapes=escapes, **kw)
 
 
-@jax.jit
 def dequant_matmul_packed_xla(x, payload, col_scale, row_scale):
-    """Packed path for XLA backends: in-graph nibble unpack (elementwise,
-    fused into the operand read) then the int8 formulation.  x and
-    col_scale must already span the packed width 2·payload.shape[1]."""
-    z = unpack_int4_planar_jnp(payload)       # (n, 2·kb), exact in f32
-    xs = x.astype(jnp.float32) * col_scale.astype(jnp.float32)[None, :]
-    acc = jax.lax.dot_general(xs, z.astype(jnp.float32),
-                              (((1,), (1,)), ((), ())),
-                              preferred_element_type=jnp.float32)
-    return acc * row_scale.astype(jnp.float32)[None, :]
+    """Int4 XLA twin (in-graph nibble unpack, fused by XLA).  x and
+    col_scale must already span the packed width 2·payload.shape[-1]."""
+    return dequant_matmul_packed_ref(x, payload, col_scale, row_scale,
+                                     nbits=4)
+
+
+def dequant_matmul_packed3_xla(x, payload, col_scale, row_scale):
+    """Int3 XLA twin (in-graph bit-plane unpack); packed width 8·kg."""
+    return dequant_matmul_packed_ref(x, payload, col_scale, row_scale,
+                                     nbits=3)
+
+
+def dequant_matmul_packed2_xla(x, payload, col_scale, row_scale):
+    """Int2 XLA twin (in-graph field unpack); packed width 4·kg."""
+    return dequant_matmul_packed_ref(x, payload, col_scale, row_scale,
+                                     nbits=2)

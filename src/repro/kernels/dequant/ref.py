@@ -1,10 +1,27 @@
-"""Pure-jnp oracle for the fused dequant-matmul kernel."""
+"""Pure-jnp oracles for the fused dequant-matmul kernels.
+
+``dequant_matmul_ref`` materializes the f32 weight — the ground-truth
+oracle.  ``unpack_payload_ref`` / ``dequant_matmul_packed_ref`` are the
+XLA *reference twins* of the packed Pallas kernels: they unpack a planar
+int4/int3/int2 payload in-graph (via the core/packing inverses, which the
+packing round-trip tests pin) and run the scale-the-activations
+formulation — bit-for-bit what the in-VMEM kernel unpack must reproduce,
+which makes them the interpret-mode parity anchors for the
+``packed-kernel-parity`` CI matrix.
+"""
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["dequant_matmul_ref", "dequantize_ref"]
+from repro.core.packing import (unpack_int2_planar_jnp,
+                                unpack_int3_planar_jnp,
+                                unpack_int4_planar_jnp)
+
+__all__ = ["dequant_matmul_ref", "dequantize_ref", "unpack_payload_ref",
+           "dequant_matmul_packed_ref"]
 
 
 def dequantize_ref(z, col_scale, row_scale, dtype=jnp.float32):
@@ -18,3 +35,29 @@ def dequant_matmul_ref(x, z, col_scale, row_scale):
     """out = x @ Ŵᵀ with the weight materialized in f32 (the oracle)."""
     w_hat = dequantize_ref(z, col_scale, row_scale)
     return x.astype(jnp.float32) @ w_hat.T
+
+
+def unpack_payload_ref(payload, nbits: int) -> jnp.ndarray:
+    """Planar payload → sign-extended int8 codes (…, G·kg), by nbits."""
+    if nbits == 4:
+        return unpack_int4_planar_jnp(payload)
+    if nbits == 3:
+        return unpack_int3_planar_jnp(payload)
+    if nbits == 2:
+        return unpack_int2_planar_jnp(payload)
+    raise ValueError(f"no packed payload for nbits={nbits}")
+
+
+@functools.partial(jax.jit, static_argnames=("nbits",))
+def dequant_matmul_packed_ref(x, payload, col_scale, row_scale, *,
+                              nbits: int = 4):
+    """XLA twin of the packed Pallas kernel (in-graph unpack, fused by XLA
+    into the operand read).  ``x`` and ``col_scale`` must already span the
+    packed width G·payload.shape[-1] (ops.py zero-pads; pad columns hold
+    x = 0 so any pad-code value contributes nothing)."""
+    z = unpack_payload_ref(payload, nbits)        # (n, G·kg), exact in f32
+    xs = x.astype(jnp.float32) * col_scale.astype(jnp.float32)[None, :]
+    acc = jax.lax.dot_general(xs, z.astype(jnp.float32),
+                              (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    return acc * row_scale.astype(jnp.float32)[None, :]

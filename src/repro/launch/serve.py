@@ -1,6 +1,7 @@
 """Serving driver: batched engine on the host mesh, optionally with
-WaterSIC-quantized weights — int8 codes or the packed-int4 serving format
-(planar nibble payload + escape COO, DESIGN.md §8).
+WaterSIC-quantized weights — int8 codes or any rung of the packed
+sub-byte ladder (int4 nibbles / int3 bit-planes / int2 fields, planar
+payload + escape COO, DESIGN.md §8) via ``--wbits {16,8,4,3,2}``.
 
 ``--continuous`` swaps the static-rounds scheduler for the
 continuous-batching engine (per-slot decode streams with in-flight
@@ -35,7 +36,7 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--wbits", type=int, default=16, choices=[16, 8, 4])
+    ap.add_argument("--wbits", type=int, default=16, choices=[16, 8, 4, 3, 2])
     ap.add_argument("--prefill-chunk", type=int, default=8,
                     help="tokens per prefill device call (0 = per-token)")
     ap.add_argument("--continuous", action="store_true",
@@ -57,6 +58,14 @@ def main(argv=None):
             params = quantize_params_tree(params, nbits=4, packed=True)
             print("serving packed-int4 WaterSIC-code weights (planar nibble "
                   "payload, fused unpack kernel)")
+        elif args.wbits == 3:
+            params = quantize_params_tree(params, nbits=3)
+            print("serving int3 WaterSIC-code weights (bit-plane payload, "
+                  "in-kernel plane unpack)")
+        elif args.wbits == 2:
+            params = quantize_params_tree(params, nbits=2)
+            print("serving int2 WaterSIC-code weights (planar 2-bit fields, "
+                  "4 codes/byte, in-kernel shift/mask unpack)")
         if args.wbits != 16:
             qb, fb = qweight_bytes(params)
             print(f"  param bytes {qb/1e6:.2f} MB vs bf16 {fb/1e6:.2f} MB "

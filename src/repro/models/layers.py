@@ -129,12 +129,13 @@ def dense(p, x):
     w = p["w"]
     if isinstance(w, dict) and "codes" in w:
         if w["codes"].dtype == jnp.uint8:
-            # WaterSIC sub-byte serving paths (DESIGN.md §8/§10): planar
-            # nibble payload (out, ceil(in/2)) through the fused packed
-            # dequant-matmul, or the int3 bit-plane payload
-            # (out, 3, ceil(in/8)) through the XLA-unpack path — the
-            # wrapper dispatches on the payload rank.  Escapes applied as
-            # a sparse COO correction either way.  Mixed-rate serving
+            # WaterSIC sub-byte serving paths (DESIGN.md §8/§10): the
+            # planar int4 nibble payload (out, ceil(in/2)), int3
+            # bit-plane payload (out, 3, ceil(in/8)) and int2 field
+            # payload (out, 1, ceil(in/4)) all route through the fused
+            # packed dequant-matmul with in-VMEM unpack — the wrapper
+            # dispatches on the payload shape.  Escapes applied as a
+            # sparse COO correction either way.  Mixed-rate serving
             # (repro.plan) mixes these formats freely across leaves.
             from repro.kernels.dequant import dequant_matmul
             lead = x.shape[:-1]
@@ -591,9 +592,9 @@ def moe(p, x, *, n_experts, top_k, capacity_factor=1.25, activation="silu",
                 # in-graph (elementwise, fused by XLA into the operand
                 # read); synthetic packed experts are escape-free
                 assert not (w["codes"].ndim >= 3
-                            and w["codes"].shape[-2] == 3), \
-                    "int3 expert leaves unsupported — serve experts ≥ 4b " \
-                    "(quantize_params_tree promotes them automatically)"
+                            and w["codes"].shape[-2] in (1, 3)), \
+                    "int2/int3 expert leaves unsupported — serve experts " \
+                    "≥ 4b (quantize_params_tree promotes them automatically)"
                 assert w["esc_row"].shape[-1] == 0, \
                     "packed MoE escapes unsupported; use escape_capacity=0"
                 from repro.core.packing import unpack_int4_planar_jnp

@@ -2,7 +2,7 @@
 
 A plan is the planner's *contract* with the executor and the serving
 stack: per-matrix target bits (continuous waterfilled optimum), snapped
-bits (integer serving grid), payload format (int3/int4/int8), the model
+bits (integer serving grid), payload format (int2/int3/int4/int8), the model
 distortion prediction behind the choice, and the sensitivity provenance
 that produced it.  After execution the same artifact additionally carries
 achieved entropy bits and realized distortion, so a single JSON file
@@ -52,7 +52,7 @@ class PlanEntry:
     weight: float                 # linearity-theorem output-error weight
     target_bits: float            # continuous waterfilled optimum
     snapped_bits: float           # integer-grid target (== target if unsnapped)
-    payload_bits: int             # serving format: 3 | 4 | 8
+    payload_bits: int             # serving format: 2 | 3 | 4 | 8
     pred_distortion: float        # model D_l at snapped_bits
     floor_bits: float = 0.0
     ceil_bits: float = 16.0

@@ -54,9 +54,9 @@ __all__ = [
     "even_plan",
 ]
 
-#: integer target-bit grid the serving formats realize.  2-bit targets ride
-#: in the int3 planar payload (entropy coding keeps realized HBM bytes at
-#: the entropy, and an int2 payload is tracked future work — DESIGN §7).
+#: integer target-bit grid the serving formats realize.  Every rung has a
+#: real payload (int2/int3/int4/int8 — core/packing + kernels/dequant), so
+#: snapped targets map 1:1 onto served HBM bytes (DESIGN §8).
 SERVING_FORMATS: Tuple[int, ...] = (2, 3, 4, 8)
 
 
@@ -168,10 +168,12 @@ def allocation_distortion(sens: Sequence[MatrixSensitivity],
 
 
 def payload_bits_for(target_bits: float) -> int:
-    """Smallest serving payload format that carries a target rate: int3
-    planar (targets ≤ 3), packed int4 (≤ 4), int8 otherwise.  Out-of-range
-    codes always have the escape-COO path, so the payload only needs to
-    cover the *typical* code range."""
+    """Smallest serving payload format that carries a target rate: int2
+    planar (targets ≤ 2), int3 bit-plane (≤ 3), packed int4 (≤ 4), int8
+    otherwise.  Out-of-range codes always have the escape-COO path, so the
+    payload only needs to cover the *typical* code range."""
+    if target_bits <= 2.0:
+        return 2
     if target_bits <= 3.0:
         return 3
     if target_bits <= 4.0:

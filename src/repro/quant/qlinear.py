@@ -23,16 +23,20 @@ payload dtype (uint8 ⇒ packed) and route through the fused packed kernel.
 
 ``nbits=3`` emits the int3 bit-plane leaf (DESIGN.md §10) — payload
 ``(…, out, 3, ceil(in/8))`` at exactly 3 bits/code, same escape-COO
-contract — the serving format behind the planner's 2/3-bit snap targets.
-Mixed-rate serving (repro.plan): ``nbits_by_path`` picks the format PER
-LEAF, so a 3-bit MLP stack, 4-bit attention projections, and an 8-bit
-output projection coexist in one served param tree; models/layers.dense
-dispatches per leaf, the engines never care.
+contract — the serving format behind the planner's 3-bit snap targets.
+``nbits=2`` emits the int2 planar leaf (DESIGN.md §8) — payload
+``(…, out, 1, ceil(in/4))``, 4 codes/byte, the singleton plane axis
+keeping the three uint8 formats shape-discriminable — the planner's
+lowest rung at ~0.25 B/weight.  Mixed-rate serving (repro.plan):
+``nbits_by_path`` picks the format PER LEAF, so a 2-bit MLP stack, 4-bit
+attention projections, and an 8-bit output projection coexist in one
+served param tree; models/layers.dense dispatches per leaf, the engines
+never care.
 
 Two producers:
   * ``from_watersic``    — real codes/scales from a quant.pipeline run
                            (small models, tests/examples); ``nbits=4``/
-                           ``nbits=3`` yield packed leaves w/ exact escapes,
+                           ``3``/``2`` yield packed leaves w/ exact escapes,
   * ``quantize_params_tree`` — traceable absmax-scaled codes used by the
     dry-run and the synthetic serving benchmarks (escape-free by
     construction, so the packed payload is lossless).
@@ -45,12 +49,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.packing import (pack_codes_jnp, pack_int3_planar_jnp,
-                                pack_int4_planar_jnp)
+from repro.core.packing import (pack_codes_jnp, pack_int2_planar_jnp,
+                                pack_int3_planar_jnp, pack_int4_planar_jnp)
 
 __all__ = ["quantize_params_tree", "is_qweight", "is_packed_qweight",
-           "is_packed3_qweight", "from_watersic", "qweight_bytes",
-           "leaf_format_histogram", "serving_formats_from_plan"]
+           "is_packed3_qweight", "is_packed2_qweight", "from_watersic",
+           "qweight_bytes", "leaf_format", "leaf_format_histogram",
+           "leaf_inventory", "serving_formats_from_plan"]
 
 #: param-dict keys eligible for weight quantization (the big matmuls)
 _WEIGHT_KEYS = ("w",)
@@ -70,10 +75,30 @@ def is_packed3_qweight(x) -> bool:
             and x["codes"].ndim >= 3 and x["codes"].shape[-2] == 3)
 
 
+def is_packed2_qweight(x) -> bool:
+    """Int2 planar leaf: uint8 payload (…, out, 1, ceil(in/4)) — the
+    singleton plane axis tags the 2-bit format (DESIGN.md §8)."""
+    return (is_qweight(x) and x["codes"].dtype == jnp.uint8
+            and x["codes"].ndim >= 3 and x["codes"].shape[-2] == 1)
+
+
 def is_packed_qweight(x) -> bool:
     """Packed-int4 leaf: uint8 planar payload in (…, out, in/2) orientation."""
     return is_qweight(x) and x["codes"].dtype == jnp.uint8 \
-        and not is_packed3_qweight(x)
+        and not is_packed3_qweight(x) and not is_packed2_qweight(x)
+
+
+def leaf_format(node) -> str:
+    """Serving format name of a quantized weight leaf — the ONE place the
+    payload-shape discrimination maps to format strings (histogram,
+    inventory, and external audits all key on these names)."""
+    if is_packed2_qweight(node):
+        return "packed-int2"
+    if is_packed3_qweight(node):
+        return "packed-int3"
+    if is_packed_qweight(node):
+        return "packed-int4"
+    return "int4" if node["codes"].dtype == jnp.int4 else "int8"
 
 
 def _quantize_leaf(w: jnp.ndarray, nbits: int = 8) -> Dict[str, jnp.ndarray]:
@@ -92,47 +117,49 @@ def _quantize_leaf(w: jnp.ndarray, nbits: int = 8) -> Dict[str, jnp.ndarray]:
     return {"codes": codes, "s": s.astype(jnp.float32), "t": t}
 
 
-def _quantize_leaf_packed(w: jnp.ndarray) -> Dict[str, jnp.ndarray]:
-    """Traceable packed-int4 leaf for (…, in, out) weights (DESIGN.md §8).
+def _quantize_leaf_subbyte(w: jnp.ndarray, *, qmax: float, pad_mult: int,
+                           packer) -> Dict[str, jnp.ndarray]:
+    """Traceable packed sub-byte leaf for (…, in, out) weights (DESIGN §8).
 
-    Codes are clipped to [-7, 7] by construction, so the payload is
-    escape-free and the leaf carries zero-capacity COO arrays (stackable
-    across scanned layers; the correction is a static no-op)."""
-    base = _quantize_leaf(w, nbits=4)
-    codes = jnp.swapaxes(base["codes"].astype(jnp.int8), -1, -2)  # (…, o, i)
-    if codes.shape[-1] % 2:
-        pad = [(0, 0)] * (codes.ndim - 1) + [(0, 1)]
-        codes = jnp.pad(codes, pad)
-    lead = w.shape[:-2]
-    return {"codes": pack_int4_planar_jnp(codes),
-            "s": base["s"], "t": base["t"],
-            "esc_row": jnp.zeros(lead + (0,), jnp.int32),
-            "esc_col": jnp.zeros(lead + (0,), jnp.int32),
-            "esc_dval": jnp.zeros(lead + (0,), jnp.float32)}
-
-
-def _quantize_leaf_packed3(w: jnp.ndarray) -> Dict[str, jnp.ndarray]:
-    """Traceable int3 bit-plane leaf for (…, in, out) weights (DESIGN §10).
-
-    Absmax codes clipped to [-3, 3] ⊂ [-4, 3], so the payload is
-    escape-free and the zero-capacity COO arrays make the correction a
-    static no-op (stackable across scanned layers)."""
-    qmax = 3.0
+    One builder for every packed rung: symmetric absmax codes clipped to
+    [-qmax, qmax] (⊂ the payload's two's-complement range), transposed to
+    kernel orientation, zero-padded to the layout's column-group multiple,
+    and packed by ``packer``.  The clip makes the payload escape-free, so
+    the zero-capacity COO arrays keep the correction a static no-op
+    (stackable across scanned layers)."""
     absmax = jnp.max(jnp.abs(w), axis=-1, keepdims=True)
     s = (absmax[..., 0] / qmax + 1e-12)
     codes = jnp.clip(jnp.rint(w / absmax * qmax), -qmax, qmax)
     codes = jnp.swapaxes(codes.astype(jnp.int8), -1, -2)        # (…, o, i)
-    pad = (-codes.shape[-1]) % 8
+    pad = (-codes.shape[-1]) % pad_mult
     if pad:
         widths = [(0, 0)] * (codes.ndim - 1) + [(0, pad)]
         codes = jnp.pad(codes, widths)
     lead = w.shape[:-2]
-    return {"codes": pack_int3_planar_jnp(codes),
+    return {"codes": packer(codes),
             "s": s.astype(jnp.float32),
             "t": jnp.ones(w.shape[:-2] + (w.shape[-1],), jnp.float32),
             "esc_row": jnp.zeros(lead + (0,), jnp.int32),
             "esc_col": jnp.zeros(lead + (0,), jnp.int32),
             "esc_dval": jnp.zeros(lead + (0,), jnp.float32)}
+
+
+def _quantize_leaf_packed(w: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Packed-int4 leaf: codes in [-7, 7] ⊂ [-8, 7]."""
+    return _quantize_leaf_subbyte(w, qmax=7.0, pad_mult=2,
+                                  packer=pack_int4_planar_jnp)
+
+
+def _quantize_leaf_packed3(w: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Int3 bit-plane leaf: codes in [-3, 3] ⊂ [-4, 3] (DESIGN §10)."""
+    return _quantize_leaf_subbyte(w, qmax=3.0, pad_mult=8,
+                                  packer=pack_int3_planar_jnp)
+
+
+def _quantize_leaf_packed2(w: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Int2 planar leaf: codes in [-1, 1] ⊂ [-2, 1] (DESIGN §8)."""
+    return _quantize_leaf_subbyte(w, qmax=1.0, pad_mult=4,
+                                  packer=pack_int2_planar_jnp)
 
 
 def _eligible(path_keys: Tuple[str, ...], leaf, min_dim: int) -> bool:
@@ -149,6 +176,8 @@ def _eligible(path_keys: Tuple[str, ...], leaf, min_dim: int) -> bool:
 
 
 def _leaf_for_nbits(node, nbits: int, packed: bool):
+    if nbits == 2:
+        return _quantize_leaf_packed2(node)
     if nbits == 3:
         return _quantize_leaf_packed3(node)
     if nbits == 4 and packed:
@@ -162,18 +191,19 @@ def quantize_params_tree(params, *, min_dim: int = 64,
                          nbits_by_path: Optional[
                              Callable[[Tuple[str, ...]], Optional[int]]
                          ] = None):
-    """Replace eligible weight leaves with int8/int4/int3 code dicts
+    """Replace eligible weight leaves with int8/int4/int3/int2 code dicts
     (traceable).
 
     Model param trees are nested dicts/lists of arrays (see models/); the
     walk preserves structure and rewrites eligible weights in place.
     ``packed=True`` (requires nbits=4) emits the planar nibble-packed leaf
     format served by the fused packed kernel — half the HBM bytes of int8;
-    ``nbits=3`` the int3 bit-plane leaf (3/8 the bytes of int8).
+    ``nbits=3`` the int3 bit-plane leaf (3/8 the bytes of int8); ``nbits=2``
+    the int2 planar leaf (1/4 the bytes of int8).
 
     ``nbits_by_path`` enables MIXED-RATE serving (DESIGN.md §10): called
-    with each eligible leaf's path, it returns 3 | 4 | 8 to pick that
-    leaf's format, or None/16 to leave it full precision — e.g. a 3-bit
+    with each eligible leaf's path, it returns 2 | 3 | 4 | 8 to pick that
+    leaf's format, or None/16 to leave it full precision — e.g. a 2-bit
     MLP stack next to an 8-bit output projection in one served model.
     Granularity is per leaf: scanned models stack all layers of one
     matrix type in a single leaf, which therefore shares a format
@@ -189,9 +219,9 @@ def quantize_params_tree(params, *, min_dim: int = 64,
         b = nbits_by_path(path)
         if b in (None, 16):
             return None, False
-        if b not in (3, 4, 8):
+        if b not in (2, 3, 4, 8):
             raise ValueError(f"nbits_by_path({path}) = {b!r}; expected "
-                             "3, 4, 8, 16 or None")
+                             "2, 3, 4, 8, 16 or None")
         return b, (b == 4)   # 4-bit serving always means the packed leaf
 
     def walk(node, path):
@@ -209,7 +239,7 @@ def quantize_params_tree(params, *, min_dim: int = 64,
             b, pk = fmt_for(path)
             if b is None:
                 return node
-            if b == 3 and path[-1] in _EXPERT_KEYS:
+            if b in (2, 3) and path[-1] in _EXPERT_KEYS:
                 # MoE experts contract via einsum, where only the nibble
                 # unpack is wired up — serve experts at 4 bits instead
                 b, pk = 4, True
@@ -233,8 +263,12 @@ def from_watersic(q, *, transpose: bool = True, nbits: int = 8,
     ``escape_capacity`` to fix the COO length (stackable across layers).
 
     ``nbits=3``: the int3 bit-plane leaf (out, 3, ceil(in/8)) with the
-    same exact-escape contract over [-4, 3] — the planner's 2/3-bit
-    serving format (DESIGN.md §10)."""
+    same exact-escape contract over [-4, 3] — the planner's 3-bit serving
+    format (DESIGN.md §10).
+
+    ``nbits=2``: the int2 planar leaf (out, 1, ceil(in/4)) with the same
+    exact-escape contract over [-2, 1] — the planner's lowest rung
+    (DESIGN.md §8)."""
     codes = np.asarray(q.codes)
     if q.dead_mask.any():
         full = np.zeros((q.out_features, q.in_features), codes.dtype)
@@ -245,7 +279,7 @@ def from_watersic(q, *, transpose: bool = True, nbits: int = 8,
         s_full[live] = q.column_scale
     else:
         s_full = q.column_scale.astype(np.float32)
-    if nbits in (3, 4):
+    if nbits in (2, 3, 4):
         payload, er, ec, ev = pack_codes_jnp(
             jnp.asarray(codes, jnp.int32), nbits=nbits,
             escape_capacity=escape_capacity)
@@ -267,7 +301,8 @@ def qweight_bytes(tree) -> Tuple[int, int]:
     A uint8 int4 codes leaf holds TWO codes per byte (packed serving
     format), so it stands in for 2 logical weights = 4 bf16 bytes; an
     int3 bit-plane leaf (plane axis of size 3) holds 8 codes per 3 bytes
-    = 16/3 bf16 bytes per payload byte."""
+    = 16/3 bf16 bytes per payload byte; an int2 planar leaf (singleton
+    plane axis) holds 4 codes per byte = 8 bf16 bytes per payload byte."""
     qb = fb = 0
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     for path, leaf in flat:
@@ -278,6 +313,8 @@ def qweight_bytes(tree) -> Tuple[int, int]:
             if leaf.dtype == jnp.uint8:
                 if leaf.ndim >= 3 and leaf.shape[-2] == 3:   # int3 planes
                     fb += (leaf.size // 3) * 8 * 2
+                elif leaf.ndim >= 3 and leaf.shape[-2] == 1:  # int2 fields
+                    fb += leaf.size * 4 * 2
                 else:                                        # int4 nibbles
                     fb += leaf.size * 4
             else:
@@ -299,10 +336,7 @@ def leaf_format_histogram(tree) -> Dict[str, int]:
     def walk(node):
         if isinstance(node, dict):
             if is_qweight(node):
-                bump("packed-int3" if is_packed3_qweight(node)
-                     else "packed-int4" if is_packed_qweight(node)
-                     else "int4" if node["codes"].dtype == jnp.int4
-                     else "int8")
+                bump(leaf_format(node))
                 return
             for v in node.values():
                 walk(v)
@@ -314,6 +348,55 @@ def leaf_format_histogram(tree) -> Dict[str, int]:
 
     walk(tree)
     return dict(sorted(out.items()))
+
+
+def leaf_inventory(tree) -> list:
+    """JSON-able per-weight-leaf storage records for external audits.
+
+    Each quantized leaf yields ``{path, format, in, out, stack,
+    esc_capacity, payload_bytes, scale_bytes, esc_bytes, bytes}`` with
+    byte counts matching :func:`qweight_bytes`'s accounting exactly; all
+    remaining tree arrays aggregate into one ``{"path": "<other>"}``
+    record.  ``benchmarks/check_bytes.py`` (stdlib-only) recomputes the
+    payload bytes from (format, in, out, stack) via the packing-layout
+    formulas and asserts both that per-leaf accounting and the engine's
+    reported ``weight_bytes`` agree — the CI bytes gate.
+    """
+    records: list = []
+    other = 0
+
+    def walk(node, path):
+        nonlocal other
+        if isinstance(node, dict):
+            if is_qweight(node):
+                fmt = leaf_format(node)
+                n_in = int(node["s"].shape[-1])
+                n_out = int(node["t"].shape[-1])
+                stack = int(np.prod(node["s"].shape[:-1], dtype=np.int64))
+                cap = (int(node["esc_row"].shape[-1])
+                       if "esc_row" in node else 0)
+                payload = int(node["codes"].size)  # uint8/int8: 1 B each
+                scale = int(node["s"].nbytes + node["t"].nbytes)
+                esc = int(sum(node[k].nbytes for k in
+                              ("esc_row", "esc_col", "esc_dval")
+                              if k in node))
+                records.append({
+                    "path": "/".join(path), "format": fmt, "in": n_in,
+                    "out": n_out, "stack": stack, "esc_capacity": cap,
+                    "payload_bytes": payload, "scale_bytes": scale,
+                    "esc_bytes": esc, "bytes": payload + scale + esc})
+                return
+            for k, v in node.items():
+                walk(v, path + (k,))
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                walk(v, path + (str(i),))
+        elif hasattr(node, "dtype"):
+            other += int(node.size * node.dtype.itemsize)
+
+    walk(tree, ())
+    records.append({"path": "<other>", "format": "raw", "bytes": other})
+    return records
 
 
 def serving_formats_from_plan(plan, *, default: Optional[int] = None

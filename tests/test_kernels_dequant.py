@@ -150,7 +150,7 @@ def test_dequantize_matches_quantized_linear():
 
 
 # ---------------------------------------------------------------------------
-# int3 bit-plane payload (DESIGN.md §10): XLA-unpack path parity
+# int3 bit-plane payload (DESIGN.md §8/§10): in-kernel + XLA-twin parity
 # ---------------------------------------------------------------------------
 
 
@@ -193,11 +193,29 @@ def test_packed3_escape_correction_exact():
     assert float(jnp.abs(out - ref).max()) / scale < 1e-5
 
 
-def test_packed3_from_watersic_serving_matches_dequant():
-    """from_watersic(nbits=3) leaf through models.layers.dense equals the
-    QuantizedLinear dequant oracle — the planner's 3-bit serving format."""
-    import jax
+def test_packed3_pallas_kernel_matches_xla_twin():
+    """Satellite acceptance: the in-kernel Pallas bit-plane unpack (int3)
+    is bit-exact vs its XLA reference twin in interpret mode."""
+    from repro.kernels.dequant import dequant_matmul_packed3
+    rng = np.random.default_rng(17)
+    for (m, k, n) in [(2, 128, 64), (4, 61, 48)]:
+        z = rng.integers(-4, 4, (n, k)).astype(np.int32)
+        x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+        s = jnp.asarray(rng.random(k) * 0.2 + 0.01, jnp.float32)
+        t = jnp.asarray(rng.random(n) + 0.5, jnp.float32)
+        payload, *_ = pack_codes_jnp(jnp.asarray(z), nbits=3)
+        out_k = dequant_matmul_packed3(x, payload, s, t, interpret=True)
+        out_x = dequant_matmul_packed3(x, payload, s, t,
+                                       prefer_pallas=False)
+        np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_x),
+                                   rtol=1e-6, atol=1e-5)
 
+
+@pytest.mark.parametrize("nbits", [2, 3])
+def test_from_watersic_subbyte_serving_matches_dequant(nbits):
+    """from_watersic(nbits=2/3) leaves through models.layers.dense equal
+    the QuantizedLinear dequant oracle — the planner's lowest-rung
+    serving formats (escapes restore every out-of-range code)."""
     from repro.core import CalibStats, quantize_at_rate
     from repro.models.layers import dense
     from repro.quant import from_watersic
@@ -207,10 +225,86 @@ def test_packed3_from_watersic_serving_matches_dequant():
     w = rng.standard_normal((a, nn)).astype(np.float32)
     q = quantize_at_rate(jnp.asarray(w),
                          CalibStats(sigma_x=jnp.asarray(sigma, jnp.float32)),
-                         2.5, damp=1e-4)
-    leaf = from_watersic(q, nbits=3)
+                         1.5 if nbits == 2 else 2.5, damp=1e-4)
+    leaf = from_watersic(q, nbits=nbits)
+    assert leaf["codes"].dtype == jnp.uint8
+    if nbits == 2:
+        assert leaf["codes"].shape == (a, 1, 10)
     x = jnp.asarray(rng.standard_normal((3, nn)).astype(np.float32))
     y = dense({"w": leaf}, x)
     ref = x @ q.dequant().T
     scale = float(jnp.abs(ref).max()) + 1e-6
     assert float(jnp.abs(y - ref).max()) / scale < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# int2 planar payload (DESIGN.md §8): in-kernel shift/mask unpack
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (1, 128, 128),       # decode batch 1
+    (8, 120, 96),        # k % 4 == 0
+    (5, 67, 96),         # ragged k: pad columns must contribute nothing
+])
+def test_packed2_matches_int8_path(m, k, n):
+    rng = np.random.default_rng(m + k + n)
+    x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    z = rng.integers(-2, 2, (n, k)).astype(np.int8)
+    s = jnp.asarray((rng.random(k) * 0.2 + 0.01).astype(np.float32))
+    t = jnp.asarray((rng.random(n) + 0.5).astype(np.float32))
+    payload, er, ec, ev = pack_codes_jnp(jnp.asarray(z, jnp.int32), nbits=2)
+    assert payload.shape == (n, 1, -(-k // 4))
+    assert er.shape[0] == 0              # in-range codes: no escapes
+    out = dequant_matmul(x, payload, s, t, interpret=True)
+    ref = dequant_matmul(x, jnp.asarray(z), s, t, interpret=True)
+    scale = float(jnp.abs(ref).max()) + 1e-6
+    assert float(jnp.abs(out - ref).max()) / scale < 1e-5
+
+
+def test_packed2_escape_correction_exact():
+    """Codes outside [-2, 1] must be restored exactly by the COO deltas."""
+    rng = np.random.default_rng(33)
+    m, k, n = 4, 40, 64
+    z = rng.integers(-2, 2, (n, k)).astype(np.int32)
+    z[0, 3], z[7, 11], z[63, 39] = 21, -9, 1  # 1 in-range: not an escape
+    x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    s = jnp.asarray((rng.random(k) * 0.2 + 0.01).astype(np.float32))
+    t = jnp.asarray((rng.random(n) + 0.5).astype(np.float32))
+    payload, er, ec, ev = pack_codes_jnp(jnp.asarray(z), nbits=2)
+    assert er.shape[0] == 2
+    out = dequant_matmul(x, payload, s, t, escapes=(er, ec, ev),
+                         interpret=True)
+    ref = jnp.asarray(np.asarray(x) @ (np.asarray(z).T
+                                       * np.asarray(s)[:, None])
+                      * np.asarray(t)[None, :])
+    scale = float(jnp.abs(ref).max()) + 1e-6
+    assert float(jnp.abs(out - ref).max()) / scale < 1e-5
+
+
+def test_packed2_pallas_kernel_matches_xla_twin():
+    """Satellite acceptance: the in-kernel Pallas shift/mask unpack (int2)
+    is bit-exact vs its XLA reference twin in interpret mode."""
+    from repro.kernels.dequant import dequant_matmul_packed2
+    rng = np.random.default_rng(19)
+    for (m, k, n) in [(2, 128, 64), (4, 61, 48)]:
+        z = rng.integers(-2, 2, (n, k)).astype(np.int32)
+        x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+        s = jnp.asarray(rng.random(k) * 0.2 + 0.01, jnp.float32)
+        t = jnp.asarray(rng.random(n) + 0.5, jnp.float32)
+        payload, *_ = pack_codes_jnp(jnp.asarray(z), nbits=2)
+        out_k = dequant_matmul_packed2(x, payload, s, t, interpret=True)
+        out_x = dequant_matmul_packed2(x, payload, s, t,
+                                       prefer_pallas=False)
+        np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_x),
+                                   rtol=1e-6, atol=1e-5)
+
+
+def test_payload_nbits_discriminates_formats():
+    """Shape-encoded dispatch: the three uint8 payload layouts resolve to
+    their nbits without out-of-band metadata."""
+    from repro.kernels.dequant import payload_nbits
+    z = np.zeros((16, 32), np.int32)
+    for nbits in (2, 3, 4):
+        payload, *_ = pack_codes_jnp(jnp.asarray(z), nbits=nbits)
+        assert payload_nbits(payload) == nbits

@@ -173,6 +173,79 @@ def test_property_int3_roundtrip(seed, rows, cols, scale):
     np.testing.assert_array_equal(unpack_codes(p), z)
 
 
+# ---------------------------------------------------------------------------
+# int2 planar payload (4 codes / byte — DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+def test_int2_planar_roundtrip():
+    import jax.numpy as jnp
+
+    from repro.core import pack_int2_planar_jnp, unpack_int2_planar_jnp
+    rng = np.random.default_rng(0)
+    z = rng.integers(-2, 2, size=(16, 40))
+    pk = pack_int2_planar_jnp(jnp.asarray(z))
+    assert pk.shape == (16, 1, 10)         # 4 codes/byte, singleton plane
+    np.testing.assert_array_equal(np.asarray(unpack_int2_planar_jnp(pk)), z)
+
+
+def test_pack_codes_int2_with_escapes():
+    rng = np.random.default_rng(1)
+    z = rng.integers(-2, 2, size=(8, 10)).astype(np.int64)
+    z[3, 4] = 1000
+    z[7, 9] = -77
+    p = pack_codes(z, nbits=2)
+    assert p.escape_idx.size == 2
+    np.testing.assert_array_equal(unpack_codes(p), z)
+    rows, cols, dval = escapes_to_coo(p)
+    body = unpack_codes(
+        pack_codes(np.clip(z, -2, 1), nbits=2)).astype(np.float64)
+    body[rows, cols] += dval
+    np.testing.assert_array_equal(body, z)
+
+
+def test_int2_storage_bits_exact_with_pad():
+    """4-group pad columns must NOT count as payload: exactly 2 bits/code."""
+    z = np.zeros((6, 13), np.int64)           # 13 → padded to 16 columns
+    p = pack_codes(z, nbits=2)
+    assert p.payload.shape == (6, 1, 4)
+    assert p.storage_bits_per_entry == 2.0    # exact — pad excluded
+    z[1, 2] = 99
+    p2 = pack_codes(z, nbits=2)
+    # (payload 6·13·2 bits + one uint32+int32 escape) / 78
+    assert p2.storage_bits_per_entry == (6 * 13 * 2 + 64) / 78
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), rows=st.integers(1, 24),
+       cols=st.integers(1, 31), scale=st.floats(0.5, 40.0))
+def test_property_int2_roundtrip(seed, rows, cols, scale):
+    rng = np.random.default_rng(seed)
+    z = (rng.standard_normal((rows, cols)) * scale).round().astype(np.int64)
+    p = pack_codes(z, nbits=2)
+    np.testing.assert_array_equal(unpack_codes(p), z)
+
+
+def test_pack_codes_jnp_int2_capacity():
+    import jax.numpy as jnp
+
+    from repro.core import unpack_int2_planar_jnp
+    rng = np.random.default_rng(3)
+    z = rng.integers(-2, 2, size=(5, 9)).astype(np.int64)
+    z[2, 7] = 30
+    payload, er, ec, ev = pack_codes_jnp(jnp.asarray(z, jnp.int32), nbits=2,
+                                         escape_capacity=4)
+    assert payload.shape == (5, 1, 3)
+    assert er.shape == (4,)                   # static COO length
+    body = np.asarray(unpack_int2_planar_jnp(payload))[:, :9].astype(float)
+    body[np.asarray(er), np.asarray(ec)] += np.asarray(ev)
+    np.testing.assert_array_equal(body, z)
+    import pytest as _pytest
+    with _pytest.raises(ValueError):          # undersized capacity rejected
+        pack_codes_jnp(jnp.asarray(z, jnp.int32), nbits=2,
+                       escape_capacity=0)
+
+
 def test_pack_codes_jnp_int3_capacity():
     import jax.numpy as jnp
 

@@ -37,21 +37,29 @@ def flat(name, v, n=32, a=16, w=1.0, **kw):
 
 def test_identical_layers_collapse_to_uniform_bit_for_bit():
     """L identical layers: waterfilled == uniform == RateBudget targets,
-    exactly (no bisection noise allowed in the degenerate case)."""
-    L, B = 6, 3.0
+    exactly (no bisection noise allowed in the degenerate case) — at the
+    2-bit rung (the new lowest grid point) as well as mid-grid."""
+    L = 6
     sigma, _ = random_covariance(24, condition=50.0, seed=3)
     sens = [sensitivity_from_matrix(f"L{i}/m", np.full((8, 24), 0.3), sigma)
             for i in range(L)]
-    bits = waterfill_bits(sens, B)
-    assert bits.shape == (L,)
-    assert np.all(bits == B)                      # bit-for-bit uniform
-    rb = RateBudget(B, {s.name: s.n_params for s in sens})
-    for s, b in zip(sens, bits):
-        target = rb.next_target(s.name)
-        assert b == target                        # matches RateBudget exactly
-        rb.record(s.name, b)
-    assert rb.realized_rate == B
-    assert not rb.budget_overrun
+    for B in (3.0, 2.0):
+        bits = waterfill_bits(sens, B)
+        assert bits.shape == (L,)
+        assert np.all(bits == B)                  # bit-for-bit uniform
+        rb = RateBudget(B, {s.name: s.n_params for s in sens})
+        for s, b in zip(sens, bits):
+            target = rb.next_target(s.name)
+            assert b == target                    # matches RateBudget exactly
+            rb.record(s.name, b)
+        assert rb.realized_rate == B
+        assert not rb.budget_overrun
+    # the uniform 2.0 allocation snaps onto the real 2-bit serving rung
+    snapped, overrun = snap_bits(sens, waterfill_bits(sens, 2.0),
+                                 budget_bits_per_param=2.0)
+    assert not overrun and np.all(snapped == 2.0)
+    plan = build_plan(sens, 2.0)
+    assert all(e.payload_bits == 2 for e in plan.entries)
 
 
 @settings(max_examples=10, deadline=None)
@@ -69,10 +77,13 @@ def test_property_identical_layers_uniform(seed, n_layers):
 
 def test_two_group_matches_analytic_two_level_solution():
     """Flat two-group spectra: R_A − R_B = ½log₂(s_A/s_B), budget split by
-    parameter mass — the closed-form two-level waterfilling solution."""
+    parameter mass — the closed-form two-level waterfilling solution.
+    Budgets down to 2.25 put the cheap group's optimum near/below the new
+    2-bit rung (the regime the int2 payload exists for)."""
     for (va, vb, na, nb, B) in [(16.0, 1.0, 2, 2, 3.0),
                                 (64.0, 1.0, 1, 3, 4.0),
-                                (9.0, 0.25, 3, 1, 2.5)]:
+                                (9.0, 0.25, 3, 1, 2.5),
+                                (16.0, 1.0, 2, 2, 2.25)]:
         sens = ([flat(f"a{i}", va) for i in range(na)]
                 + [flat(f"b{i}", vb) for i in range(nb)])
         bits = waterfill_bits(sens, B)
@@ -82,6 +93,27 @@ def test_two_group_matches_analytic_two_level_solution():
         r_b = B - na / (na + nb) * delta
         np.testing.assert_allclose(bits[:na], r_a, atol=1e-6)
         np.testing.assert_allclose(bits[na:], r_b, atol=1e-6)
+
+
+def test_two_group_low_budget_snaps_to_int2_rung():
+    """Satellite: 2-bit targets snap to the REAL 2-bit rung now — the
+    cheap group lands on payload 2 (not ridden up to int3), the
+    expensive group keeps its higher format, budget holds."""
+    sens = ([flat(f"a{i}", 64.0) for i in range(2)]
+            + [flat(f"b{i}", 1.0) for i in range(2)])
+    B = 2.5
+    cont = waterfill_bits(sens, B)
+    assert cont[2] < 2.0 + 1e-9          # cheap group's optimum ≤ 2 bits
+    snapped, overrun = snap_bits(sens, cont, budget_bits_per_param=B)
+    assert not overrun
+    by_payload = [float(b) for b in snapped]
+    assert by_payload[2] == 2.0 and by_payload[3] == 2.0
+    assert by_payload[0] >= 3.0
+    plan = build_plan(sens, B)
+    payloads = {e.name: e.payload_bits for e in plan.entries}
+    assert payloads["b0"] == 2 and payloads["b1"] == 2
+    n = np.array([s.n_params for s in sens], float)
+    assert float(n @ snapped) / n.sum() <= B + 1e-9
 
 
 # ---------------------------------------------------------------------------
@@ -217,7 +249,7 @@ def test_plan_histograms_and_serving_formats():
     assert set(per_layer) == set(range(6))
     hist = plan.payload_histogram()
     assert sum(hist.values()) == len(plan.entries)
-    assert set(hist) <= {3, 4, 8}
+    assert set(hist) <= {2, 3, 4, 8}
     assert plan.planned_bits_per_param <= 3.0 + 1e-9
 
 
