@@ -29,7 +29,15 @@ CPU wall-clock is NOT the TPU story (the dry-run roofline is); the bytes
 model is the hardware-portable claim.  The scheduler comparison is
 dispatch-count-structural, so it survives the backend change.
 
-    python benchmarks/serve_bench.py [--quick]
+With ``--trace-out``/``--metrics-out``/``--events-out`` the bench also
+runs under ``repro.obs`` (DESIGN.md §11) and exports the Chrome trace,
+Prometheus exposition, and JSONL metric log; each ladder run snapshots
+the ``repro_kernel_*`` counter deltas into the JSON so
+``benchmarks/check_obs.py`` can reconcile the modeled HBM counters
+against check_bytes.py's layout accounting exactly.
+
+    python benchmarks/serve_bench.py [--quick] \
+        [--json out.json --trace-out trace.json --metrics-out m.prom]
 """
 import argparse
 import json
@@ -39,10 +47,18 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.configs.base import ArchConfig
+from repro.launch.serve import add_obs_flags, obs_export, obs_setup
 from repro.models import decode_chunk, decode_step, init_params, split_tree
 from repro.quant import leaf_inventory, quantize_params_tree, qweight_bytes
 from repro.serve import ContinuousEngine, Request, ServeEngine
+
+
+def _kernel_deltas(before, after):
+    """repro_kernel_* counter movement across one ladder run."""
+    return {k: v - before.get(k, 0.0) for k, v in after.items()
+            if v != before.get(k, 0.0)}
 
 
 def _engine_run(cfg, params, prompts, max_new, chunk):
@@ -51,9 +67,10 @@ def _engine_run(cfg, params, prompts, max_new, chunk):
                       prefill_chunk=chunk)
     for i, p in enumerate(prompts):
         eng.submit(Request(rid=i, prompt=p.copy(), max_new_tokens=max_new))
-    t0 = time.time()
+    snap0 = obs.counters_snapshot("repro_kernel_")
+    t0 = time.perf_counter()
     done = eng.run_until_done()
-    wall = time.time() - t0
+    wall = time.perf_counter() - t0
     toks = sum(len(r.out_tokens) for r in done)
     st = eng.round_stats[0]
     return {"tok_s": toks / max(st.decode_s, 1e-9),
@@ -62,6 +79,13 @@ def _engine_run(cfg, params, prompts, max_new, chunk):
             "prefill_s": st.prefill_s,
             "weight_bytes": eng.weight_bytes,
             "weight_formats": dict(eng.weight_formats),
+            # per-format HBM/dispatch counter movement for this run plus the
+            # engine's own dispatch count — check_obs.py reconciles the two
+            # against the inventory's layout math (exact, not approximate)
+            "obs_kernel": _kernel_deltas(snap0,
+                                         obs.counters_snapshot("repro_kernel_")),
+            "dispatches": sum(s.prefill_calls + s.decode_calls
+                              for s in eng.round_stats),
             "out": {r.rid: tuple(r.out_tokens) for r in done}}
 
 
@@ -169,6 +193,7 @@ def scheduler_compare(rows_out, cfg, params, quick=False):
     assert results["continuous"]["out"] == results["static"]["out"]
     assert results["continuous"]["tok_s"] > results["static"]["tok_s"], \
         (results["continuous"]["tok_s"], results["static"]["tok_s"])
+    results["n_slots"] = n_slots
     return results
 
 
@@ -233,8 +258,11 @@ def _json_payload(rows, results):
             "bytes_per_w": res["bytes_per_w"],
             "weight_bytes": res["weight_bytes"],
             "weight_formats": res["weight_formats"],
+            "obs_kernel": res["obs_kernel"],
+            "dispatches": res["dispatches"],
             "inventory": res["inventory"]}
-    return {"rows": [list(r) for r in rows], "ladder": ladder}
+    return {"rows": [list(r) for r in rows], "ladder": ladder,
+            "sched": {"n_slots": results["sched"]["n_slots"]}}
 
 
 if __name__ == "__main__":
@@ -244,7 +272,9 @@ if __name__ == "__main__":
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write rows + per-format storage inventory as "
                          "JSON (CI artifact; input to check_bytes.py)")
+    add_obs_flags(ap)
     args = ap.parse_args()
+    obs_setup(args)
     rows = []
     results = run(rows, quick=args.quick)
     for r in rows:
@@ -254,3 +284,4 @@ if __name__ == "__main__":
             json.dump(_json_payload(rows, results), f, indent=1,
                       sort_keys=True)
         print(f"wrote {args.json}")
+    obs_export(args)

@@ -47,22 +47,40 @@ class Heartbeat:
 
     def beat(self, step: int) -> None:
         """Record that this host completed ``step`` (write → rename, so a
-        reader never sees a torn file)."""
+        reader never sees a torn file).
+
+        The payload carries BOTH clocks: ``time`` (wall, for humans and
+        cross-host dashboards) and ``mono`` (``time.monotonic()``, for
+        staleness).  Staleness must never ride the wall clock — an NTP
+        step or admin ``date`` jump would age every heartbeat at once,
+        fake a dead fleet, and trigger spurious restarts.  CLOCK_MONOTONIC
+        is shared by all processes on a machine, so single-machine
+        watchdogs (the plan executor, tests) compare it directly; a
+        cross-host reader falls back to the wall field and inherits its
+        caveats.
+        """
         tmp = f"{self._path}.tmp.{uuid.uuid4().hex[:8]}"
         with open(tmp, "w") as f:
             json.dump({"host": self.host_id, "step": int(step),
-                       "time": time.time()}, f)
+                       "time": time.time(), "mono": time.monotonic()}, f)
         os.replace(tmp, self._path)
 
     @staticmethod
     def alive_hosts(hb_dir: str,
                     max_age_s: Optional[float] = None) -> Dict[str, int]:
         """host_id → last step, for every heartbeat file (optionally only
-        those younger than ``max_age_s``)."""
+        those younger than ``max_age_s``).
+
+        Staleness uses the beat's ``mono`` stamp against the reader's
+        ``time.monotonic()`` (wall-clock-jump immune; see :meth:`beat`),
+        falling back to the wall ``time`` field for heartbeats written by
+        older code.
+        """
         out: Dict[str, int] = {}
         if not os.path.isdir(hb_dir):
             return out
-        now = time.time()
+        now_mono = time.monotonic()
+        now_wall = time.time()
         for name in os.listdir(hb_dir):
             if not name.endswith(_HB_SUFFIX):
                 continue
@@ -73,8 +91,11 @@ class Heartbeat:
                 continue  # torn/garbage file: treat as not beating
             if not isinstance(rec, dict) or "step" not in rec:
                 continue  # parseable but malformed: also not beating
-            if max_age_s is not None and now - rec.get("time", 0) > max_age_s:
-                continue
+            if max_age_s is not None:
+                age = (now_mono - rec["mono"] if "mono" in rec
+                       else now_wall - rec.get("time", 0))
+                if age > max_age_s:
+                    continue
             out[rec.get("host", name[:-len(_HB_SUFFIX)])] = int(rec["step"])
         return out
 

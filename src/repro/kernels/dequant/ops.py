@@ -25,13 +25,30 @@ convert + scale into the matmul's operand read, preserving the HBM-bytes
 advantage that the roofline analysis measures.  The packed XLA siblings
 (``dequant_matmul_packed_xla`` / ``_packed3_xla`` / ``_packed2_xla``) are
 thin aliases of the ref-twin with the payload nbits pinned.
+
+Observability (DESIGN.md §11): the public entry points feed the
+``repro_kernel_*`` metric families when ``repro.obs`` is enabled —
+``repro_kernel_dispatch_total{format,path}`` counts Python-level kernel
+entries (every eager call, and every jit TRACE when the matmul is
+embedded in a larger jitted graph — re-dispatches of a cached executable
+never re-enter Python, so in-graph use counts compilations, not steps).
+Per-device-dispatch weight traffic is modeled at the ENGINE level, where
+the step structure is visible: :func:`record_weight_traffic` adds a
+param tree's per-format stored bytes (``weight_format_bytes`` — the same
+``quant.leaf_inventory`` records benchmarks/check_bytes.py audits) to
+``repro_kernel_hbm_bytes_total{format}`` once per forward dispatch, so
+the counter reconciles EXACTLY with the byte-accounting gate
+(benchmarks/check_obs.py asserts it).
 """
 from __future__ import annotations
 
 import functools
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
+
+from repro import obs
 
 from .dequant_matmul import (PLANE_GROUPS, dequant_matmul_packed_pallas,
                              dequant_matmul_pallas)
@@ -40,7 +57,51 @@ from .ref import dequant_matmul_packed_ref, dequant_matmul_ref
 __all__ = ["dequant_matmul", "dequant_matmul_packed", "dequant_matmul_xla",
            "dequant_matmul_packed_xla", "dequant_matmul_packed3",
            "dequant_matmul_packed3_xla", "dequant_matmul_packed2",
-           "dequant_matmul_packed2_xla", "payload_nbits"]
+           "dequant_matmul_packed2_xla", "payload_nbits",
+           "record_weight_traffic", "weight_format_bytes"]
+
+#: payload nbits → the leaf-format label shared with quant.leaf_inventory
+#: and benchmarks/check_bytes.py (one vocabulary across all three gates)
+FORMAT_OF_NBITS = {8: "int8", 4: "packed-int4", 3: "packed-int3",
+                   2: "packed-int2"}
+
+
+def _count_dispatch(fmt: str, path: str) -> None:
+    if obs.enabled():
+        obs.counter("repro_kernel_dispatch_total", format=fmt,
+                    path=path).inc()
+
+
+def weight_format_bytes(tree) -> Dict[str, int]:
+    """Serving format → total stored bytes over a param tree.
+
+    Grouped from ``quant.leaf_inventory`` — the identical records the
+    check_bytes.py CI gate audits — so engine-modeled HBM counters and
+    the byte-accounting gate can never use two different byte models.
+    """
+    from repro.quant import leaf_inventory  # lazy: avoids an import cycle
+    out: Dict[str, int] = {}
+    for rec in leaf_inventory(tree):
+        out[rec["format"]] = out.get(rec["format"], 0) + int(rec["bytes"])
+    return out
+
+
+def record_weight_traffic(format_bytes: Dict[str, int],
+                          dispatches: int = 1) -> None:
+    """Model ``dispatches`` forward passes' HBM weight reads.
+
+    Every device dispatch (prefill chunk or decode step) streams the
+    whole weight tree once, so each format's counter grows by its stored
+    bytes × dispatches.  The serving engines call this per round/step
+    with their cached :func:`weight_format_bytes`.
+    """
+    if not obs.enabled() or dispatches <= 0:
+        return
+    for fmt, nbytes in format_bytes.items():
+        obs.counter("repro_kernel_hbm_bytes_total", format=fmt) \
+            .inc(nbytes * dispatches)
+        obs.counter("repro_kernel_weight_dispatch_total", format=fmt) \
+            .inc(dispatches)
 
 
 def payload_nbits(payload) -> int:
@@ -84,8 +145,6 @@ def _apply_escapes(out, x, col_scale, row_scale, escapes):
     return out.at[:, esc_row].add(contrib.astype(out.dtype))
 
 
-@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
-                                             "prefer_pallas", "interpret"))
 def dequant_matmul(x, z, col_scale, row_scale, *, escapes=None,
                    block_m: int = 128, block_n: int = 128,
                    block_k: int = 512, prefer_pallas: bool = True,
@@ -95,7 +154,8 @@ def dequant_matmul(x, z, col_scale, row_scale, *, escapes=None,
     ``z`` int8 (n, k) selects the int8 kernel; a uint8 payload selects the
     packed kernel at the nbits its shape encodes (``payload_nbits``).
     ``escapes`` is an optional COO triple (rows, cols, dvals) applied after
-    the kernel.
+    the kernel.  The eager entry bumps ``repro_kernel_dispatch_total``
+    (format + kernel path) before handing off to the jitted body.
     """
     if z.dtype == jnp.uint8:
         return dequant_matmul_packed(
@@ -103,6 +163,21 @@ def dequant_matmul(x, z, col_scale, row_scale, *, escapes=None,
             escapes=escapes, block_m=block_m, block_n=block_n,
             block_k=block_k, prefer_pallas=prefer_pallas,
             interpret=interpret)
+    on_tpu = jax.default_backend() == "tpu"
+    _count_dispatch("int8", "pallas" if prefer_pallas
+                    and (on_tpu or interpret) else "xla")
+    return _dequant_matmul_int8(
+        x, z, col_scale, row_scale, escapes=escapes, block_m=block_m,
+        block_n=block_n, block_k=block_k, prefer_pallas=prefer_pallas,
+        interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "prefer_pallas", "interpret"))
+def _dequant_matmul_int8(x, z, col_scale, row_scale, *, escapes=None,
+                         block_m: int = 128, block_n: int = 128,
+                         block_k: int = 512, prefer_pallas: bool = True,
+                         interpret: bool = False):
     m, k = x.shape
     n = z.shape[0]
     on_tpu = jax.default_backend() == "tpu"
@@ -122,9 +197,6 @@ def dequant_matmul(x, z, col_scale, row_scale, *, escapes=None,
     return out
 
 
-@functools.partial(jax.jit, static_argnames=("nbits", "block_m", "block_n",
-                                             "block_k", "prefer_pallas",
-                                             "interpret"))
 def dequant_matmul_packed(x, payload, col_scale, row_scale, *,
                           nbits: int = 4, escapes=None,
                           block_m: int = 128, block_n: int = 128,
@@ -137,8 +209,26 @@ def dequant_matmul_packed(x, payload, col_scale, row_scale, *,
     zero-padded to the packed width G·kg before the planar groups are
     split, so every pad column multiplies an all-zero activation column
     and contributes nothing.  The same argument covers the block-align
-    padding of the byte axis.
+    padding of the byte axis.  The eager entry bumps
+    ``repro_kernel_dispatch_total`` before the jitted body.
     """
+    on_tpu = jax.default_backend() == "tpu"
+    _count_dispatch(FORMAT_OF_NBITS[nbits], "pallas" if prefer_pallas
+                    and (on_tpu or interpret) else "ref")
+    return _dequant_matmul_packed(
+        x, payload, col_scale, row_scale, nbits=nbits, escapes=escapes,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        prefer_pallas=prefer_pallas, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("nbits", "block_m", "block_n",
+                                             "block_k", "prefer_pallas",
+                                             "interpret"))
+def _dequant_matmul_packed(x, payload, col_scale, row_scale, *,
+                           nbits: int = 4, escapes=None,
+                           block_m: int = 128, block_n: int = 128,
+                           block_k: int = 512, prefer_pallas: bool = True,
+                           interpret: bool = False):
     g = PLANE_GROUPS[nbits]
     m, k = x.shape
     n, kg = payload.shape[0], payload.shape[-1]

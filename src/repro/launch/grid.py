@@ -40,7 +40,8 @@ def main(argv=None):
         if os.path.exists(out_path):
             print(f"[{i+1}/{len(cells)}] {tag}: cached", flush=True)
             continue
-        t0 = time.time()
+        t0 = time.perf_counter()   # monotonic: cell durations must not
+        # absorb wall-clock jumps (NTP steps) mid-grid
         cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", a,
                "--shape", s, "--mesh", m, "--out", args.out,
                "--wbits", str(args.wbits)]
@@ -56,7 +57,7 @@ def main(argv=None):
                 json.dump({"arch": a, "shape": s, "mesh": m,
                            "status": "timeout",
                            "timeout_s": args.timeout}, f)
-        print(f"[{i+1}/{len(cells)}] {msg}  ({time.time()-t0:.0f}s)",
+        print(f"[{i+1}/{len(cells)}] {msg}  ({time.perf_counter()-t0:.0f}s)",
               flush=True)
 
 

@@ -17,6 +17,12 @@
 The plan artifact carries its model provenance (arch/seed/calibration
 shape), so `execute`/`serve` reconstruct the exact weights the plan was
 built for — a plan is only valid against its own model.
+
+Every subcommand takes ``--trace-out``/``--metrics-out``/``--events-out``
+(DESIGN.md §11): `execute` exports per-task ``plan.task`` spans and the
+``repro_plan_*`` counters/histograms, `serve` the full ``repro_serve_*``
+engine instrumentation.  All reported durations are
+``time.perf_counter()`` (monotonic), matching the engines' accounting.
 """
 from __future__ import annotations
 
@@ -24,6 +30,8 @@ import argparse
 import time
 
 import numpy as np
+
+from repro.launch.serve import add_obs_flags, obs_export, obs_setup
 
 
 def _parse_bound(items):
@@ -85,7 +93,7 @@ def cmd_build(args):
             "seed": args.seed, "calib_batches": args.calib_batches,
             "seq_len": args.seq_len, "global_batch": args.global_batch}
     cfg, params, calib = _build_model(prov)
-    t0 = time.time()
+    t0 = time.perf_counter()
     sens = model_sensitivities(cfg, params, calib,
                                weighting=args.weighting, seed=args.seed,
                                floors=_parse_bound(args.floor),
@@ -93,7 +101,7 @@ def cmd_build(args):
     plan = build_plan(sens, args.target_bits, snap=not args.no_snap,
                       weighting=args.weighting, provenance=prov)
     plan.save(args.out)
-    print(f"built plan for {len(sens)} matrices in {time.time()-t0:.1f}s "
+    print(f"built plan for {len(sens)} matrices in {time.perf_counter()-t0:.1f}s "
           f"-> {args.out}")
     _print_summary(args.out)
 
@@ -121,7 +129,7 @@ def cmd_execute(args):
     from repro.plan import QuantPlan, quantize_model_with_plan
     plan = QuantPlan.load(args.plan)
     cfg, params, calib = _build_model(plan.provenance)
-    t0 = time.time()
+    t0 = time.perf_counter()
     _, _, plan, report = quantize_model_with_plan(
         cfg, params, calib, plan, n_workers=args.workers,
         devices="all" if args.pin_devices else None,
@@ -149,7 +157,7 @@ def cmd_execute(args):
               f"even-spread {d_ev:.4e} ({d_ev / max(d_wf, 1e-30):.2f}x)"
               f"  [realized {plan.realized_bits_per_param:.3f} vs "
               f"{even.realized_bits_per_param:.3f} bits/param]")
-    print(f"wall {time.time()-t0:.1f}s")
+    print(f"wall {time.perf_counter()-t0:.1f}s")
 
 
 def cmd_serve(args):
@@ -178,9 +186,9 @@ def cmd_serve(args):
             eng.submit(Request(
                 rid=i, prompt=rng.integers(0, cfg.vocab, args.prompt_len)
                 .astype(np.int32), max_new_tokens=args.max_new))
-        t0 = time.time()
+        t0 = time.perf_counter()
         done = eng.run_until_done()
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
         tok = sum(len(r.out_tokens) for r in done)
         print(f"served {len(done)} requests, {tok} tokens in {dt:.2f}s "
               f"({tok/dt:.1f} tok/s, continuous, mixed-rate)")
@@ -234,8 +242,14 @@ def main(argv=None):
     s.add_argument("--slots", type=int, default=4)
     s.set_defaults(fn=cmd_serve)
 
+    for p in (b, i, e, s):
+        add_obs_flags(p)
+
     args = ap.parse_args(argv)
-    return args.fn(args)
+    obs_setup(args)
+    ret = args.fn(args)
+    obs_export(args)
+    return ret
 
 
 if __name__ == "__main__":

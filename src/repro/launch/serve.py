@@ -8,8 +8,14 @@ continuous-batching engine (per-slot decode streams with in-flight
 admission, DESIGN.md §9); the static path stays the default and the
 differential reference.
 
+``--trace-out``/``--metrics-out``/``--events-out`` enable ``repro.obs``
+(DESIGN.md §11) and export the run's Perfetto-loadable Chrome trace,
+Prometheus text exposition, and JSONL metric log (the input to
+``launch/summarize.py --metrics``).
+
     PYTHONPATH=src python -m repro.launch.serve --arch minicpm-2b --reduced \
-        --requests 6 --wbits 4 --prefill-chunk 8 --continuous
+        --requests 6 --wbits 4 --prefill-chunk 8 --continuous \
+        --trace-out /tmp/serve_trace.json --metrics-out /tmp/serve.prom
 """
 from __future__ import annotations
 
@@ -20,12 +26,40 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs import get_config
 from repro.dist.sharding import use_mesh
 from repro.launch.mesh import make_host_mesh
 from repro.models import init_params, split_tree
 from repro.quant import quantize_params_tree, qweight_bytes
 from repro.serve import ContinuousEngine, Request, ServeEngine
+
+
+def add_obs_flags(ap: argparse.ArgumentParser) -> None:
+    """The shared observability exports (serve + plan drivers)."""
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON (Perfetto)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the Prometheus text exposition")
+    ap.add_argument("--events-out", default=None, metavar="PATH",
+                    help="write the JSONL metric log "
+                         "(launch/summarize.py --metrics)")
+
+
+def obs_setup(args) -> bool:
+    """Enable repro.obs when any export flag is set; returns enablement."""
+    if args.trace_out or args.metrics_out or args.events_out:
+        obs.enable()
+    return obs.enabled()
+
+
+def obs_export(args) -> None:
+    for path, write in ((args.trace_out, obs.write_trace),
+                        (args.metrics_out, obs.write_prometheus),
+                        (args.events_out, obs.write_jsonl)):
+        if path:
+            write(path)
+            print(f"wrote {path}")
 
 
 def main(argv=None):
@@ -42,7 +76,9 @@ def main(argv=None):
     ap.add_argument("--continuous", action="store_true",
                     help="continuous batching (per-slot decode streams, "
                          "in-flight admission) instead of static rounds")
+    add_obs_flags(ap)
     args = ap.parse_args(argv)
+    obs_setup(args)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -80,9 +116,9 @@ def main(argv=None):
                 prompt=rng.integers(0, cfg.vocab,
                                     args.prompt_len).astype(np.int32),
                 max_new_tokens=args.max_new))
-        t0 = time.time()
+        t0 = time.perf_counter()
         done = eng.run_until_done()
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
         total_tokens = sum(len(r.out_tokens) for r in done)
         sched = "continuous" if args.continuous else "static"
         print(f"served {len(done)} requests, {total_tokens} tokens "
@@ -106,6 +142,7 @@ def main(argv=None):
             print(f"  TTFT p50={p50*1e3:.0f}ms max={ttfts[-1]*1e3:.0f}ms")
         for r in done[:4]:
             print(f"  rid={r.rid} out={r.out_tokens[:8]}")
+        obs_export(args)
         return done
 
 

@@ -1,10 +1,12 @@
-"""Summarize dry-run JSONs into the EXPERIMENTS.md roofline tables, and
-QuantPlan artifacts into allocation reports (DESIGN.md §10).
+"""Summarize dry-run JSONs into the EXPERIMENTS.md roofline tables,
+QuantPlan artifacts into allocation reports (DESIGN.md §10), and
+repro.obs JSONL metric logs into run reports (DESIGN.md §11).
 
     PYTHONPATH=src python -m repro.launch.summarize [--dir experiments/dryrun]
     PYTHONPATH=src python -m repro.launch.summarize --plan plan.json
+    PYTHONPATH=src python -m repro.launch.summarize --metrics metrics.jsonl
 
-Stdlib-only on purpose: both report paths read plain JSON, so ops tooling
+Stdlib-only on purpose: all report paths read plain JSON, so ops tooling
 can run this without the jax stack installed.
 """
 from __future__ import annotations
@@ -114,6 +116,62 @@ def plan_summary(d: dict, width: int = 40) -> str:
     return "\n".join(out)
 
 
+def _fmt_val(name: str, v) -> str:
+    """Seconds-suffixed metrics render in ms; everything else %g."""
+    if v is None:
+        return "-"
+    if name.endswith("_seconds") and isinstance(v, (int, float)):
+        return f"{v * 1e3:.2f}ms"
+    return f"{v:g}" if isinstance(v, (int, float)) else str(v)
+
+
+def _series_label(rec: dict) -> str:
+    labels = rec.get("labels") or {}
+    if not labels:
+        return rec["name"]
+    inner = ",".join(f'{k}="{v}"' for k, v in sorted(labels.items()))
+    return f"{rec['name']}{{{inner}}}"
+
+
+def metrics_summary(lines, width: int = 30) -> str:
+    """Render a repro.obs JSONL metric log (DESIGN.md §11): counters and
+    gauges as a value table, histograms with count/quantiles and a
+    param-free #-bar over p50 (largest p50 = full width)."""
+    recs = [json.loads(ln) for ln in lines if ln.strip()]
+    by_kind = {"counter": [], "gauge": [], "histogram": []}
+    for r in recs:
+        by_kind.setdefault(r.get("kind", "?"), []).append(r)
+    out = [f"metrics: {len(recs)} series "
+           f"({len(by_kind['counter'])} counters, "
+           f"{len(by_kind['gauge'])} gauges, "
+           f"{len(by_kind['histogram'])} histograms)"]
+    for kind in ("counter", "gauge"):
+        if not by_kind[kind]:
+            continue
+        out.append(f"  {kind}s:")
+        pad = max(len(_series_label(r)) for r in by_kind[kind])
+        for r in sorted(by_kind[kind], key=_series_label):
+            out.append(f"    {_series_label(r):<{pad}}  "
+                       f"{_fmt_val(r['name'], r['value'])}")
+    hists = by_kind["histogram"]
+    if hists:
+        out.append("  histograms:")
+        top = max((r["quantiles"].get("0.5") or 0) for r in hists) or 1.0
+        pad = max(len(_series_label(r)) for r in hists)
+        for r in sorted(hists, key=_series_label):
+            q = r["quantiles"]
+            p50 = q.get("0.5")
+            bar = "#" * max(1, int(round(width * (p50 or 0) / top)))
+            out.append(
+                f"    {_series_label(r):<{pad}}  n={r['count']}"
+                f" p50={_fmt_val(r['name'], p50)}"
+                f" p90={_fmt_val(r['name'], q.get('0.9'))}"
+                f" p99={_fmt_val(r['name'], q.get('0.99'))}"
+                f" max={_fmt_val(r['name'], r.get('max'))}"
+                f"{'' if r.get('exact', True) else ' ~'} {bar}")
+    return "\n".join(out)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
@@ -121,10 +179,17 @@ def main(argv=None):
     ap.add_argument("--plan", default=None,
                     help="summarize a QuantPlan artifact instead of the "
                          "dry-run roofline tables")
+    ap.add_argument("--metrics", default=None,
+                    help="summarize a repro.obs JSONL metric log "
+                         "(counters + histogram quantiles)")
     args = ap.parse_args(argv)
     if args.plan:
         with open(args.plan) as f:
             print(plan_summary(json.load(f)))
+        return
+    if args.metrics:
+        with open(args.metrics) as f:
+            print(metrics_summary(f))
         return
     rows = load_all(args.dir)
     print(table(rows, args.mesh))

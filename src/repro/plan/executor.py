@@ -23,6 +23,14 @@ Fault handling reuses `repro.dist` primitives: each task retries under a
 optional :class:`~repro.dist.fault.Heartbeat` beats once per completed
 task, and a :class:`~repro.dist.fault.StragglerMonitor` accumulates
 per-device task times so chronically slow devices surface in the report.
+
+Observability (DESIGN.md §11): with ``repro.obs`` enabled each task's
+wall clock becomes a ``plan.task`` trace span (matrix/device/bits args)
+plus a ``repro_plan_task_seconds`` histogram sample, the whole execution
+a ``plan.execute`` span, and the fault machinery's outcomes surface as
+``repro_plan_retries_total`` / ``repro_plan_stragglers_total`` counters
+— the same numbers the :class:`ExecutorReport` carries, published live
+instead of only at return.
 """
 from __future__ import annotations
 
@@ -34,6 +42,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core.watersic import (CalibStats, QuantizedLinear,
                                  layer_distortion, quantize_at_rate)
 from repro.dist.fault import Heartbeat, RestartPolicy, StragglerMonitor
@@ -137,9 +146,17 @@ def execute_plan(plan: QuantPlan,
                     raise
                 with retry_lock:
                     retries += 1
+                obs.counter("repro_plan_retries_total").inc()
                 time.sleep(delay)
-        return (entry.name, q, time.perf_counter() - t0,
-                str(dev) if dev is not None else "default")
+        t1 = time.perf_counter()
+        dev_label = str(dev) if dev is not None else "default"
+        if obs.enabled():
+            obs.complete("plan.task", t0, t1, matrix=entry.name,
+                         device=dev_label,
+                         bits=float(entry.execution_bits))
+            obs.counter("repro_plan_tasks_total").inc()
+            obs.histogram("repro_plan_task_seconds").observe(t1 - t0)
+        return (entry.name, q, t1 - t0, dev_label)
 
     t_start = time.perf_counter()
     task_s: Dict[str, float] = {}
@@ -162,7 +179,14 @@ def execute_plan(plan: QuantPlan,
     finally:
         if pool is not None:
             pool.shutdown(wait=True)
-    wall = time.perf_counter() - t_start
+    t_done = time.perf_counter()
+    wall = t_done - t_start
+    stragglers = monitor.stragglers()
+    if obs.enabled():
+        obs.complete("plan.execute", t_start, t_done, n_workers=n_workers,
+                     tasks=len(order), retries=retries)
+        if stragglers:
+            obs.counter("repro_plan_stragglers_total").inc(len(stragglers))
 
     for e in plan:
         q = results[e.name]
@@ -173,7 +197,7 @@ def execute_plan(plan: QuantPlan,
                 np.asarray(stats[e.name].sigma_x)))
     report = ExecutorReport(n_workers=n_workers, wall_s=wall, task_s=task_s,
                             device_of=device_of, retries=retries,
-                            stragglers=monitor.stragglers())
+                            stragglers=stragglers)
     return results, report
 
 

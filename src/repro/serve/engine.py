@@ -42,6 +42,24 @@ land in ``engine.round_stats`` (static) / ``engine.step_stats``
 (continuous); ``prefill_s`` is device wall-clock up to the last prefill
 logits being ready — the host-side argmax transfer is decode-side.
 
+Observability (DESIGN.md §11): when ``repro.obs`` is enabled the engines
+publish the SAME perf_counter stamps that back RoundStats/StepStats/
+Request into the shared registry and tracer — the dataclasses stay the
+per-round/per-request views, the registry is the aggregation point.
+Request lifecycle lands as trace instants (``serve.request.arrival`` /
+``first_token`` / ``finish``) plus ``repro_serve_ttft_seconds`` /
+``repro_serve_tpot_seconds`` histograms; each prefill/decode region
+becomes a ``serve.prefill`` / ``serve.decode`` span (continuous
+admissions additionally get per-slot ``serve.admit`` spans on slot-
+numbered trace lanes); queue depth and slot occupancy are gauges, and
+admissions/evictions/tokens are counters.  Every device dispatch also
+feeds the modeled per-format HBM weight traffic
+(``repro_kernel_hbm_bytes_total`` via kernels.dequant.ops.record_weight_
+traffic — reconciled against check_bytes accounting in CI).  With obs
+disabled (the default) every hook is a no-op behind one boolean check:
+token streams and stats are byte-identical either way (asserted in
+tests/test_obs_integration.py).
+
 Weights may be served dequantized-on-the-fly from WaterSIC int codes
 (quant/qlinear) — the paper's deployment story: decode is weight-bytes
 bound, so 2–4 bit codes cut the dominant roofline term; the packed-int4
@@ -65,7 +83,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ArchConfig
+from repro.kernels.dequant.ops import (record_weight_traffic,
+                                       weight_format_bytes)
 from repro.models import (cache_reset_slot, cache_write_slot, decode_chunk,
                           decode_step, init_cache)
 from repro.quant import leaf_format_histogram, qweight_bytes
@@ -156,8 +177,49 @@ def _run_prefill(decode_fn, decode_chunk_fn, params, cache,
     return logits, cache, calls
 
 
-class ServeEngine:
+class _ObsHooks:
+    """Shared observability plumbing for both engines (DESIGN.md §11).
+
+    All hooks are no-ops behind one ``obs.enabled()`` check, so the
+    disabled (default) path costs a boolean test — never a dict walk.
+    ``_format_bytes`` lazily caches the param tree's per-format stored
+    bytes (quant.leaf_inventory grouping) so each device dispatch can be
+    charged its modeled HBM weight read.
+    """
+
+    _obs_engine = "?"
+    _fmt_bytes = None
+
+    def _format_bytes(self):
+        if self._fmt_bytes is None:
+            self._fmt_bytes = weight_format_bytes(self.params)
+        return self._fmt_bytes
+
+    def _obs_arrival(self, req: "Request") -> None:
+        if obs.enabled():
+            obs.instant("serve.request.arrival", rid=req.rid,
+                        engine=self._obs_engine)
+            obs.gauge("repro_serve_queue_depth",
+                      engine=self._obs_engine).set(len(self.queue))
+
+    def _obs_request_done(self, req: "Request", slot=None) -> None:
+        kw = {} if slot is None else {"slot": int(slot)}
+        obs.instant("serve.request.finish", rid=req.rid,
+                    engine=self._obs_engine, **kw)
+        obs.counter("repro_serve_finished_total",
+                    engine=self._obs_engine).inc()
+        if req.ttft_s is not None:
+            obs.histogram("repro_serve_ttft_seconds",
+                          engine=self._obs_engine).observe(req.ttft_s)
+        if req.tpot_s is not None:
+            obs.histogram("repro_serve_tpot_seconds",
+                          engine=self._obs_engine).observe(req.tpot_s)
+
+
+class ServeEngine(_ObsHooks):
     """Static-batching rounds — the reference scheduler (DESIGN.md §6)."""
+
+    _obs_engine = "static"
 
     def __init__(self, cfg: ArchConfig, params, *, n_slots: int = 4,
                  max_len: int = 256, cache_dtype=jnp.float32,
@@ -186,6 +248,7 @@ class ServeEngine:
         if req.arrival_s is None:
             req.arrival_s = time.perf_counter()
         self.queue.append(req)
+        self._obs_arrival(req)
 
     def _admit(self) -> List[Request]:
         """Pop up to n_slots queued requests sharing the head's prompt len."""
@@ -250,12 +313,30 @@ class ServeEngine:
                                          jnp.asarray(last[:, None]))
             last = np.argmax(np.asarray(logits), axis=-1).astype(np.int32)
         t2 = time.perf_counter()
-        self.round_stats.append(RoundStats(
+        st = RoundStats(
             batch=b, prompt_len=plen, prefill_calls=prefill_calls,
             prefill_s=t1 - t0, decode_calls=decode_steps, decode_s=t2 - t1,
             new_tokens=sum(len(r.out_tokens) for r in batch),
             ttft_s=[r.ttft_s for r in batch],
-            tpot_s=[r.tpot_s for r in batch if r.tpot_s is not None]))
+            tpot_s=[r.tpot_s for r in batch if r.tpot_s is not None])
+        self.round_stats.append(st)
+        if obs.enabled():
+            # registry/tracer views of the SAME stamps RoundStats carries
+            obs.complete("serve.prefill", t0, t1, engine="static",
+                         batch=b, calls=st.prefill_calls)
+            obs.complete("serve.decode", t1, t2, engine="static",
+                         batch=b, calls=st.decode_calls)
+            obs.counter("repro_serve_rounds_total").inc()
+            obs.counter("repro_serve_admitted_total",
+                        engine="static").inc(b)
+            obs.counter("repro_serve_tokens_total",
+                        engine="static").inc(st.new_tokens)
+            obs.gauge("repro_serve_queue_depth",
+                      engine="static").set(len(self.queue))
+            for r in batch:
+                self._obs_request_done(r)
+            record_weight_traffic(self._format_bytes(),
+                                  st.prefill_calls + st.decode_calls)
         for r in batch:
             r.done = True
         return batch
@@ -269,7 +350,7 @@ class ServeEngine:
         return done
 
 
-class ContinuousEngine:
+class ContinuousEngine(_ObsHooks):
     """Continuous-batching scheduler: per-slot decode streams with
     in-flight admission and eviction (DESIGN.md §9).
 
@@ -289,6 +370,8 @@ class ContinuousEngine:
     DO couple rows across a batch — continuous-vs-static token exactness
     is a dense/ssm/hybrid property; see DESIGN.md §9).
     """
+
+    _obs_engine = "continuous"
 
     def __init__(self, cfg: ArchConfig, params, *, n_slots: int = 4,
                  max_len: int = 256, cache_dtype=jnp.float32,
@@ -335,6 +418,7 @@ class ContinuousEngine:
         assert len(req.prompt) + req.max_new_tokens <= self.max_len, \
             f"request {req.rid} exceeds cache length"
         self.queue.append(req)
+        self._obs_arrival(req)
 
     @property
     def active_slots(self) -> int:
@@ -365,7 +449,11 @@ class ContinuousEngine:
             self._decode, self._decode_chunk, self.params, sub, toks,
             self.prefill_chunk)
         jax.block_until_ready(logits)
-        self.prefill_s += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        self.prefill_s += t1 - t0
+        obs.complete("serve.prefill", t0, t1, engine="continuous",
+                     slots=[s for s, _ in pairs], calls=calls,
+                     common_len=common)
         for i, (slot, req) in enumerate(pairs):
             if g == 1:
                 sub_i, log_i = sub, logits
@@ -381,7 +469,11 @@ class ContinuousEngine:
                     self._decode, self._decode_chunk, self.params, sub_i,
                     tail[None, :], self.prefill_chunk)
                 jax.block_until_ready(log_i)
-                self.prefill_s += time.perf_counter() - t_tail
+                t_tail_end = time.perf_counter()
+                self.prefill_s += t_tail_end - t_tail
+                obs.complete("serve.prefill", t_tail, t_tail_end,
+                             engine="continuous", slot=slot, rid=req.rid,
+                             calls=c_tail)
                 calls += c_tail
             first = int(np.argmax(np.asarray(log_i)[0]))
             self.cache = self._write_slot(self.cache, sub_i,
@@ -391,9 +483,22 @@ class ContinuousEngine:
             req.out_tokens.append(first)
             self.slots[slot] = req
             self._last[slot] = first
+            if obs.enabled():
+                # per-slot admission lane: burst prefill + this row's graft
+                obs.complete("serve.admit", t0, t_tok, tid=slot, slot=slot,
+                             engine="continuous", rid=req.rid,
+                             prompt_len=len(req.prompt))
+                obs.instant("serve.request.first_token", rid=req.rid,
+                            slot=slot, engine="continuous")
             if len(req.out_tokens) >= req.max_new_tokens:
                 self._finish(slot, req, t_tok, finished)
         self.prefill_calls += calls
+        if obs.enabled():
+            obs.counter("repro_serve_admitted_total",
+                        engine="continuous").inc(g)
+            obs.counter("repro_serve_tokens_total",
+                        engine="continuous").inc(g)
+            record_weight_traffic(self._format_bytes(), calls)
 
     def _finish(self, slot: int, req: Request, t: float,
                 finished: List[Request]) -> None:
@@ -411,6 +516,9 @@ class ContinuousEngine:
                                           jnp.asarray(slot, jnp.int32))
         self.finished.append(req)
         finished.append(req)
+        if obs.enabled():
+            obs.counter("repro_serve_evicted_total").inc()
+            self._obs_request_done(req, slot=slot)
 
     def step(self) -> List[Request]:
         """One scheduler iteration: admit → lockstep decode → evict.
@@ -438,6 +546,8 @@ class ContinuousEngine:
             t_tok = time.perf_counter()
             self.decode_calls += 1
             self.decode_s += t_tok - td
+            obs.complete("serve.decode", td, t_tok, engine="continuous",
+                         slots=active)
             for i in active:
                 r = self.slots[i]
                 r.out_tokens.append(int(last[i]))
@@ -445,10 +555,23 @@ class ContinuousEngine:
                 decoded += 1
                 if len(r.out_tokens) >= r.max_new_tokens:
                     self._finish(i, r, t_tok, finished)
+        t_end = time.perf_counter()
         self.step_stats.append(StepStats(
             active=len(active), admitted=admitted, finished=len(finished),
             new_tokens=admitted + decoded,
-            step_s=time.perf_counter() - t0))
+            step_s=t_end - t0))
+        if obs.enabled():
+            obs.complete("serve.step", t0, t_end, engine="continuous",
+                         active=len(active), admitted=admitted,
+                         finished=len(finished))
+            obs.counter("repro_serve_tokens_total",
+                        engine="continuous").inc(decoded)
+            obs.gauge("repro_serve_slots_active",
+                      engine="continuous").set(self.active_slots)
+            obs.gauge("repro_serve_queue_depth",
+                      engine="continuous").set(len(self.queue))
+            if active:
+                record_weight_traffic(self._format_bytes(), 1)
         return finished
 
     def run_until_done(self, max_steps: int = 100_000) -> List[Request]:

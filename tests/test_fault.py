@@ -16,6 +16,40 @@ def test_heartbeat_liveness(tmp_path):
     assert alive == {"h0": 5, "h1": 7}
 
 
+def test_heartbeat_staleness_survives_wall_clock_jump(tmp_path, monkeypatch):
+    """Staleness rides time.monotonic(): an NTP step / admin ``date`` jump
+    hours forward between beat and read must NOT age the heartbeat (the
+    regression: wall-clock staleness declared the whole fleet dead at
+    once and triggered spurious restarts)."""
+    import repro.dist.fault as fault
+    hb = Heartbeat(str(tmp_path), "h0")
+    hb.beat(3)
+    real_time = fault.time.time
+    monkeypatch.setattr(fault.time, "time",
+                        lambda: real_time() + 3 * 3600)  # +3h wall jump
+    # wall clock says the beat is 3 h old; monotonic knows it's fresh
+    assert Heartbeat.alive_hosts(str(tmp_path), max_age_s=60) == {"h0": 3}
+
+
+def test_heartbeat_staleness_wall_fallback_for_old_format(tmp_path,
+                                                          monkeypatch):
+    """Heartbeats written by older code carry only the wall ``time`` field;
+    the reader falls back to wall-clock aging for those (and genuinely
+    stale ones filter out)."""
+    import json
+    import os
+    import time as _time
+
+    import repro.dist.fault as fault
+    with open(os.path.join(str(tmp_path), "h9" + fault._HB_SUFFIX),
+              "w") as f:
+        json.dump({"host": "h9", "step": 11,
+                   "time": _time.time() - 120}, f)   # no "mono" field
+    assert Heartbeat.alive_hosts(str(tmp_path)) == {"h9": 11}
+    assert Heartbeat.alive_hosts(str(tmp_path), max_age_s=60) == {}
+    assert Heartbeat.alive_hosts(str(tmp_path), max_age_s=600) == {"h9": 11}
+
+
 def test_straggler_detection():
     mon = StragglerMonitor(threshold=1.5)
     for _ in range(10):

@@ -1,0 +1,201 @@
+"""repro.obs unit tests: registry semantics, tracer output, exporters,
+and the zero-cost-when-disabled contract (DESIGN.md §11)."""
+import json
+import timeit
+
+import pytest
+
+from repro import obs
+from repro.obs.metrics import EXACT_MAX, Registry
+from repro.obs.trace import NULL_SPAN, Tracer
+
+
+@pytest.fixture(autouse=True)
+def _isolated_obs():
+    """Every test starts disabled with a fresh registry/tracer."""
+    obs.disable()
+    obs.reset()
+    yield
+    obs.disable()
+    obs.reset()
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_counter_identity_and_monotonicity():
+    reg = Registry()
+    c1 = reg.counter("repro_x_total", format="int8")
+    c2 = reg.counter("repro_x_total", format="int8")
+    c3 = reg.counter("repro_x_total", format="int4")
+    assert c1 is c2 and c1 is not c3          # labels are part of identity
+    c1.inc()
+    c1.inc(2.5)
+    assert c1.value == 3.5 and c3.value == 0.0
+    with pytest.raises(ValueError):
+        c1.inc(-1)
+
+
+def test_counter_name_must_end_total():
+    with pytest.raises(ValueError):
+        Registry().counter("repro_x_count")
+
+
+def test_kind_collision_rejected():
+    reg = Registry()
+    reg.counter("repro_x_total")
+    with pytest.raises(TypeError):
+        reg.gauge("repro_x_total")
+
+
+def test_gauge_set_add():
+    g = Registry().gauge("repro_depth", engine="static")
+    g.set(4)
+    g.add(-1)
+    assert g.value == 3
+
+
+def test_histogram_exact_small_sample():
+    h = Registry().histogram("repro_lat_seconds")
+    for v in (5.0, 1.0, 3.0, 2.0, 4.0):
+        h.observe(v)
+    assert h.exact
+    assert h.count == 5 and h.sum == 15.0
+    assert h.min == 1.0 and h.max == 5.0
+    assert h.quantile(0.5) == 3.0             # nearest-rank on sorted copy
+    assert h.quantile(0.0) == 1.0 and h.quantile(1.0) == 5.0
+
+
+def test_histogram_reservoir_after_exact_capacity():
+    h = Registry().histogram("repro_big_seconds")
+    n = EXACT_MAX + 500
+    for i in range(n):
+        h.observe(float(i))
+    assert not h.exact                        # fell back to reservoir
+    assert h.count == n and h.min == 0.0 and h.max == float(n - 1)
+    assert h.sum == sum(float(i) for i in range(n))
+    # reservoir quantiles are approximate but must stay inside the range
+    # and roughly ordered
+    q50, q99 = h.quantile(0.5), h.quantile(0.99)
+    assert 0.0 <= q50 <= q99 <= float(n - 1)
+    assert n * 0.25 <= q50 <= n * 0.75        # generous: uniform stream
+
+
+def test_histogram_reservoir_deterministic():
+    """Same name/labels + same stream → same reservoir (seeded RNG)."""
+    def fill():
+        h = Registry().histogram("repro_det_seconds", engine="x")
+        for i in range(EXACT_MAX + 300):
+            h.observe(float(i % 977))
+        return [h.quantile(q) for q in (0.5, 0.9, 0.99)]
+    assert fill() == fill()
+
+
+# ---------------------------------------------------------------------------
+# exporters
+# ---------------------------------------------------------------------------
+
+
+def test_prometheus_exposition_shape():
+    reg = Registry()
+    reg.counter("repro_a_total", fmt='wei"rd\\x').inc(2)
+    reg.gauge("repro_g").set(7)
+    h = reg.histogram("repro_h_seconds")
+    for v in (1.0, 2.0, 3.0):
+        h.observe(v)
+    text = reg.to_prometheus()
+    assert "# TYPE repro_a_total counter" in text
+    assert '\\"' in text and "\\\\" in text   # label escaping survived
+    assert "# TYPE repro_g gauge" in text
+    assert "# TYPE repro_h_seconds summary" in text
+    assert 'quantile="0.5"' in text
+    assert "repro_h_seconds_sum 6" in text
+    assert "repro_h_seconds_count 3" in text
+
+
+def test_jsonl_roundtrip_and_snapshot():
+    reg = Registry()
+    reg.counter("repro_k_total", format="int8").inc(5)
+    reg.gauge("repro_q").set(1)
+    reg.histogram("repro_t_seconds").observe(0.25)
+    recs = [json.loads(ln) for ln in reg.jsonl_lines()]
+    kinds = sorted(r["kind"] for r in recs)
+    assert kinds == ["counter", "gauge", "histogram"]
+    hist = next(r for r in recs if r["kind"] == "histogram")
+    assert hist["count"] == 1 and hist["quantiles"]["0.5"] == 0.25
+    snap = reg.counters_snapshot("repro_k_")
+    assert snap == {'repro_k_total{format="int8"}': 5.0}
+
+
+def test_tracer_chrome_events():
+    tr = Tracer()
+    with tr.span("serve.prefill", slot=2):
+        with tr.span("serve.inner"):
+            pass
+    tr.instant("serve.request.arrival", rid=0)
+    tr.complete("plan.task", 10.0, 10.5, matrix="m")
+    doc = tr.to_chrome()
+    events = doc["traceEvents"]
+    names = [e["name"] for e in events]
+    assert set(names) == {"serve.prefill", "serve.inner",
+                          "serve.request.arrival", "plan.task"}
+    assert [e["ts"] for e in events] == sorted(e["ts"] for e in events)
+    outer = next(e for e in events if e["name"] == "serve.prefill")
+    inner = next(e for e in events if e["name"] == "serve.inner")
+    assert outer["ph"] == "X" and outer["args"]["slot"] == 2
+    # nesting: the inner span lies within the outer one
+    assert outer["ts"] <= inner["ts"]
+    assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"] + 1
+    task = next(e for e in events if e["name"] == "plan.task")
+    assert task["dur"] == pytest.approx(0.5e6)  # adopted stamps, µs
+    assert task["cat"] == "plan"
+    inst = next(e for e in events if e["name"] == "serve.request.arrival")
+    assert inst["ph"] == "i" and inst["s"] == "t"
+
+
+# ---------------------------------------------------------------------------
+# facade: disabled semantics + overhead
+# ---------------------------------------------------------------------------
+
+
+def test_disabled_returns_shared_noops():
+    assert not obs.enabled()
+    assert obs.span("x", a=1) is NULL_SPAN
+    m = obs.counter("repro_x_total")
+    assert m is obs.gauge("repro_y") is obs.histogram("repro_z_seconds")
+    m.inc()
+    m.observe(1.0)                            # all instrument methods no-op
+    assert obs.counters_snapshot() == {}
+    assert list(obs.jsonl_lines()) == []
+
+
+def test_enable_records_then_reset_clears():
+    obs.enable()
+    obs.counter("repro_e_total").inc()
+    with obs.span("serve.x"):
+        pass
+    assert obs.counters_snapshot() == {"repro_e_total": 1.0}
+    assert obs.tracer().to_chrome()["traceEvents"]
+    obs.reset()
+    assert obs.counters_snapshot() == {}
+    assert not obs.tracer().to_chrome()["traceEvents"]
+
+
+def test_disabled_span_overhead_is_a_function_call():
+    """The disabled path must cost like a bare function call: one boolean
+    check + returning a shared singleton.  Lenient bounds (CI boxes are
+    noisy): within 25x of an equivalent no-op function and under 5 µs."""
+    obs.disable()
+
+    def ref(name, **kw):
+        return NULL_SPAN
+
+    n = 20_000
+    t_ref = min(timeit.repeat(lambda: ref("serve.x", slot=1),
+                              number=n, repeat=5)) / n
+    t_obs = min(timeit.repeat(lambda: obs.span("serve.x", slot=1),
+                              number=n, repeat=5)) / n
+    assert t_obs < 5e-6, f"disabled span costs {t_obs*1e9:.0f} ns"
+    assert t_obs < 25 * max(t_ref, 1e-9), (t_obs, t_ref)
