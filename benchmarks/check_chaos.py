@@ -1,0 +1,168 @@
+#!/usr/bin/env python3
+"""CI gate: assert the chaos-matrix recovery invariants (DESIGN.md §12).
+
+Stdlib-only (same contract as check_bytes.py / check_obs.py): reads the
+summary JSON written by ``repro.launch.chaos`` plus its obs trace-event
+log, and fails loudly unless the run proves the resilience layer actually
+recovered from every injected fault:
+
+universal (every fault kind)
+  * at least one fault was injected (a chaos cell that injected nothing
+    proves nothing);
+  * every request completed and every completed token stream is
+    bit-identical to the fault-free reference;
+  * nothing was dropped — the five canonical fault classes must all be
+    absorbed, and a dropped-by-deadline request would be *reported* here,
+    never silently truncated;
+  * the snapshot → kill → resume cycle reproduced the uninterrupted
+    streams;
+  * the trace's ``chaos.inject`` instants agree with the summary's
+    injection log (the two records come from independent code paths).
+
+per-kind recovery evidence (from the obs counters/events)
+  * device-loss / admission-failure → one retry and one recovery per
+    injection at the faulted site;
+  * corrupt-payload → every corruption detected by the integrity
+    checksums and healed (corrupt == healed == injected);
+  * slow-step → the slow-step detector flagged at least one step;
+  * clock-skew → the full skew landed in the engine's wall clock AND
+    nothing expired because of it (deadlines ride the monotonic clock —
+    the negative-space invariant).
+
+Usage::
+
+    python benchmarks/check_chaos.py --summary /tmp/chaos.json \
+        --trace /tmp/chaos_trace.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+FAULT_KINDS = ("device-loss", "slow-step", "corrupt-payload",
+               "admission-failure", "clock-skew")
+
+_SITE = {"device-loss": "serve.decode",
+         "slow-step": "serve.decode",
+         "corrupt-payload": "serve.step",
+         "admission-failure": "serve.admit",
+         "clock-skew": "serve.step"}
+
+
+def _counter(counters: dict, name: str, **labels) -> float:
+    """Sum counter samples matching name and every given label."""
+    total = 0.0
+    for key, val in counters.items():
+        base, _, rest = key.partition("{")
+        if base != name:
+            continue
+        pairs = {}
+        for item in rest.rstrip("}").split(","):
+            if "=" in item:
+                k, _, v = item.partition("=")
+                pairs[k.strip()] = v.strip().strip('"')
+        if all(pairs.get(k) == str(v) for k, v in labels.items()):
+            total += float(val)
+    return total
+
+
+def check(summary: dict, trace_events: list, errors: list) -> None:
+    kind = summary.get("kind")
+    counters = summary.get("counters", {})
+
+    def need(cond, msg):
+        if not cond:
+            errors.append(f"[{kind}] {msg}")
+
+    need(kind in FAULT_KINDS, f"unknown fault kind {kind!r}")
+    injected = summary.get("injected", 0)
+    need(injected >= 1, "no faults injected: the cell proves nothing")
+    need(summary.get("streams_match") is True,
+         "token streams diverged from the fault-free reference")
+    need(summary.get("dropped") == [],
+         f"requests dropped under {kind}: {summary.get('dropped')}")
+    need(summary.get("resume_match") is True,
+         "snapshot->kill->resume streams diverged from uninterrupted run")
+
+    # the injection log must agree with the obs counter and trace instants
+    log = summary.get("injection_log", [])
+    need(len(log) == injected, "injection log length != injected count")
+    need(_counter(counters, "repro_chaos_injected_total",
+                  kind=kind) == injected,
+         "repro_chaos_injected_total disagrees with the injection log")
+    inject_events = [e for e in trace_events
+                     if e.get("name") == "chaos.inject"]
+    if trace_events:
+        need(len(inject_events) == injected,
+             f"trace has {len(inject_events)} chaos.inject instants, "
+             f"summary says {injected}")
+        for e in inject_events:
+            need(e.get("args", {}).get("kind") == kind,
+                 f"trace inject of foreign kind: {e.get('args')}")
+
+    site = _SITE.get(kind)
+    if kind in ("device-loss", "admission-failure"):
+        retries = _counter(counters, "repro_serve_retries_total", site=site)
+        recovered = _counter(counters, "repro_serve_recovered_total",
+                             site=site)
+        need(retries >= injected,
+             f"{retries:.0f} retries at {site} for {injected} injections")
+        need(recovered >= 1, "no recovered dispatch recorded")
+    elif kind == "corrupt-payload":
+        corrupt = _counter(counters, "repro_serve_integrity_corrupt_total")
+        healed = _counter(counters, "repro_serve_integrity_healed_total")
+        need(corrupt == injected,
+             f"{corrupt:.0f} corruptions detected of {injected} injected")
+        need(healed == corrupt,
+             f"{healed:.0f} healed of {corrupt:.0f} detected")
+        for entry in log:
+            need(entry.get("path"),
+                 "corruption injected into an empty tree (no payloads)")
+        if trace_events:
+            heals = [e for e in trace_events
+                     if e.get("name") == "resilience.heal"]
+            need(len(heals) >= 1, "no resilience.heal span in the trace")
+    elif kind == "slow-step":
+        need(summary.get("slow_steps", 0) >= 1,
+             "slow-step detector never flagged")
+    elif kind == "clock-skew":
+        want = sum(e.get("skew_s", 0.0) for e in log)
+        need(abs(summary.get("clock_skew_s", 0.0) - want) < 1e-9,
+             f"engine clock skew {summary.get('clock_skew_s')} != "
+             f"sum of injected skews {want}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--summary", required=True,
+                    help="JSON written by repro.launch.chaos --json-out")
+    ap.add_argument("--trace", default=None,
+                    help="trace-event JSON written by --trace-out")
+    args = ap.parse_args(argv)
+
+    with open(args.summary) as f:
+        summary = json.load(f)
+    trace_events = []
+    if args.trace:
+        with open(args.trace) as f:
+            doc = json.load(f)
+        trace_events = doc.get("traceEvents", doc) \
+            if isinstance(doc, dict) else doc
+
+    errors: list = []
+    check(summary, trace_events, errors)
+    if errors:
+        print("chaos invariant FAILURES:")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    print(f"chaos[{summary['kind']} seed={summary.get('seed')}]: "
+          f"all recovery invariants hold "
+          f"({summary['injected']} injected, streams bit-identical, "
+          f"resume bit-identical)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -25,6 +25,12 @@ and p50/p99 TTFT.  Static rounds head-of-line-block mixed-length traffic
 in decode dispatches); continuous batching refills slots mid-flight, so
 it must win tokens/s on this workload — asserted below.
 
+Part 3 (resilience, DESIGN.md §12): the armed resilience layer (per-step
+payload integrity + retry policy, no faults firing) must not change one
+token, and its overhead ratio is reported; an overload burst must walk
+the degradation ladder down (rung history reported) with every submitted
+request accounted finished-or-dropped exactly.
+
 CPU wall-clock is NOT the TPU story (the dry-run roofline is); the bytes
 model is the hardware-portable claim.  The scheduler comparison is
 dispatch-count-structural, so it survives the backend change.
@@ -49,10 +55,12 @@ import jax.numpy as jnp
 
 from repro import obs
 from repro.configs.base import ArchConfig
+from repro.dist.fault import RestartPolicy
 from repro.launch.serve import add_obs_flags, obs_export, obs_setup
 from repro.models import decode_chunk, decode_step, init_params, split_tree
 from repro.quant import leaf_inventory, quantize_params_tree, qweight_bytes
-from repro.serve import ContinuousEngine, Request, ServeEngine
+from repro.serve import (ContinuousEngine, DegradePolicy, Request,
+                         ResilienceConfig, ServeEngine, build_bit_ladder)
 
 
 def _kernel_deltas(before, after):
@@ -197,6 +205,80 @@ def scheduler_compare(rows_out, cfg, params, quick=False):
     return results
 
 
+# ---------------------------------------------------------------------------
+# Part 3 — resilience: layer overhead + overload degradation (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+def resilience_bench(rows_out, cfg, params, quick=False):
+    """Two claims: (a) the armed resilience layer (deadlines + per-step
+    payload integrity + retry policy, no faults firing) costs little and
+    changes NO token, (b) under an overload burst the degradation policy
+    walks the bit ladder down (strictly fewer weight bytes per dispatch)
+    and every submitted request is accounted finished-or-dropped exactly.
+    """
+    rng = np.random.default_rng(11)
+    n_req = 6 if quick else 10
+    budget = 6 if quick else 12
+    prompts = [rng.integers(0, cfg.vocab, 6).astype(np.int32)
+               for _ in range(n_req)]
+    max_len = 6 + budget + 2
+
+    def serve(resilience):
+        eng = ContinuousEngine(cfg, params, n_slots=4, max_len=max_len,
+                               prefill_chunk=4, resilience=resilience)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p.copy(),
+                               max_new_tokens=budget))
+        t0 = time.perf_counter()
+        done = eng.run_until_done()
+        return eng, time.perf_counter() - t0, \
+            {r.rid: tuple(r.out_tokens) for r in done}
+
+    armed = ResilienceConfig(
+        retry=RestartPolicy(max_restarts=4, reset_after=8),
+        integrity_every=1)          # worst case: checksum EVERY step
+    _, _, _ = serve(None)                                   # warm compile
+    _, base_s, base_out = serve(None)
+    eng_on, on_s, on_out = serve(armed)
+    assert on_out == base_out, "armed resilience changed token streams"
+    overhead = on_s / max(base_s, 1e-9)
+    rows_out.append(("resil/overhead", overhead,
+                     f"base_s={base_s:.3f};armed_s={on_s:.3f};"
+                     f"integrity_every=1"))
+
+    # overload burst down the ladder: rung 0 is the nominal tree, lower
+    # rungs requantize it (same machinery mixed-rate serving uses)
+    ladder = build_bit_ladder(params, (None, 3, 2))
+    pol = DegradePolicy(ladder=ladder, high_watermark=4, low_watermark=1,
+                        streak=1, cooldown_steps=2)
+    eng = ContinuousEngine(
+        cfg, params, n_slots=2, max_len=max_len, prefill_chunk=4,
+        resilience=ResilienceConfig(degrade=pol, queue_cap=4 * n_req))
+    burst = 2 * n_req
+    submitted = sum(
+        1 for i in range(burst)
+        if eng.submit(Request(rid=i,
+                              prompt=prompts[i % n_req].copy(),
+                              max_new_tokens=budget)))
+    done = eng.run_until_done()
+    down = [r for r in eng.rung_history if r[2] == "down"]
+    assert down, "overload burst never degraded down the ladder"
+    assert len(done) + len(eng.dropped) == submitted, "lost requests"
+    rungs = " -> ".join(f"{name}@{tick}"
+                        for tick, name, _ in eng.rung_history)
+    rows_out.append(("resil/degrade", len(down),
+                     f"rungs={rungs};finished={len(done)};"
+                     f"dropped={len(eng.dropped)};submitted={submitted}"))
+    return {"overhead": {"base_s": base_s, "armed_s": on_s,
+                         "ratio": overhead},
+            "degrade": {"rungs": [list(r) for r in eng.rung_history],
+                        "down_shifts": len(down),
+                        "finished": len(done),
+                        "dropped": len(eng.dropped),
+                        "submitted": submitted}}
+
+
 def run(rows_out, quick=False):
     cfg = ArchConfig(name="bench", family="dense",
                      n_layers=2 if quick else 4,
@@ -243,6 +325,8 @@ def run(rows_out, quick=False):
             < results["int4_packed"]["bytes_per_w"]
             < results["int8"]["bytes_per_w"] < 2.0)
     results["sched"] = scheduler_compare(rows_out, cfg, params, quick=quick)
+    results["resilience"] = resilience_bench(rows_out, cfg, params,
+                                             quick=quick)
     return results
 
 
@@ -251,7 +335,7 @@ def _json_payload(rows, results):
     and the per-leaf storage inventory check_bytes.py audits."""
     ladder = {}
     for name, res in results.items():
-        if name == "sched":
+        if name in ("sched", "resilience"):
             continue
         ladder[name] = {
             "tok_s": res["tok_s"], "tokens": res["tokens"],
@@ -262,7 +346,8 @@ def _json_payload(rows, results):
             "dispatches": res["dispatches"],
             "inventory": res["inventory"]}
     return {"rows": [list(r) for r in rows], "ladder": ladder,
-            "sched": {"n_slots": results["sched"]["n_slots"]}}
+            "sched": {"n_slots": results["sched"]["n_slots"]},
+            "resilience": results["resilience"]}
 
 
 if __name__ == "__main__":

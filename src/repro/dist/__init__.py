@@ -8,7 +8,7 @@ other two).  Everything the models/launch/serve packages need is re-exported
 here.
 """
 from .checkpoint import (cleanup_old, latest_step, list_steps,
-                         restore_checkpoint, save_checkpoint)
+                         read_manifest, restore_checkpoint, save_checkpoint)
 from .fault import (Heartbeat, RestartPolicy, StragglerMonitor,
                     run_with_restarts)
 from .sharding import (batch_spec, current_mesh, default_rules,
@@ -17,7 +17,7 @@ from .sharding import (batch_spec, current_mesh, default_rules,
 __all__ = [
     "batch_spec", "current_mesh", "default_rules", "logical_shard",
     "shard_map", "spec_for_axes", "use_mesh",
-    "cleanup_old", "latest_step", "list_steps", "restore_checkpoint",
-    "save_checkpoint",
+    "cleanup_old", "latest_step", "list_steps", "read_manifest",
+    "restore_checkpoint", "save_checkpoint",
     "Heartbeat", "RestartPolicy", "StragglerMonitor", "run_with_restarts",
 ]

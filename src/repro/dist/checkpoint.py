@@ -38,8 +38,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
-           "list_steps", "cleanup_old"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "read_manifest",
+           "latest_step", "list_steps", "cleanup_old"]
 
 _PREFIX = "step_"
 _MANIFEST = "manifest.json"
@@ -145,6 +145,22 @@ def save_checkpoint(ckpt_dir: str, step: int, state,
     if keep is not None:
         cleanup_old(ckpt_dir, keep)
     return final
+
+
+def read_manifest(ckpt_dir: str, step: Optional[int] = None
+                  ) -> Dict[str, Any]:
+    """The committed manifest for ``step`` (latest when None) — metadata
+    only, no array loads.  This is how a consumer reads ``extra_meta``
+    (e.g. the serving engine's scheduler state) to decide HOW to build
+    the restore template before paying for :func:`restore_checkpoint`.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(
+                f"no committed checkpoint under {ckpt_dir!r}")
+    with open(os.path.join(_step_path(ckpt_dir, step), _MANIFEST)) as f:
+        return json.load(f)
 
 
 def _sharding_index(shardings) -> Dict[str, Any]:

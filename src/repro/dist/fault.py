@@ -106,29 +106,45 @@ class StragglerMonitor:
     A host straggles when its rolling mean exceeds ``threshold`` × the
     median of all hosts' rolling means.  At least ``min_observations``
     samples are required before a host can be flagged (cold-start compiles
-    should not page anyone).
+    should not page anyone), and ``skip_first`` observations per host are
+    discarded outright — the first step after a restart carries the jit
+    compile, and ONE such sample in a small window is enough to make a
+    perfectly healthy host's mean cross the threshold (the cold-start
+    false positive tests/test_fault.py pins).
     """
 
     def __init__(self, threshold: float = 2.0, window: int = 50,
-                 min_observations: int = 3):
+                 min_observations: int = 3, skip_first: int = 0):
         self.threshold = threshold
         self.window = window
         self.min_observations = min_observations
+        self.skip_first = skip_first
         self._times: Dict[str, deque] = {}
+        self._skipped: Dict[str, int] = {}
 
     def observe(self, host: str, step_time_s: float) -> None:
+        if self._skipped.get(host, 0) < self.skip_first:
+            self._skipped[host] = self._skipped.get(host, 0) + 1
+            return
         self._times.setdefault(host, deque(maxlen=self.window)) \
             .append(float(step_time_s))
 
-    def means(self) -> Dict[str, float]:
-        return {h: sum(t) / len(t) for h, t in self._times.items() if t}
+    def means(self, min_count: int = 1) -> Dict[str, float]:
+        """Rolling mean per host with at least ``min_count`` samples.
+
+        ``min_count`` guards every consumer against cold-start hosts: a
+        host one sample into its window has a "mean" that is really just
+        its compile time, and letting it into a fleet summary (or the
+        straggler median) is how fresh hosts get paged at startup.
+        """
+        return {h: sum(t) / len(t) for h, t in self._times.items()
+                if len(t) >= max(1, min_count)}
 
     def stragglers(self) -> List[str]:
         # warm hosts only, for the median too: one cold host's compile-time
         # sample must neither get flagged nor inflate the baseline that
         # everyone else is compared against
-        means = {h: m for h, m in self.means().items()
-                 if len(self._times[h]) >= self.min_observations}
+        means = self.means(min_count=self.min_observations)
         if len(means) < 2:
             return []  # "relative to whom?" needs at least one peer
         med = median(means.values())
@@ -138,23 +154,46 @@ class StragglerMonitor:
 
 @dataclasses.dataclass
 class RestartPolicy:
-    """Capped exponential backoff with a hard restart budget."""
+    """Capped exponential backoff with a hard restart budget.
+
+    With ``reset_after=N`` set, a streak of N consecutive successes
+    (reported via :meth:`record_success`) refunds the whole budget and
+    resets the backoff to base.  Without it (default) the budget is
+    lifetime: a long-running service that hits one transient blip per
+    day would exhaust a 3-restart budget by Thursday and fail hard on a
+    fault it has recovered from three times already.
+    """
 
     max_restarts: int = 3
     backoff_base_s: float = 1.0
     backoff_mult: float = 2.0
     backoff_max_s: float = 300.0
+    #: successes-in-a-row that refund the restart budget (None = never)
+    reset_after: Optional[int] = None
     _used: int = dataclasses.field(default=0, repr=False)
+    _streak: int = dataclasses.field(default=0, repr=False)
 
     def next_delay(self) -> Optional[float]:
         """Seconds to wait before the next restart, or None when the
         budget is exhausted (caller should re-raise / page)."""
+        self._streak = 0
         if self._used >= self.max_restarts:
             return None
         delay = min(self.backoff_base_s * self.backoff_mult ** self._used,
                     self.backoff_max_s)
         self._used += 1
         return delay
+
+    def record_success(self) -> None:
+        """Note one successful step; a ``reset_after`` streak refunds the
+        restart budget (no-op when ``reset_after`` is unset or the budget
+        is untouched)."""
+        if self.reset_after is None or self._used == 0:
+            return
+        self._streak += 1
+        if self._streak >= self.reset_after:
+            self._used = 0
+            self._streak = 0
 
     @property
     def restarts_used(self) -> int:
@@ -189,6 +228,7 @@ def run_with_restarts(step_fn: Callable[[int, Any], Any], state,
                 state, start = initial, 0
             for step in range(start + 1, n_steps + 1):
                 state = step_fn(step, state)
+                policy.record_success()   # reset_after streaks refund budget
                 if heartbeat is not None:
                     heartbeat.beat(step)
                 if step % save_every == 0 or step == n_steps:

@@ -58,7 +58,8 @@ __all__ = ["dequant_matmul", "dequant_matmul_packed", "dequant_matmul_xla",
            "dequant_matmul_packed_xla", "dequant_matmul_packed3",
            "dequant_matmul_packed3_xla", "dequant_matmul_packed2",
            "dequant_matmul_packed2_xla", "payload_nbits",
-           "record_weight_traffic", "weight_format_bytes"]
+           "record_weight_traffic", "weight_format_bytes",
+           "payload_checksums", "verify_payloads"]
 
 #: payload nbits → the leaf-format label shared with quant.leaf_inventory
 #: and benchmarks/check_bytes.py (one vocabulary across all three gates)
@@ -102,6 +103,58 @@ def record_weight_traffic(format_bytes: Dict[str, int],
             .inc(nbytes * dispatches)
         obs.counter("repro_kernel_weight_dispatch_total", format=fmt) \
             .inc(dispatches)
+
+
+def _walk_qweights(tree):
+    """(path-string, qweight-dict) pairs in quant.leaf_inventory's path
+    vocabulary — integrity checksums, the inventory byte audit, and the
+    chaos corruption log all key leaves the same way."""
+    from repro.quant import is_qweight  # lazy: avoids an import cycle
+    out = []
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            if is_qweight(node):
+                out.append(("/".join(path), node))
+                return
+            for k, v in node.items():
+                walk(v, path + (k,))
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                walk(v, path + (str(i),))
+
+    walk(tree, ())
+    return out
+
+
+def payload_checksums(tree) -> Dict[str, int]:
+    """crc32 over every quantized leaf's code payload bytes (DESIGN.md §12).
+
+    The checksum covers the ``codes`` array exactly as stored (packed
+    uint8 payloads byte-verbatim, int8 code matrices likewise), keyed by
+    the ``quant.leaf_inventory`` path — the integrity baseline the
+    serving resilience layer verifies against between dispatches.  A
+    single flipped payload byte changes the crc, so silent HBM/host
+    corruption of served weights is detectable without dequantizing.
+    """
+    import zlib
+
+    import numpy as np
+    return {path: zlib.crc32(np.ascontiguousarray(
+                np.asarray(leaf["codes"])).tobytes())
+            for path, leaf in _walk_qweights(tree)}
+
+
+def verify_payloads(tree, checksums: Dict[str, int]):
+    """Paths whose payload crc32 no longer matches ``checksums``.
+
+    Leaves added since the baseline (paths missing from ``checksums``)
+    are reported too — a served tree must never grow unchecked payloads.
+    Returns a sorted list; empty means the tree is intact.
+    """
+    current = payload_checksums(tree)
+    return sorted(p for p, crc in current.items()
+                  if checksums.get(p) != crc)
 
 
 def payload_nbits(payload) -> int:

@@ -1,0 +1,200 @@
+"""Chaos-matrix driver: one fault class, one seed, three invariant runs
+(DESIGN.md §12).
+
+This is what the ``chaos-smoke`` CI job executes, once per (fault kind ×
+seed) matrix cell (``CHAOS_KIND`` / ``CHAOS_SEED`` env vars, same pattern
+as the packed-kernel-parity matrix).  Each invocation:
+
+1. serves a seed-determined workload on a fault-free continuous engine
+   (the reference streams);
+2. replays the identical workload under an armed ``chaos.seeded_plan``
+   with the resilience layer on, and requires every completed request's
+   token stream to be bit-identical to the reference — dropped requests
+   must be *reported*, never silently truncated (for the five canonical
+   fault classes nothing may drop at all);
+3. runs a snapshot → kill → resume cycle and requires the combined
+   streams to be bit-identical to an uninterrupted run.
+
+Results land in a JSON summary (stream-match booleans, the injection
+log, an ``obs`` counter snapshot) plus the obs trace-event log;
+``benchmarks/check_chaos.py`` — stdlib-only — reconciles the two and
+gates CI.
+
+    CHAOS_KIND=device-loss CHAOS_SEED=0 PYTHONPATH=src \
+        python -m repro.launch.chaos --json-out /tmp/chaos.json \
+        --trace-out /tmp/chaos_trace.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+from repro import chaos, obs
+from repro.configs.base import ArchConfig
+from repro.dist.fault import RestartPolicy
+from repro.models import init_params, split_tree
+from repro.quant import quantize_params_tree
+from repro.serve import ContinuousEngine, Request, ResilienceConfig
+
+# small-but-real serving config: quantized leaves (so corrupt-payload has
+# payloads to flip), 2 slots (so admission bursts and evictions happen)
+_CFG = ArchConfig(name="chaos", family="dense", n_layers=2, d_model=32,
+                  n_heads=2, n_kv=2, d_ff=64, vocab=64, head_dim=16)
+_N_REQ = 10
+_BUDGET = 6
+_MAX_LEN = 64
+
+
+def _workload(seed: int):
+    """The seed-determined request list (same for every run in a cell)."""
+    rng = np.random.default_rng([int(seed), 0xFA17])
+    return [Request(rid=i,
+                    prompt=rng.integers(0, _CFG.vocab,
+                                        4 + int(rng.integers(0, 3))
+                                        ).astype(np.int32),
+                    max_new_tokens=_BUDGET)
+            for i in range(_N_REQ)]
+
+
+def _params():
+    base, _ = split_tree(init_params(_CFG, jax.random.PRNGKey(0)))
+    # min_dim below the reduced model's widths: the corrupt-payload fault
+    # needs real packed payloads in the tree to flip
+    return quantize_params_tree(base, nbits=4, packed=True, min_dim=16)
+
+
+def _resilience(**over) -> ResilienceConfig:
+    kw = dict(
+        retry=RestartPolicy(max_restarts=8, backoff_base_s=1e-3,
+                            backoff_max_s=1e-2, reset_after=2),
+        retry_sleep=lambda s: None,      # deterministic: no real waiting
+        integrity_every=1,               # heal before the next dispatch
+        # warmup 1 so an early injected slow step still flags; threshold
+        # high enough that ordinary CI jitter (and the step-1 compile,
+        # which IS 4x the later median) is the only other flag source
+        slow_step_warmup=1, slow_step_threshold=4.0)
+    kw.update(over)
+    return ResilienceConfig(**kw)
+
+
+def _run(params, seed: int, *, resilience=None, plan=None):
+    eng = ContinuousEngine(_CFG, params, n_slots=2, max_len=_MAX_LEN,
+                           prefill_chunk=4, resilience=resilience)
+    for r in _workload(seed):
+        eng.submit(r)
+    if plan is not None:
+        with chaos.active(plan) as rt:
+            done = eng.run_until_done()
+        return eng, done, rt
+    return eng, eng.run_until_done(), None
+
+
+def _streams(reqs):
+    return {int(r.rid): [int(t) for t in r.out_tokens] for r in reqs}
+
+
+def _resume_cycle(params, seed: int, reference, kill_after: int = 7):
+    """Snapshot → kill → resume; True iff combined streams == reference."""
+    with tempfile.TemporaryDirectory() as snap:
+        eng = ContinuousEngine(
+            _CFG, params, n_slots=2, max_len=_MAX_LEN, prefill_chunk=4,
+            resilience=ResilienceConfig(snapshot_dir=snap, snapshot_every=3))
+        for r in _workload(seed):
+            eng.submit(r)
+        for _ in range(kill_after):
+            eng.step()
+        delivered = _streams(r for r in eng.finished if r.done)
+        del eng                          # the "kill": host state is gone
+        eng2 = ContinuousEngine.resume(snap, _CFG, params, prefill_chunk=4)
+        eng2.run_until_done()
+        # requests that finished after the snapshot re-finish identically
+        # on the resumed engine; the union must equal the reference
+        combined = dict(delivered)
+        combined.update(_streams(eng2.finished))
+        return combined == reference, len(delivered), len(eng2.finished)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--kind", default=os.environ.get("CHAOS_KIND",
+                                                     "device-loss"),
+                    choices=list(chaos.FAULT_KINDS))
+    ap.add_argument("--seed", type=int,
+                    default=int(os.environ.get("CHAOS_SEED", "0")))
+    ap.add_argument("--json-out", default=None, metavar="PATH")
+    ap.add_argument("--trace-out", default=None, metavar="PATH")
+    args = ap.parse_args(argv)
+
+    params = _params()
+
+    # 1. fault-free reference streams (no obs: keep the event log to the
+    #    faulted run so check_chaos reconciles exactly one run's events)
+    _, ref_done, _ = _run(params, args.seed)
+    reference = _streams(ref_done)
+    assert len(reference) == _N_REQ
+
+    # 2. faulted run under the armed plan, obs on
+    obs.reset()
+    obs.enable()
+    # delay_s is large vs the tiny per-step wall time so the slow-step
+    # detector's 4x-median test has real margin; the schedule starts at
+    # invocation 2 so step/decode 0-1 (jit compile) stay fault-free.
+    # serve.admit fires only when slots free up (~N_REQ/n_slots times a
+    # run), so the admission-failure horizon must stay inside that count.
+    horizon, first = (4, 1) if args.kind == "admission-failure" else (20, 2)
+    plan = chaos.seeded_plan(args.kind, args.seed, horizon=horizon,
+                             n_faults=2, first=first, delay_s=0.25)
+    eng, done, rt = _run(params, args.seed, resilience=_resilience(),
+                         plan=plan)
+    faulted = _streams(done)
+    completed_match = all(faulted.get(rid) == toks
+                          for rid, toks in reference.items()
+                          if rid in faulted)
+    summary = {
+        "kind": args.kind,
+        "seed": args.seed,
+        "injected": rt.injected(),
+        "injection_log": rt.log,
+        "schedule": {s.site: list(s.at) for s in plan.specs},
+        "completed": sorted(faulted),
+        "streams_match": faulted == reference,
+        "completed_match": completed_match,
+        "dropped": [{"rid": r.rid, "reason": r.drop_reason}
+                    for r in eng.dropped],
+        "clock_skew_s": eng._clock_skew_s,
+        "slow_steps": eng.slow_steps,
+        "retries_used": (eng.resilience.retry.restarts_used
+                         if eng.resilience.retry else 0),
+        "counters": obs.counters_snapshot(),
+    }
+
+    # 3. snapshot → kill → resume (fault-free cycle, same workload)
+    ok, pre, post = _resume_cycle(params, args.seed, reference)
+    summary["resume_match"] = ok
+    summary["resume_delivered_pre_kill"] = pre
+    summary["resume_finished_post_resume"] = post
+
+    if args.trace_out:
+        obs.write_trace(args.trace_out)
+        print(f"wrote {args.trace_out}")
+    obs.disable()
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(summary, f, indent=1)
+        print(f"wrote {args.json_out}")
+
+    print(f"chaos[{args.kind} seed={args.seed}]: "
+          f"{summary['injected']} injected, "
+          f"streams_match={summary['streams_match']} "
+          f"dropped={len(summary['dropped'])} "
+          f"resume_match={summary['resume_match']}")
+    return summary
+
+
+if __name__ == "__main__":
+    main()

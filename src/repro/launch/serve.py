@@ -13,6 +13,14 @@ differential reference.
 Prometheus text exposition, and JSONL metric log (the input to
 ``launch/summarize.py --metrics``).
 
+Resilience flags (DESIGN.md §12) attach the serving-resilience layer:
+``--deadline-s``/``--queue-cap`` bound latency and queue growth (dropped
+requests are reported at exit), ``--retries`` arms transient-dispatch
+retry, ``--integrity-every`` checksums+heals the quantized payloads,
+``--degrade`` walks the int4→int3→int2 ladder under queue pressure, and
+``--snapshot-dir``/``--snapshot-every`` write crash-recoverable engine
+snapshots (``--resume`` restarts from the latest one).
+
     PYTHONPATH=src python -m repro.launch.serve --arch minicpm-2b --reduced \
         --requests 6 --wbits 4 --prefill-chunk 8 --continuous \
         --trace-out /tmp/serve_trace.json --metrics-out /tmp/serve.prom
@@ -28,11 +36,13 @@ import numpy as np
 
 from repro import obs
 from repro.configs import get_config
+from repro.dist.fault import RestartPolicy
 from repro.dist.sharding import use_mesh
 from repro.launch.mesh import make_host_mesh
 from repro.models import init_params, split_tree
 from repro.quant import quantize_params_tree, qweight_bytes
-from repro.serve import ContinuousEngine, Request, ServeEngine
+from repro.serve import (ContinuousEngine, DegradePolicy, Request,
+                         ResilienceConfig, ServeEngine, build_bit_ladder)
 
 
 def add_obs_flags(ap: argparse.ArgumentParser) -> None:
@@ -62,6 +72,67 @@ def obs_export(args) -> None:
             print(f"wrote {path}")
 
 
+def add_resilience_flags(ap: argparse.ArgumentParser) -> None:
+    """Serving-resilience knobs (shared with launch/chaos.py)."""
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request deadline (monotonic seconds from "
+                         "arrival); expired requests are dropped, reported")
+    ap.add_argument("--queue-cap", type=int, default=None,
+                    help="bounded admission queue; submits past the cap "
+                         "are shed")
+    ap.add_argument("--retries", type=int, default=0,
+                    help="transient-dispatch restart budget (0 = fail fast)")
+    ap.add_argument("--retry-backoff-s", type=float, default=0.05)
+    ap.add_argument("--integrity-every", type=int, default=None, metavar="N",
+                    help="checksum the quantized payloads every N steps "
+                         "and heal corruption from pristine copies")
+    ap.add_argument("--degrade", action="store_true",
+                    help="walk the serving bit ladder down under queue "
+                         "pressure (and back up when it drains)")
+    ap.add_argument("--degrade-high", type=int, default=8,
+                    help="queue depth that counts as overload")
+    ap.add_argument("--degrade-low", type=int, default=1,
+                    help="queue depth that counts as drained")
+    ap.add_argument("--snapshot-dir", default=None, metavar="DIR",
+                    help="periodic engine snapshots via dist.checkpoint")
+    ap.add_argument("--snapshot-every", type=int, default=16, metavar="N")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume the continuous engine from the latest "
+                         "snapshot in --snapshot-dir")
+
+
+def resilience_from_args(args, params) -> ResilienceConfig | None:
+    """Build the ResilienceConfig the flags describe (None if untouched).
+
+    ``params`` is the engine's nominal serving tree — with ``--degrade``
+    it becomes rung 0 of the ladder and the lower rungs are quantized
+    down from it via the usual machinery.
+    """
+    degrade = None
+    if args.degrade:
+        # nominal tree first; lower rungs re-quantize the same leaves
+        # down the ladder (already-int4 rung 0 keeps its packed leaves:
+        # quantize_params_tree passes qweight nodes through unchanged)
+        degrade = DegradePolicy(
+            ladder=[("rung0", params)] + build_bit_ladder(params, (3, 2)),
+            high_watermark=args.degrade_high,
+            low_watermark=args.degrade_low)
+    retry = RestartPolicy(max_restarts=args.retries,
+                          backoff_base_s=args.retry_backoff_s,
+                          reset_after=4) if args.retries else None
+    if not any([args.deadline_s, args.queue_cap, retry,
+                args.integrity_every, degrade, args.snapshot_dir]):
+        return None
+    return ResilienceConfig(
+        queue_cap=args.queue_cap,
+        default_deadline_s=args.deadline_s,
+        retry=retry,
+        integrity_every=args.integrity_every,
+        degrade=degrade,
+        snapshot_dir=args.snapshot_dir,
+        snapshot_every=args.snapshot_every if args.snapshot_dir else None)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -77,6 +148,7 @@ def main(argv=None):
                     help="continuous batching (per-slot decode streams, "
                          "in-flight admission) instead of static rounds")
     add_obs_flags(ap)
+    add_resilience_flags(ap)
     args = ap.parse_args(argv)
     obs_setup(args)
 
@@ -106,10 +178,22 @@ def main(argv=None):
             qb, fb = qweight_bytes(params)
             print(f"  param bytes {qb/1e6:.2f} MB vs bf16 {fb/1e6:.2f} MB "
                   f"({fb/max(qb,1):.2f}x HBM win)")
+        res = resilience_from_args(args, params)
         cls = ContinuousEngine if args.continuous else ServeEngine
-        eng = cls(cfg, params, n_slots=args.slots,
-                  max_len=args.prompt_len + args.max_new + 2,
-                  prefill_chunk=args.prefill_chunk or None)
+        if args.resume:
+            if not (args.continuous and args.snapshot_dir):
+                ap.error("--resume needs --continuous and --snapshot-dir")
+            eng = ContinuousEngine.resume(
+                args.snapshot_dir, cfg, params,
+                prefill_chunk=args.prefill_chunk or None, resilience=res)
+            print(f"resumed from snapshot at tick {eng._tick} "
+                  f"({eng.active_slots} slots live, "
+                  f"{len(eng.queue)} queued)")
+        else:
+            eng = cls(cfg, params, n_slots=args.slots,
+                      max_len=args.prompt_len + args.max_new + 2,
+                      prefill_chunk=args.prefill_chunk or None,
+                      resilience=res)
         for i in range(args.requests):
             eng.submit(Request(
                 rid=i,
@@ -140,6 +224,12 @@ def main(argv=None):
         if ttfts:
             p50 = ttfts[len(ttfts) // 2]
             print(f"  TTFT p50={p50*1e3:.0f}ms max={ttfts[-1]*1e3:.0f}ms")
+        if res is not None:
+            for r in eng.dropped:
+                print(f"  dropped rid={r.rid} ({r.drop_reason})")
+            if eng.rung_history:
+                print("  rungs: " + " -> ".join(
+                    f"{name}@{tick}" for tick, name, _ in eng.rung_history))
         for r in done[:4]:
             print(f"  rid={r.rid} out={r.out_tokens[:8]}")
         obs_export(args)

@@ -1,5 +1,8 @@
 from .engine import (ContinuousEngine, Request, RoundStats, ServeEngine,
                      StepStats)
+from .resilience import (DegradePolicy, EngineStalledError, PayloadGuard,
+                         ResilienceConfig, SlowStepDetector, build_bit_ladder)
 
 __all__ = ["ContinuousEngine", "Request", "RoundStats", "ServeEngine",
-           "StepStats"]
+           "StepStats", "DegradePolicy", "EngineStalledError", "PayloadGuard",
+           "ResilienceConfig", "SlowStepDetector", "build_bit_ladder"]

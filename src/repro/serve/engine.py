@@ -60,6 +60,25 @@ disabled (the default) every hook is a no-op behind one boolean check:
 token streams and stats are byte-identical either way (asserted in
 tests/test_obs_integration.py).
 
+Resilience (DESIGN.md §12): both engines accept an optional
+``resilience=ResilienceConfig(...)`` enabling per-request deadlines with
+cancellation (monotonic-clock expiry — immune to the chaos clock-skew
+fault), bounded admission queues with load shedding, transient-dispatch
+retry-with-backoff (``dist.fault.RestartPolicy``), payload-integrity
+checksums with exact healing (``serve.resilience.PayloadGuard``),
+queue-pressure degradation down the serving bit ladder
+(``DegradePolicy`` hot-swaps the param tree at step boundaries — the KV
+cache is format-independent, so in-flight slots continue), and periodic
+engine snapshots through ``dist.checkpoint`` (``ContinuousEngine.resume``
+rebuilds a bit-identical engine).  Every fault-handling action emits obs
+events; with ``resilience=None`` (default) each branch is one ``is
+None`` test and behavior is byte-identical to before.  The chaos hooks
+(``repro.chaos``) sit at serve.step/serve.admit/serve.decode (continuous)
+and serve.round (static), each behind one ``chaos.enabled()`` check, and
+always fire BEFORE the engine mutates state for that step — so a retried
+dispatch replays identically and recovered token streams stay
+bit-identical to the fault-free run (the chaos-smoke CI matrix).
+
 Weights may be served dequantized-on-the-fly from WaterSIC int codes
 (quant/qlinear) — the paper's deployment story: decode is weight-bytes
 bound, so 2–4 bit codes cut the dominant roofline term; the packed-int4
@@ -83,16 +102,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import obs
+from repro import chaos, obs
 from repro.configs.base import ArchConfig
 from repro.kernels.dequant.ops import (record_weight_traffic,
                                        weight_format_bytes)
 from repro.models import (cache_reset_slot, cache_write_slot, decode_chunk,
                           decode_step, init_cache)
 from repro.quant import leaf_format_histogram, qweight_bytes
+from repro.serve.resilience import (EngineStalledError, PayloadGuard,
+                                    ResilienceConfig)
 
 __all__ = ["Request", "RoundStats", "StepStats", "ServeEngine",
-           "ContinuousEngine"]
+           "ContinuousEngine", "EngineStalledError", "ResilienceConfig"]
 
 
 @dataclasses.dataclass
@@ -106,6 +127,12 @@ class Request:
     arrival_s: Optional[float] = None      # set by submit() if unset
     first_token_s: Optional[float] = None  # first output token materialized
     finish_s: Optional[float] = None       # budget filled
+    # resilience (DESIGN.md §12)
+    deadline_s: Optional[float] = None     # seconds from arrival; expiry is
+                                           # measured on the MONOTONIC clock
+    arrival_mono: Optional[float] = None   # monotonic arrival (deadline base)
+    dropped: bool = False                  # shed or deadline-expired
+    drop_reason: Optional[str] = None      # "shed-queue-full" | "deadline"
 
     @property
     def ttft_s(self) -> Optional[float]:
@@ -177,14 +204,18 @@ def _run_prefill(decode_fn, decode_chunk_fn, params, cache,
     return logits, cache, calls
 
 
-class _ObsHooks:
-    """Shared observability plumbing for both engines (DESIGN.md §11).
+class _EngineBase:
+    """Shared observability + resilience plumbing (DESIGN.md §11/§12).
 
-    All hooks are no-ops behind one ``obs.enabled()`` check, so the
+    All obs hooks are no-ops behind one ``obs.enabled()`` check, so the
     disabled (default) path costs a boolean test — never a dict walk.
     ``_format_bytes`` lazily caches the param tree's per-format stored
     bytes (quant.leaf_inventory grouping) so each device dispatch can be
     charged its modeled HBM weight read.
+
+    Resilience state is initialized by ``_init_resilience`` (called by
+    both constructors, with None when disabled); every resilience branch
+    in the hot path is one ``is None`` test.
     """
 
     _obs_engine = "?"
@@ -194,6 +225,208 @@ class _ObsHooks:
         if self._fmt_bytes is None:
             self._fmt_bytes = weight_format_bytes(self.params)
         return self._fmt_bytes
+
+    # -- resilience (DESIGN.md §12) ----------------------------------------
+
+    def _init_resilience(self, resilience: Optional[ResilienceConfig]):
+        """Wire the optional resilience layer; must run after ``self.params``
+        is set and BEFORE the weight accounting (a degradation ladder's
+        rung 0 replaces the constructor's params)."""
+        self.resilience = resilience
+        self.dropped: List[Request] = []    # shed + deadline-expired
+        self.slow_steps = 0                 # detector flags (host counter)
+        self._clock_skew_s = 0.0            # chaos clock-skew lands here
+        self._tick = 0                      # step/round index (1-based)
+        self._guard: Optional[PayloadGuard] = None
+        self._detector = None
+        self._rung = 0
+        self._streak_over = 0
+        self._streak_under = 0
+        self._degrade_cooldown = 0
+        self.rung_history: List[tuple] = []  # [(tick, rung name, direction)]
+        if resilience is None:
+            return
+        self._detector = resilience.make_detector()
+        if resilience.degrade is not None:
+            # the engine serves rung 0 of the ladder from the start
+            name, tree = resilience.degrade.ladder[0]
+            self.params = tree
+            self.rung_history.append((0, name, "init"))
+        if resilience.integrity_every:
+            self._guard = PayloadGuard(self.params)
+
+    def _now(self) -> float:
+        """Wall-clock stamp source for stats/latency accounting.
+
+        perf_counter plus the chaos clock-skew offset — skew-vulnerable BY
+        DESIGN so the clock-skew fault visibly lands in the stats clock,
+        proving deadlines (which ride ``time.monotonic`` directly) never
+        consult it.
+        """
+        return time.perf_counter() + self._clock_skew_s
+
+    def _submit_common(self, req: "Request") -> bool:
+        """Arrival stamping + deadline default + load shedding.
+
+        Returns False (and records the drop) when the bounded queue is
+        full; the caller must not enqueue in that case.
+        """
+        if req.arrival_s is None:
+            req.arrival_s = self._now()
+        if req.arrival_mono is None:
+            req.arrival_mono = time.monotonic()
+        res = self.resilience
+        if res is not None:
+            if req.deadline_s is None:
+                req.deadline_s = res.default_deadline_s
+            if res.queue_cap is not None and len(self.queue) >= res.queue_cap:
+                self._drop(req, "shed-queue-full")
+                return False
+        return True
+
+    def _drop(self, req: "Request", reason: str, slot=None) -> None:
+        """Record a shed/expired request — reported, never silent."""
+        req.dropped = True
+        req.drop_reason = reason
+        self.dropped.append(req)
+        if obs.enabled():
+            kw = {} if slot is None else {"slot": int(slot)}
+            obs.instant("serve.request.dropped", rid=req.rid, reason=reason,
+                        engine=self._obs_engine, **kw)
+            obs.counter("repro_serve_dropped_total", reason=reason,
+                        engine=self._obs_engine).inc()
+
+    def _deadline_expired(self, req: "Request", now_mono: float) -> bool:
+        return (req.deadline_s is not None
+                and req.arrival_mono is not None
+                and now_mono - req.arrival_mono > req.deadline_s)
+
+    def _expire_queue(self) -> None:
+        """Drop queued requests whose deadline passed (before admission —
+        prefilling a request that can no longer finish in time is the
+        worst way to spend a dispatch)."""
+        if self.resilience is None or not self.queue:
+            return
+        now_mono = time.monotonic()
+        keep: deque = deque()
+        for r in self.queue:
+            if self._deadline_expired(r, now_mono):
+                self._drop(r, "deadline")
+            else:
+                keep.append(r)
+        self.queue = keep
+
+    def _retry(self, site: str, fn):
+        """Run ``fn`` under the transient-retry policy (fail fast if none).
+
+        Only the configured transient types (chaos.InjectedFault plus
+        ``ResilienceConfig.transient``) are retried; anything else — and
+        transient faults past the restart budget — propagates.
+        """
+        res = self.resilience
+        if res is None or res.retry is None:
+            return fn()
+        policy = res.retry
+        transient = res.transient_types()
+        failures = 0
+        while True:
+            try:
+                out = fn()
+            except transient as e:
+                delay = policy.next_delay()
+                if delay is None:
+                    raise
+                failures += 1
+                if obs.enabled():
+                    obs.instant("resilience.retry", site=site,
+                                engine=self._obs_engine, delay_s=delay,
+                                error=type(e).__name__)
+                    obs.counter("repro_serve_retries_total", site=site,
+                                engine=self._obs_engine).inc()
+                res.retry_sleep(delay)
+            else:
+                policy.record_success()
+                if failures and obs.enabled():
+                    obs.counter("repro_serve_recovered_total", site=site,
+                                engine=self._obs_engine).inc()
+                return out
+
+    def _verify_integrity(self) -> None:
+        """Checksum the serving payloads; heal exact bytes on mismatch."""
+        res = self.resilience
+        if self._guard is None or self._tick % res.integrity_every != 0:
+            return
+        corrupted = self._guard.verify(self.params)
+        if not corrupted:
+            return
+        t0 = time.perf_counter()
+        self.params = self._guard.heal(self.params, corrupted)
+        self._fmt_bytes = None      # new tree object (bytes unchanged)
+        t1 = time.perf_counter()
+        if obs.enabled():
+            obs.complete("resilience.heal", t0, t1, engine=self._obs_engine,
+                         paths=list(corrupted))
+            obs.counter("repro_serve_integrity_corrupt_total",
+                        engine=self._obs_engine).inc(len(corrupted))
+            obs.counter("repro_serve_integrity_healed_total",
+                        engine=self._obs_engine).inc(len(corrupted))
+
+    def _maybe_degrade(self) -> None:
+        """Watermark ladder walk: sustained overload → one rung down,
+        sustained calm → one rung up (never past either end)."""
+        res = self.resilience
+        pol = res.degrade if res is not None else None
+        if pol is None:
+            return
+        depth = len(self.queue)
+        if depth >= pol.high_watermark:
+            self._streak_over += 1
+            self._streak_under = 0
+        elif depth <= pol.low_watermark:
+            self._streak_under += 1
+            self._streak_over = 0
+        else:
+            self._streak_over = self._streak_under = 0
+        if self._degrade_cooldown > 0:
+            self._degrade_cooldown -= 1
+            return
+        if self._streak_over >= pol.streak and self._rung < len(pol.ladder) - 1:
+            self._set_rung(self._rung + 1, "down", depth)
+        elif self._streak_under >= pol.streak and self._rung > 0:
+            self._set_rung(self._rung - 1, "up", depth)
+
+    def _set_rung(self, rung: int, direction: str, depth: int) -> None:
+        """Hot-swap the param tree to ladder rung ``rung`` (step boundary:
+        the KV cache is weight-format-independent, in-flight slots keep
+        decoding)."""
+        pol = self.resilience.degrade
+        name, tree = pol.ladder[rung]
+        self._rung = rung
+        self.params = tree
+        self._fmt_bytes = None
+        self.weight_bytes, self.weight_bytes_bf16 = qweight_bytes(tree)
+        self.weight_formats = leaf_format_histogram(tree)
+        if self._guard is not None:
+            self._guard = PayloadGuard(tree)
+        self._degrade_cooldown = pol.cooldown_steps
+        self._streak_over = self._streak_under = 0
+        self.rung_history.append((self._tick, name, direction))
+        if obs.enabled():
+            obs.instant("resilience.degrade", engine=self._obs_engine,
+                        rung=name, direction=direction, queue_depth=depth)
+            obs.counter("repro_serve_degrade_total", engine=self._obs_engine,
+                        direction=direction).inc()
+
+    def _observe_step_time(self, dt: float) -> None:
+        if self._detector is not None and self._detector.observe(dt):
+            self.slow_steps += 1
+            if obs.enabled():
+                obs.instant("resilience.slow_step", engine=self._obs_engine,
+                            step_s=dt)
+                obs.counter("repro_serve_slow_steps_total",
+                            engine=self._obs_engine).inc()
+
+    # -- observability (DESIGN.md §11) --------------------------------------
 
     def _obs_arrival(self, req: "Request") -> None:
         if obs.enabled():
@@ -216,7 +449,7 @@ class _ObsHooks:
                           engine=self._obs_engine).observe(req.tpot_s)
 
 
-class ServeEngine(_ObsHooks):
+class ServeEngine(_EngineBase):
     """Static-batching rounds — the reference scheduler (DESIGN.md §6)."""
 
     _obs_engine = "static"
@@ -225,7 +458,8 @@ class ServeEngine(_ObsHooks):
                  max_len: int = 256, cache_dtype=jnp.float32,
                  decode_fn: Optional[Callable] = None,
                  prefill_chunk: Optional[int] = None,
-                 decode_chunk_fn: Optional[Callable] = None):
+                 decode_chunk_fn: Optional[Callable] = None,
+                 resilience: Optional[ResilienceConfig] = None):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
@@ -234,21 +468,23 @@ class ServeEngine(_ObsHooks):
         self.prefill_chunk = prefill_chunk
         self.queue: deque[Request] = deque()
         self.round_stats: List[RoundStats] = []
+        self._init_resilience(resilience)   # may swap params to rung 0
         # mixed-rate serving visibility (DESIGN.md §10): realized weight
         # HBM bytes vs bf16 and the per-leaf format mix of this engine
-        self.weight_bytes, self.weight_bytes_bf16 = qweight_bytes(params)
-        self.weight_formats = leaf_format_histogram(params)
+        self.weight_bytes, self.weight_bytes_bf16 = qweight_bytes(self.params)
+        self.weight_formats = leaf_format_histogram(self.params)
         self._decode = decode_fn or jax.jit(
             lambda params, cache, tok: decode_step(cfg, params, cache, tok))
         self._decode_chunk = decode_chunk_fn or jax.jit(
             lambda params, cache, toks: decode_chunk(cfg, params, cache,
                                                      toks))
 
-    def submit(self, req: Request) -> None:
-        if req.arrival_s is None:
-            req.arrival_s = time.perf_counter()
+    def submit(self, req: Request) -> bool:
+        if not self._submit_common(req):
+            return False
         self.queue.append(req)
         self._obs_arrival(req)
+        return True
 
     def _admit(self) -> List[Request]:
         """Pop up to n_slots queued requests sharing the head's prompt len."""
@@ -272,6 +508,16 @@ class ServeEngine(_ObsHooks):
 
     def run_round(self) -> List[Request]:
         """One static-batching round; returns the finished requests."""
+        self._tick += 1
+        if chaos.enabled():
+            # the one static-engine hook site; raising faults are retried
+            # (nothing has been admitted yet, so a retry is trivially safe)
+            self._retry("serve.round",
+                        lambda: chaos.fire("serve.round", engine=self))
+        if self.resilience is not None:
+            self._verify_integrity()
+            self._expire_queue()
+            self._maybe_degrade()
         batch = self._admit()
         if not batch:
             return []
@@ -282,10 +528,10 @@ class ServeEngine(_ObsHooks):
         cache = init_cache(self.cfg, b, self.max_len, self.cache_dtype)
 
         prompts = np.stack([r.prompt for r in batch]).astype(np.int32)
-        t0 = time.perf_counter()
+        t0 = self._now()
         logits, cache, prefill_calls = self._prefill(cache, prompts)
         jax.block_until_ready(logits)
-        t1 = time.perf_counter()   # BEFORE the host argmax transfer: the
+        t1 = self._now()           # BEFORE the host argmax transfer: the
         # transfer + argmax consume the first generated token, so they are
         # decode-side work, not prompt work.
         last = np.argmax(np.asarray(logits), axis=-1).astype(np.int32)
@@ -297,7 +543,7 @@ class ServeEngine(_ObsHooks):
         # whose logits nobody consumes.
         decode_steps = 0
         while True:
-            t_tok = time.perf_counter()
+            t_tok = self._now()
             for i, r in enumerate(batch):
                 if len(r.out_tokens) < r.max_new_tokens:
                     r.out_tokens.append(int(last[i]))
@@ -312,7 +558,7 @@ class ServeEngine(_ObsHooks):
             logits, cache = self._decode(self.params, cache,
                                          jnp.asarray(last[:, None]))
             last = np.argmax(np.asarray(logits), axis=-1).astype(np.int32)
-        t2 = time.perf_counter()
+        t2 = self._now()
         st = RoundStats(
             batch=b, prompt_len=plen, prefill_calls=prefill_calls,
             prefill_s=t1 - t0, decode_calls=decode_steps, decode_s=t2 - t1,
@@ -339,6 +585,7 @@ class ServeEngine(_ObsHooks):
                                   st.prefill_calls + st.decode_calls)
         for r in batch:
             r.done = True
+        self._observe_step_time(t2 - t0)
         return batch
 
     def run_until_done(self, max_rounds: int = 1000) -> List[Request]:
@@ -350,7 +597,7 @@ class ServeEngine(_ObsHooks):
         return done
 
 
-class ContinuousEngine(_ObsHooks):
+class ContinuousEngine(_EngineBase):
     """Continuous-batching scheduler: per-slot decode streams with
     in-flight admission and eviction (DESIGN.md §9).
 
@@ -378,7 +625,8 @@ class ContinuousEngine(_ObsHooks):
                  decode_fn: Optional[Callable] = None,
                  prefill_chunk: Optional[int] = None,
                  decode_chunk_fn: Optional[Callable] = None,
-                 reset_on_evict: bool = False):
+                 reset_on_evict: bool = False,
+                 resilience: Optional[ResilienceConfig] = None):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
@@ -389,8 +637,9 @@ class ContinuousEngine(_ObsHooks):
         self.queue: deque[Request] = deque()
         self.step_stats: List[StepStats] = []
         self.finished: List[Request] = []
-        self.weight_bytes, self.weight_bytes_bf16 = qweight_bytes(params)
-        self.weight_formats = leaf_format_histogram(params)
+        self._init_resilience(resilience)   # may swap params to rung 0
+        self.weight_bytes, self.weight_bytes_bf16 = qweight_bytes(self.params)
+        self.weight_formats = leaf_format_histogram(self.params)
         self._decode = decode_fn or jax.jit(
             lambda params, cache, tok: decode_step(cfg, params, cache, tok))
         self._decode_chunk = decode_chunk_fn or jax.jit(
@@ -412,13 +661,14 @@ class ContinuousEngine(_ObsHooks):
 
     # -- scheduler ----------------------------------------------------------
 
-    def submit(self, req: Request) -> None:
-        if req.arrival_s is None:
-            req.arrival_s = time.perf_counter()
+    def submit(self, req: Request) -> bool:
         assert len(req.prompt) + req.max_new_tokens <= self.max_len, \
             f"request {req.rid} exceeds cache length"
+        if not self._submit_common(req):
+            return False
         self.queue.append(req)
         self._obs_arrival(req)
+        return True
 
     @property
     def active_slots(self) -> int:
@@ -441,7 +691,7 @@ class ContinuousEngine(_ObsHooks):
         # prefill_s bills ONLY the prefill device work (same contract as
         # RoundStats.prefill_s): each timed region ends at logits-ready,
         # before the host argmax transfer / graft / bookkeeping
-        t0 = time.perf_counter()
+        t0 = self._now()
         sub = init_cache(self.cfg, g, self.max_len, self.cache_dtype)
         toks = np.stack([np.asarray(r.prompt[:common], np.int32)
                          for r in reqs])
@@ -449,7 +699,7 @@ class ContinuousEngine(_ObsHooks):
             self._decode, self._decode_chunk, self.params, sub, toks,
             self.prefill_chunk)
         jax.block_until_ready(logits)
-        t1 = time.perf_counter()
+        t1 = self._now()
         self.prefill_s += t1 - t0
         obs.complete("serve.prefill", t0, t1, engine="continuous",
                      slots=[s for s, _ in pairs], calls=calls,
@@ -464,12 +714,12 @@ class ContinuousEngine(_ObsHooks):
                 log_i = logits[i:i + 1]
             tail = np.asarray(req.prompt[common:], np.int32)
             if tail.size:
-                t_tail = time.perf_counter()
+                t_tail = self._now()
                 log_i, sub_i, c_tail = _run_prefill(
                     self._decode, self._decode_chunk, self.params, sub_i,
                     tail[None, :], self.prefill_chunk)
                 jax.block_until_ready(log_i)
-                t_tail_end = time.perf_counter()
+                t_tail_end = self._now()
                 self.prefill_s += t_tail_end - t_tail
                 obs.complete("serve.prefill", t_tail, t_tail_end,
                              engine="continuous", slot=slot, rid=req.rid,
@@ -478,7 +728,7 @@ class ContinuousEngine(_ObsHooks):
             first = int(np.argmax(np.asarray(log_i)[0]))
             self.cache = self._write_slot(self.cache, sub_i,
                                           jnp.asarray(slot, jnp.int32))
-            t_tok = time.perf_counter()
+            t_tok = self._now()
             req.first_token_s = t_tok
             req.out_tokens.append(first)
             self.slots[slot] = req
@@ -520,13 +770,62 @@ class ContinuousEngine(_ObsHooks):
             obs.counter("repro_serve_evicted_total").inc()
             self._obs_request_done(req, slot=slot)
 
+    def _expire_slots(self) -> None:
+        """Cancel in-flight requests whose deadline passed; free the slot.
+
+        The freed row's stale cache state is handled exactly like an
+        eviction's (overwritten by the next graft; optionally zeroed now
+        under ``reset_on_evict``).
+        """
+        now_mono = time.monotonic()
+        for i, r in enumerate(self.slots):
+            if r is not None and self._deadline_expired(r, now_mono):
+                self.slots[i] = None
+                self._last[i] = 0
+                if self.reset_on_evict:
+                    self.cache = self._reset_slot(self.cache,
+                                                  jnp.asarray(i, jnp.int32))
+                self._drop(r, "deadline", slot=i)
+
+    def _admit_burst(self, pairs, finished: List[Request]) -> None:
+        """Chaos-hooked admission entry: the admission-failure fault fires
+        here, BEFORE any prefill/graft state mutation, so a retry replays
+        the identical burst."""
+        if chaos.enabled():
+            chaos.fire("serve.admit", engine=self)
+        self._admit_many(pairs, finished)
+
+    def _decode_dispatch(self):
+        """Chaos-hooked decode entry (device-loss / slow-step site).
+
+        Pure w.r.t. engine state: reads params/cache/_last, returns
+        (logits, new_cache) — the caller commits the cache only on
+        success, so a retried dispatch recomputes from identical inputs.
+        """
+        if chaos.enabled():
+            chaos.fire("serve.decode", engine=self)
+        return self._decode(self.params, self.cache,
+                            jnp.asarray(self._last[:, None]))
+
     def step(self) -> List[Request]:
         """One scheduler iteration: admit → lockstep decode → evict.
 
-        Returns the requests that finished during this step.
+        Returns the requests that finished during this step.  With
+        resilience configured the step additionally: fires the serve.step
+        chaos hook, heals corrupted payloads, expires deadlined requests
+        (queued and in-flight), walks the degradation ladder, retries
+        transient admission/decode faults, and snapshots periodically.
         """
         finished: List[Request] = []
-        t0 = time.perf_counter()
+        self._tick += 1
+        t0 = self._now()
+        if chaos.enabled():
+            chaos.fire("serve.step", engine=self)
+        if self.resilience is not None:
+            self._verify_integrity()
+            self._expire_queue()
+            self._expire_slots()
+            self._maybe_degrade()
         pairs = []
         while self.queue and None in self.slots:
             slot = self.slots.index(None)
@@ -535,15 +834,31 @@ class ContinuousEngine(_ObsHooks):
             pairs.append((slot, req))
         admitted = len(pairs)
         if pairs:
-            self._admit_many(pairs, finished)
+            try:
+                self._retry("serve.admit",
+                            lambda: self._admit_burst(pairs, finished))
+            except BaseException:
+                # retry budget exhausted (or non-transient): un-reserve the
+                # untouched requests and put them back at the FRONT of the
+                # queue in arrival order, so nothing is silently lost.
+                # (injection fires before _admit_many mutates anything, so
+                # an injected-fault unwind always finds them untouched)
+                for slot, req in pairs:
+                    if self.slots[slot] is req and not req.out_tokens:
+                        self.slots[slot] = None
+                for slot, req in reversed(pairs):
+                    if not req.out_tokens and not req.dropped:
+                        self.queue.appendleft(req)
+                raise
         active = [i for i, r in enumerate(self.slots) if r is not None]
         decoded = 0
         if active:
-            td = time.perf_counter()
-            logits, self.cache = self._decode(
-                self.params, self.cache, jnp.asarray(self._last[:, None]))
+            td = self._now()
+            logits, new_cache = self._retry("serve.decode",
+                                            self._decode_dispatch)
+            self.cache = new_cache
             last = np.argmax(np.asarray(logits), axis=-1).astype(np.int32)
-            t_tok = time.perf_counter()
+            t_tok = self._now()
             self.decode_calls += 1
             self.decode_s += t_tok - td
             obs.complete("serve.decode", td, t_tok, engine="continuous",
@@ -555,7 +870,7 @@ class ContinuousEngine(_ObsHooks):
                 decoded += 1
                 if len(r.out_tokens) >= r.max_new_tokens:
                     self._finish(i, r, t_tok, finished)
-        t_end = time.perf_counter()
+        t_end = self._now()
         self.step_stats.append(StepStats(
             active=len(active), admitted=admitted, finished=len(finished),
             new_tokens=admitted + decoded,
@@ -572,12 +887,143 @@ class ContinuousEngine(_ObsHooks):
                       engine="continuous").set(len(self.queue))
             if active:
                 record_weight_traffic(self._format_bytes(), 1)
+        self._observe_step_time(t_end - t0)
+        res = self.resilience
+        if (res is not None and res.snapshot_every and res.snapshot_dir
+                and self._tick % res.snapshot_every == 0):
+            self.snapshot(res.snapshot_dir)
         return finished
 
+    # -- snapshot / resume (DESIGN.md §12) ----------------------------------
+
+    @staticmethod
+    def _req_record(r: Request) -> dict:
+        """JSON-portable request record for the snapshot manifest."""
+        return {"rid": r.rid,
+                "prompt": np.asarray(r.prompt).tolist(),
+                "max_new_tokens": r.max_new_tokens,
+                "out_tokens": list(r.out_tokens),
+                "deadline_s": r.deadline_s,
+                "arrival_s": r.arrival_s,
+                "first_token_s": r.first_token_s}
+
+    def snapshot(self, ckpt_dir: str, *, keep: Optional[int] = None) -> str:
+        """Write a crash-consistent engine snapshot via ``dist.checkpoint``.
+
+        Device state (slot cache + next-token vector) goes in the
+        checkpoint payload; host scheduler state (slot/queue request
+        records, tick, rung) rides the manifest's ``extra_meta`` JSON.
+        The write is atomic (rename-committed step dir), so a kill at any
+        moment leaves the last committed snapshot restorable —
+        :meth:`resume` rebuilds an engine whose subsequent token streams
+        are bit-identical to the uninterrupted run's.
+        """
+        from repro.dist.checkpoint import save_checkpoint
+        res = self.resilience
+        if keep is None:
+            keep = res.snapshot_keep if res is not None else 3
+        state = {"cache": self.cache, "last": jnp.asarray(self._last)}
+        meta = {
+            "engine": {"n_slots": self.n_slots, "max_len": self.max_len,
+                       "prefill_chunk": self.prefill_chunk,
+                       "reset_on_evict": self.reset_on_evict,
+                       "tick": self._tick, "rung": self._rung},
+            "slots": [None if r is None else self._req_record(r)
+                      for r in self.slots],
+            "queue": [self._req_record(r) for r in self.queue],
+        }
+        t0 = time.perf_counter()
+        path = save_checkpoint(ckpt_dir, self._tick, state, keep=keep,
+                               extra_meta=meta)
+        t1 = time.perf_counter()
+        if obs.enabled():
+            obs.complete("resilience.snapshot", t0, t1, engine="continuous",
+                         step=self._tick, path=str(path))
+            obs.counter("repro_serve_snapshots_total",
+                        engine="continuous").inc()
+        return str(path)
+
+    @classmethod
+    def resume(cls, ckpt_dir: str, cfg: ArchConfig, params, *,
+               step: Optional[int] = None, **kwargs) -> "ContinuousEngine":
+        """Rebuild an engine from the latest (or ``step``-th) snapshot.
+
+        ``params`` must be the same serving tree the snapshotting engine
+        held (weights are NOT stored in the snapshot — they are the
+        deployment artifact, reloaded independently).  Scheduler state —
+        slot assignments, partial token streams, queue order, tick — and
+        the device cache come back exactly; deadline clocks restart at
+        resume (``time.monotonic`` is process-local, and a revived
+        request should not be instantly expired for time the engine
+        spent dead).
+        """
+        from repro.dist.checkpoint import read_manifest, restore_checkpoint
+        manifest = read_manifest(ckpt_dir, step=step)
+        meta = manifest["meta"]
+        em = meta["engine"]
+        kwargs.setdefault("n_slots", em["n_slots"])
+        kwargs.setdefault("max_len", em["max_len"])
+        kwargs.setdefault("prefill_chunk", em.get("prefill_chunk"))
+        kwargs.setdefault("reset_on_evict", em.get("reset_on_evict", False))
+        eng = cls(cfg, params, **kwargs)
+        if eng.n_slots != em["n_slots"] or eng.max_len != em["max_len"]:
+            raise ValueError(
+                f"snapshot geometry (n_slots={em['n_slots']}, "
+                f"max_len={em['max_len']}) does not match the engine "
+                f"(n_slots={eng.n_slots}, max_len={eng.max_len})")
+        # host-array template: restore_checkpoint places leaves with the
+        # template's sharding, and the fresh engine's cache is committed
+        # to the default device — resuming under a multi-device mesh
+        # would pin the cache there and conflict with mesh-committed
+        # dispatch outputs.  Numpy leaves make the restored cache
+        # UNCOMMITTED (like a fresh init_cache), so the first dispatch
+        # is free to move it to the params' layout.
+        template = {"cache": jax.tree.map(np.asarray, eng.cache),
+                    "last": np.asarray(eng._last)}
+        state, _ = restore_checkpoint(ckpt_dir, template,
+                                      step=manifest["step"])
+        eng.cache = state["cache"]
+        eng._last = np.asarray(state["last"]).astype(np.int32)
+
+        now_mono = time.monotonic()
+
+        def revive(rec: dict) -> Request:
+            req = Request(rid=rec["rid"],
+                          prompt=np.asarray(rec["prompt"], np.int32),
+                          max_new_tokens=rec["max_new_tokens"],
+                          out_tokens=list(rec["out_tokens"]),
+                          deadline_s=rec.get("deadline_s"))
+            req.arrival_s = rec.get("arrival_s")
+            req.first_token_s = rec.get("first_token_s")
+            req.arrival_mono = now_mono
+            return req
+
+        eng.slots = [None if rec is None else revive(rec)
+                     for rec in meta["slots"]]
+        eng.queue = deque(revive(rec) for rec in meta["queue"])
+        eng._tick = em["tick"]
+        rung = em.get("rung", 0)
+        if rung and eng.resilience is not None \
+                and eng.resilience.degrade is not None:
+            eng._set_rung(rung, "resume", len(eng.queue))
+        if obs.enabled():
+            obs.instant("resilience.resume", engine="continuous",
+                        step=em["tick"], slots=sum(
+                            1 for r in eng.slots if r is not None),
+                        queued=len(eng.queue))
+        return eng
+
     def run_until_done(self, max_steps: int = 100_000) -> List[Request]:
+        """Step until idle; raise :class:`EngineStalledError` (naming the
+        stuck slots and queue depth) if ``max_steps`` is exhausted with
+        work still pending."""
         done: List[Request] = []
         for _ in range(max_steps):
             if not self.queue and self.active_slots == 0:
-                break
+                return done
             done.extend(self.step())
+        if self.queue or self.active_slots:
+            stuck = [(i, r.rid, len(r.out_tokens), r.max_new_tokens)
+                     for i, r in enumerate(self.slots) if r is not None]
+            raise EngineStalledError(max_steps, stuck, len(self.queue))
         return done

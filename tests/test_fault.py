@@ -58,11 +58,74 @@ def test_straggler_detection():
     assert mon.stragglers() == ["c"]
 
 
+def test_straggler_cold_start_min_observations():
+    """A host one sample into its window must not be flagged NOR inflate
+    the median everyone else is compared against."""
+    mon = StragglerMonitor(threshold=1.5, min_observations=3)
+    for _ in range(10):
+        for h, t in (("a", 1.0), ("b", 1.05)):
+            mon.observe(h, t)
+    mon.observe("fresh", 30.0)          # restart: one compile-time sample
+    assert mon.stragglers() == []       # not flagged on one observation
+    assert "fresh" not in mon.means(min_count=3)
+    assert mon.means()["fresh"] == 30.0  # but visible to raw dashboards
+    # once warm (and genuinely slow) it IS flagged
+    for _ in range(5):
+        mon.observe("fresh", 30.0)
+    assert mon.stragglers() == ["fresh"]
+
+
+def test_straggler_skip_first_discards_compile_sample():
+    """skip_first drops each host's first N observations outright, so the
+    post-restart jit compile never enters the window at all."""
+    mon = StragglerMonitor(threshold=1.5, min_observations=2, skip_first=1)
+    mon.observe("a", 500.0)             # compile — discarded
+    mon.observe("b", 480.0)             # compile — discarded
+    for _ in range(6):
+        mon.observe("a", 1.0)
+        mon.observe("b", 1.05)
+    assert mon.stragglers() == []
+    assert abs(mon.means()["a"] - 1.0) < 1e-9   # no 500 s residue in mean
+    assert mon._skipped == {"a": 1, "b": 1}
+
+
 def test_restart_policy_budget():
     p = RestartPolicy(max_restarts=3, backoff_base_s=1.0)
     delays = [p.next_delay() for _ in range(4)]
     assert delays[:3] == [1.0, 2.0, 4.0]
     assert delays[3] is None
+
+
+def test_restart_policy_success_streak_refunds_budget():
+    p = RestartPolicy(max_restarts=2, backoff_base_s=1.0, reset_after=3)
+    assert p.next_delay() == 1.0
+    assert p.next_delay() == 2.0
+    assert p.restarts_used == 2
+    p.record_success()
+    p.record_success()
+    assert p.restarts_used == 2         # streak of 2 < reset_after
+    p.record_success()                  # third in a row: full refund
+    assert p.restarts_used == 0
+    assert p.next_delay() == 1.0        # backoff back at base
+    p.record_success()
+    p.record_success()
+    assert p.next_delay() == 2.0        # a failure resets the streak...
+    p.record_success()                  # ...so these two successes are a
+    p.record_success()                  # fresh streak, not a continuation
+    assert p.restarts_used == 2
+    p.record_success()
+    assert p.restarts_used == 0
+
+
+def test_restart_policy_no_reset_by_default():
+    """Without reset_after, record_success is a no-op — the lifetime
+    budget semantics the pinned delays above rely on."""
+    p = RestartPolicy(max_restarts=1, backoff_base_s=1.0)
+    assert p.next_delay() == 1.0
+    for _ in range(100):
+        p.record_success()
+    assert p.restarts_used == 1
+    assert p.next_delay() is None
 
 
 def test_run_with_restarts_recovers(tmp_path):
@@ -82,6 +145,54 @@ def test_run_with_restarts_recovers(tmp_path):
         save_every=5, sleep_fn=lambda s: None)
     assert step == 20
     assert float(final["x"]) == 20.0  # exactly-once semantics via ckpt
+
+
+def test_run_with_restarts_backoff_resets_after_success_streak(tmp_path):
+    """Regression: a long run with widely-spaced transient failures used to
+    exhaust the lifetime restart budget and escalate backoff forever.
+    With ``reset_after`` the success streak between failures refunds the
+    budget, so every restart waits the BASE delay (asserted via a mocked
+    sleep clock) and the run survives more failures than max_restarts."""
+    crash_at = {4, 12, 20, 28}          # 4 spaced one-shot failures
+    slept = []
+
+    def flaky_step(step, state):
+        if step in crash_at:
+            crash_at.remove(step)       # one-shot: succeeds on replay
+            raise RuntimeError("transient blip")
+        return {"x": state["x"] + 1}
+
+    final, step = run_with_restarts(
+        flaky_step, {"x": jnp.zeros(())}, n_steps=32,
+        ckpt_dir=str(tmp_path), save_every=2,
+        policy=RestartPolicy(max_restarts=2, backoff_base_s=1.0,
+                             reset_after=3),
+        sleep_fn=slept.append)
+    assert step == 32 and float(final["x"]) == 32.0
+    # 4 failures survived on a budget of 2, each at base backoff: the
+    # streaks between crashes (>= 3 successful steps) refunded the budget
+    assert slept == [1.0, 1.0, 1.0, 1.0]
+
+
+def test_run_with_restarts_without_reset_escalates_and_dies(tmp_path):
+    """Counterpart: the same failure pattern WITHOUT reset_after burns the
+    lifetime budget — delays escalate and the third crash is fatal."""
+    crash_at = {4, 12, 20, 28}
+    slept = []
+
+    def flaky_step(step, state):
+        if step in crash_at:
+            crash_at.remove(step)
+            raise RuntimeError("transient blip")
+        return {"x": state["x"] + 1}
+
+    with pytest.raises(RuntimeError, match="transient blip"):
+        run_with_restarts(flaky_step, {"x": jnp.zeros(())}, n_steps=32,
+                          ckpt_dir=str(tmp_path), save_every=2,
+                          policy=RestartPolicy(max_restarts=2,
+                                               backoff_base_s=1.0),
+                          sleep_fn=slept.append)
+    assert slept == [1.0, 2.0]          # escalating, then budget exhausted
 
 
 def test_run_with_restarts_exhausts_budget(tmp_path):

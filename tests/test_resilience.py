@@ -1,0 +1,393 @@
+"""Serving-resilience layer unit + integration tests (DESIGN.md §12).
+
+Covers the pieces individually (stall diagnostics, slow-step detection,
+payload integrity heal, degradation policy validation) and wired into the
+continuous engine (deadline expiry for queued AND in-flight requests,
+bounded-queue shedding, transient retry, overload degradation down the
+bit ladder, snapshot → kill → resume bit-identity).
+"""
+import functools
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.dist.fault import RestartPolicy
+from repro.models import decode_chunk, decode_step, init_params, split_tree
+from repro.quant import quantize_params_tree
+from repro.serve import (ContinuousEngine, DegradePolicy, EngineStalledError,
+                         PayloadGuard, Request, ResilienceConfig, ServeEngine,
+                         SlowStepDetector, build_bit_ladder)
+
+CFG = ArchConfig(name="resil-t", family="dense", n_layers=2, d_model=32,
+                 n_heads=2, n_kv=2, d_ff=64, vocab=64, head_dim=16)
+
+
+@functools.lru_cache(maxsize=None)
+def _fns():
+    return (jax.jit(lambda p, c, t: decode_step(CFG, p, c, t)),
+            jax.jit(lambda p, c, tk: decode_chunk(CFG, p, c, tk)))
+
+
+@functools.lru_cache(maxsize=None)
+def _base():
+    tree, _ = split_tree(init_params(CFG, jax.random.PRNGKey(0)))
+    return tree
+
+
+def _qtree():
+    return quantize_params_tree(_base(), nbits=4, packed=True, min_dim=16)
+
+
+def _req(rid, seed=None, n_new=4, **kw):
+    rng = np.random.default_rng(seed if seed is not None else rid)
+    return Request(rid=rid, prompt=rng.integers(0, CFG.vocab, 5,
+                                                dtype=np.int64).astype(np.int32),
+                   max_new_tokens=n_new, **kw)
+
+
+def _engine(params=None, resilience=None, **kw):
+    decode_fn, chunk_fn = _fns()
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", 32)
+    return ContinuousEngine(CFG, params if params is not None else _qtree(),
+                            prefill_chunk=3, decode_fn=decode_fn,
+                            decode_chunk_fn=chunk_fn, resilience=resilience,
+                            **kw)
+
+
+def _streams(done):
+    return {r.rid: tuple(r.out_tokens) for r in done}
+
+
+# -- EngineStalledError (satellite 2) ---------------------------------------
+
+
+def test_run_until_done_raises_descriptive_stall():
+    eng = _engine()
+    eng.submit(_req(7, n_new=6))
+    with pytest.raises(EngineStalledError) as e:
+        eng.run_until_done(max_steps=2)
+    err = e.value
+    assert err.max_steps == 2
+    assert err.queue_depth == 0
+    assert len(err.stuck) == 1
+    slot, rid, emitted, budget = err.stuck[0]
+    assert rid == 7 and budget == 6 and 0 < emitted < budget
+    msg = str(err)
+    assert "rid=7" in msg and "2 steps" in msg and f"{emitted}/6" in msg
+
+
+def test_run_until_done_reports_queued_backlog():
+    eng = _engine(n_slots=1)
+    for i in range(3):
+        eng.submit(_req(i))
+    with pytest.raises(EngineStalledError) as e:
+        eng.run_until_done(max_steps=1)
+    assert e.value.queue_depth >= 1
+    assert "still queued" in str(e.value)
+
+
+# -- SlowStepDetector (tentpole unit) ---------------------------------------
+
+
+def test_slow_step_detector_warmup_and_flag():
+    det = SlowStepDetector(threshold=4.0, window=8, warmup=3)
+    # warmup: even a huge first step cannot flag (no baseline yet)
+    assert det.observe(100.0) is False
+    for _ in range(3):
+        assert det.observe(1.0) is False
+    assert det.observe(1.5) is False        # under 4x the median
+    assert det.observe(50.0) is True        # way over
+    # the window evicts the oldest samples, so the baseline tracks recent
+    for _ in range(8):
+        det.observe(50.0)
+    assert det.observe(50.0) is False       # 50 is the new normal
+
+
+# -- PayloadGuard (tentpole unit) -------------------------------------------
+
+
+def _tamper(tree, path):
+    """Flip one byte of the payload at ``path``; returns the new tree."""
+    from repro.chaos.plan import _replace_codes
+    from repro.kernels.dequant.ops import _walk_qweights
+    leaves = dict(_walk_qweights(tree))
+    codes = np.array(leaves[path]["codes"])
+    flat = codes.reshape(-1).view(np.uint8)
+    flat[0] ^= 0xFF
+    return _replace_codes(tree, path, jnp.asarray(codes))
+
+
+def test_payload_guard_clean_tree_verifies_empty():
+    tree = _qtree()
+    guard = PayloadGuard(tree)
+    assert guard.checksums            # the tiny config must have payloads
+    assert guard.verify(tree) == []
+
+
+def test_payload_guard_detects_and_heals_exactly():
+    tree = _qtree()
+    guard = PayloadGuard(tree)
+    path = sorted(guard.checksums)[0]
+    bad = _tamper(tree, path)
+    assert guard.verify(bad) == [path]
+    healed = guard.heal(bad, [path])
+    assert guard.verify(healed) == []
+    from repro.kernels.dequant.ops import _walk_qweights
+    got = np.asarray(dict(_walk_qweights(healed))[path]["codes"])
+    assert np.array_equal(got, guard._pristine[path])
+
+
+def test_payload_guard_heal_unknown_path_is_schema_drift():
+    tree = _qtree()
+    guard = PayloadGuard(tree)
+    with pytest.raises(KeyError, match="schema drift"):
+        guard.heal(tree, ["no/such/leaf"])
+
+
+def test_corrupted_engine_heals_and_matches_baseline_stream():
+    baseline = _streams(_run_to_done(_engine()))
+    eng = _engine(resilience=ResilienceConfig(integrity_every=1))
+    path = sorted(eng._guard.checksums)[0]
+    eng.params = _tamper(eng.params, path)   # corrupt between steps
+    assert _streams(_run_to_done(eng)) == baseline
+
+
+def _run_to_done(eng):
+    for i in range(4):
+        eng.submit(_req(i))
+    return eng.run_until_done()
+
+
+# -- deadlines, shedding, cancellation --------------------------------------
+
+
+def test_queue_cap_sheds_and_reports():
+    eng = _engine(resilience=ResilienceConfig(queue_cap=2))
+    reqs = [_req(i) for i in range(4)]
+    accepted = [eng.submit(r) for r in reqs]
+    assert accepted == [True, True, False, False]
+    assert len(eng.queue) == 2
+    assert [r.rid for r in eng.dropped] == [2, 3]
+    assert all(r.dropped and r.drop_reason == "shed-queue-full"
+               for r in eng.dropped)
+    done = eng.run_until_done()
+    assert len(done) + len(eng.dropped) == 4    # exact accounting
+
+
+def test_expired_queued_request_dropped_before_admission():
+    eng = _engine(n_slots=1, resilience=ResilienceConfig())
+    eng.submit(_req(0))
+    late = _req(1, deadline_s=1e-4)
+    eng.submit(late)
+    time.sleep(2e-3)
+    done = eng.run_until_done()
+    assert [r.rid for r in done] == [0]
+    assert [r.rid for r in eng.dropped] == [1]
+    assert late.drop_reason == "deadline"
+    assert late.out_tokens == []        # never admitted, never prefillled
+
+
+def test_expired_inflight_request_cancelled_and_slot_freed():
+    eng = _engine(n_slots=1, resilience=ResilienceConfig())
+    doomed = _req(0, n_new=8, deadline_s=1e-4)
+    eng.submit(doomed)
+    eng.submit(_req(1))
+    eng.step()                          # admits rid 0, emits a token
+    assert eng.slots[0] is doomed
+    time.sleep(2e-3)
+    done = eng.run_until_done()
+    assert doomed.drop_reason == "deadline"
+    assert doomed in eng.dropped
+    assert 0 < len(doomed.out_tokens) < 8   # partial stream kept, reported
+    assert [r.rid for r in done] == [1]     # the slot was reusable
+
+
+def test_deadline_default_applies_from_config():
+    eng = _engine(resilience=ResilienceConfig(default_deadline_s=9.0))
+    r = _req(0)
+    eng.submit(r)
+    assert r.deadline_s == 9.0
+    explicit = _req(1, deadline_s=5.0)
+    eng.submit(explicit)
+    assert explicit.deadline_s == 5.0   # per-request wins
+
+
+# -- transient retry ---------------------------------------------------------
+
+
+class _Flaky(RuntimeError):
+    pass
+
+
+def test_transient_retry_recovers_custom_exception_type():
+    boom = {"left": 2}
+
+    def flaky():
+        if boom["left"]:
+            boom["left"] -= 1
+            raise _Flaky("transient")
+        return "ok"
+
+    eng = _engine(resilience=ResilienceConfig(
+        retry=RestartPolicy(max_restarts=4, backoff_base_s=1e-4,
+                            backoff_max_s=1e-3),
+        retry_sleep=lambda s: None, transient=(_Flaky,)))
+    assert eng._retry("test.site", flaky) == "ok"
+    assert boom["left"] == 0
+
+
+def test_retry_does_not_mask_nontransient_errors():
+    eng = _engine(resilience=ResilienceConfig(
+        retry=RestartPolicy(max_restarts=4), retry_sleep=lambda s: None))
+
+    def broken():
+        raise ValueError("a real bug")
+
+    with pytest.raises(ValueError, match="a real bug"):
+        eng._retry("test.site", broken)
+
+
+def test_retry_exhaustion_propagates_transient():
+    eng = _engine(resilience=ResilienceConfig(
+        retry=RestartPolicy(max_restarts=1, backoff_base_s=1e-4),
+        retry_sleep=lambda s: None, transient=(_Flaky,)))
+
+    def always():
+        raise _Flaky("forever")
+
+    with pytest.raises(_Flaky):
+        eng._retry("test.site", always)
+
+
+# -- overload degradation ----------------------------------------------------
+
+
+def test_degrade_policy_validates():
+    with pytest.raises(ValueError, match=">= 2 rungs"):
+        DegradePolicy(ladder=[("only", object())])
+    with pytest.raises(ValueError, match="below high_watermark"):
+        DegradePolicy(ladder=[("a", 1), ("b", 2)],
+                      high_watermark=2, low_watermark=2)
+
+
+def test_build_bit_ladder_formats():
+    ladder = build_bit_ladder(_base(), rungs=(None, 3, 2), min_dim=16)
+    assert [name for name, _ in ladder] == ["native", "int3", "int2"]
+    from repro.quant import leaf_format_histogram
+    assert "packed-int3" in leaf_format_histogram(ladder[1][1])
+    assert "packed-int2" in leaf_format_histogram(ladder[2][1])
+    with pytest.raises(ValueError, match="no serving rung"):
+        build_bit_ladder(_base(), rungs=(5,))
+
+
+def test_overload_walks_down_ladder_and_recovers():
+    ladder = build_bit_ladder(_base(), rungs=(None, 3, 2), min_dim=16)
+    res = ResilienceConfig(degrade=DegradePolicy(
+        ladder=ladder, high_watermark=3, low_watermark=1, streak=1,
+        cooldown_steps=1))
+    eng = _engine(params=_base(), resilience=res, n_slots=1)
+    assert eng._rung == 0
+    for i in range(8):
+        eng.submit(_req(i, n_new=2))
+    done = eng.run_until_done()
+    downs = [h for h in eng.rung_history if h[2] == "down"]
+    ups = [h for h in eng.rung_history if h[2] == "up"]
+    assert downs, "sustained overload never degraded"
+    assert ups, "drained queue never recovered up the ladder"
+    for _ in range(8):                # idle steps let it climb fully back
+        eng.step()
+    assert eng._rung == 0                         # back at full rate
+    assert len(done) + len(eng.dropped) == 8      # nothing lost in swaps
+    assert all(len(r.out_tokens) == 2 for r in done)
+
+
+def test_ladder_rung0_replaces_constructor_params():
+    ladder = build_bit_ladder(_qtree(), rungs=(None,)) \
+        + build_bit_ladder(_base(), rungs=(2,), min_dim=16)
+    res = ResilienceConfig(degrade=DegradePolicy(
+        ladder=ladder, high_watermark=3, low_watermark=1))
+    eng = _engine(params=_base(), resilience=res)   # ctor params ignored
+    assert eng.params is ladder[0][1]
+    assert eng.rung_history[0][2] == "init"
+
+
+# -- snapshot / kill / resume (tentpole) ------------------------------------
+
+
+def test_snapshot_kill_resume_bit_identical(tmp_path):
+    params = _qtree()
+    reference = _streams(_run_to_done(_engine(params)))
+
+    ckpt = str(tmp_path / "snap")
+    res = ResilienceConfig(snapshot_dir=ckpt, snapshot_every=2)
+    eng = _engine(params, resilience=res)
+    for i in range(4):
+        eng.submit(_req(i))
+    delivered = {}
+    for _ in range(5):
+        for r in eng.step():
+            delivered[r.rid] = tuple(r.out_tokens)
+    tick_at_kill = eng._tick
+    del eng                                   # the "kill"
+
+    decode_fn, chunk_fn = _fns()
+    revived = ContinuousEngine.resume(
+        ckpt, CFG, params, decode_fn=decode_fn, decode_chunk_fn=chunk_fn,
+        prefill_chunk=3)
+    assert revived._tick <= tick_at_kill      # resumed from a committed snap
+    for r in revived.run_until_done():
+        delivered[r.rid] = tuple(r.out_tokens)
+    assert delivered == reference
+
+
+def test_resume_restores_geometry_from_manifest(tmp_path):
+    ckpt = str(tmp_path / "snap")
+    eng = _engine(n_slots=2, max_len=32)
+    eng.submit(_req(0))
+    eng.step()
+    eng.snapshot(ckpt)
+    decode_fn, chunk_fn = _fns()
+    revived = ContinuousEngine.resume(ckpt, CFG, _qtree(),
+                                      decode_fn=decode_fn,
+                                      decode_chunk_fn=chunk_fn)
+    assert revived.n_slots == 2 and revived.max_len == 32
+    assert revived.prefill_chunk == eng.prefill_chunk
+
+
+def test_snapshot_prunes_old_checkpoints(tmp_path):
+    ckpt = str(tmp_path / "snap")
+    eng = _engine(resilience=ResilienceConfig(snapshot_dir=ckpt,
+                                              snapshot_every=1,
+                                              snapshot_keep=2))
+    for i in range(4):
+        eng.submit(_req(i))
+    eng.run_until_done()
+    steps = [d for d in os.listdir(ckpt) if d.startswith("step_")]
+    assert len(steps) == 2                    # keep=2 enforced
+
+
+# -- static engine shares the resilience layer ------------------------------
+
+
+def test_static_engine_sheds_and_expires():
+    decode_fn, chunk_fn = _fns()
+    eng = ServeEngine(CFG, _qtree(), n_slots=2, max_len=32,
+                      decode_fn=decode_fn, prefill_chunk=3,
+                      decode_chunk_fn=chunk_fn,
+                      resilience=ResilienceConfig(queue_cap=3))
+    accepted = [eng.submit(_req(i)) for i in range(5)]
+    assert accepted == [True, True, True, False, False]
+    expired = _req(9, deadline_s=1e-4)
+    expired.arrival_mono = time.monotonic()
+    eng.queue.appendleft(expired)             # jump the cap, then expire
+    time.sleep(2e-3)
+    done = eng.run_until_done()
+    assert expired.drop_reason == "deadline"
+    assert sorted(r.rid for r in done) == [0, 1, 2]
+    assert len(done) + len(eng.dropped) == 6

@@ -1,0 +1,179 @@
+"""Slot-eviction hygiene fuzz (DESIGN.md §9/§12, satellite of the chaos PR).
+
+A freed slot must be indistinguishable from a fresh one: after arbitrary
+kill → admit → kill interleavings, (a) a re-used slot's token stream is
+byte-identical to the same request served on a fresh engine, and (b) with
+``reset_on_evict`` the evicted slot's cache row is byte-identical to a
+never-used row.  These are the invariants that make deadline cancellation
+(which frees slots mid-stream) and snapshot/resume safe.
+"""
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.models import (cache_reset_slot, cache_write_slot, decode_chunk,
+                          decode_step, init_cache, init_params, split_tree)
+from repro.serve import ContinuousEngine, Request, ResilienceConfig
+
+CFG = ArchConfig(name="hygiene", family="dense", n_layers=2, d_model=32,
+                 n_heads=2, n_kv=2, d_ff=64, vocab=64, head_dim=16)
+
+SEEDS = [21, 22]
+if os.environ.get("SCHED_FUZZ_SEED"):
+    SEEDS = [int(os.environ["SCHED_FUZZ_SEED"]) + 100]
+
+
+@functools.lru_cache(maxsize=None)
+def _fns():
+    return (jax.jit(lambda p, c, t: decode_step(CFG, p, c, t)),
+            jax.jit(lambda p, c, tk: decode_chunk(CFG, p, c, tk)))
+
+
+@functools.lru_cache(maxsize=None)
+def _tree():
+    base, _ = split_tree(init_params(CFG, jax.random.PRNGKey(0)))
+    return base
+
+
+def _engine(**kw):
+    decode_fn, chunk_fn = _fns()
+    kw.setdefault("n_slots", 2)
+    return ContinuousEngine(CFG, _tree(), max_len=32, prefill_chunk=3,
+                            decode_fn=decode_fn, decode_chunk_fn=chunk_fn,
+                            **kw)
+
+
+def _req(rid, rng, n_new=3):
+    plen = int(rng.integers(3, 7))
+    return Request(rid=rid, prompt=rng.integers(0, CFG.vocab,
+                                                plen).astype(np.int32),
+                   max_new_tokens=n_new)
+
+
+def _solo_stream(req):
+    """The request's stream on a fresh single-slot engine (the oracle)."""
+    eng = _engine(n_slots=1)
+    eng.submit(Request(rid=req.rid, prompt=np.array(req.prompt),
+                       max_new_tokens=req.max_new_tokens))
+    (done,) = eng.run_until_done()
+    return tuple(done.out_tokens)
+
+
+def _rows(cache, slot):
+    """All cache leaves' row ``slot`` as host arrays (pos last)."""
+    leaves = [np.asarray(x)[:, slot]
+              for x in jax.tree.leaves((cache.kv, cache.extras))]
+    leaves.append(np.asarray(cache.pos)[slot])
+    return leaves
+
+
+# -- direct cache-primitive checks ------------------------------------------
+
+
+def test_reset_slot_row_byte_identical_to_fresh():
+    fresh = init_cache(CFG, 2, 16, jnp.float32, per_slot=True)
+    sub = init_cache(CFG, 1, 16, jnp.float32)
+    toks = jnp.arange(4, dtype=jnp.int32)[None, :]
+    _, sub = decode_chunk(CFG, _tree(), sub, toks)
+    dirty = cache_write_slot(fresh, sub, 1)
+    assert any(np.any(a != b) for a, b in
+               zip(_rows(dirty, 1), _rows(fresh, 1))), "graft wrote nothing"
+    wiped = cache_reset_slot(dirty, 1)
+    for got, want in zip(_rows(wiped, 1), _rows(fresh, 1)):
+        np.testing.assert_array_equal(got, want)
+
+
+def test_reset_slot_leaves_other_slots_untouched():
+    cache = init_cache(CFG, 3, 16, jnp.float32, per_slot=True)
+    sub = init_cache(CFG, 1, 16, jnp.float32)
+    _, sub = decode_chunk(CFG, _tree(), sub,
+                          jnp.arange(5, dtype=jnp.int32)[None, :])
+    for s in range(3):
+        cache = cache_write_slot(cache, sub, s)
+    before = _rows(cache, 0), _rows(cache, 2)
+    cache = cache_reset_slot(cache, 1)
+    for got, want in zip(_rows(cache, 0), before[0]):
+        np.testing.assert_array_equal(got, want)
+    for got, want in zip(_rows(cache, 2), before[1]):
+        np.testing.assert_array_equal(got, want)
+
+
+# -- kill → admit → kill fuzz ------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("reset_on_evict", [False, True])
+def test_killed_slot_reuse_streams_exact(seed, reset_on_evict):
+    """Random kill/admit interleaving: every request that completes must
+    emit the same bytes as it would alone on a fresh engine, regardless
+    of how many corpses its slot served before it."""
+    rng = np.random.default_rng([seed, 0x51A7])
+    eng = _engine(reset_on_evict=reset_on_evict,
+                  resilience=ResilienceConfig())
+    reqs = [_req(i, rng) for i in range(10)]
+    pending = list(reqs)
+    killed = []
+    steps = 0
+    while (pending or eng.active_slots or eng.queue) and steps < 200:
+        steps += 1
+        # staggered arrivals
+        while pending and rng.random() < 0.6:
+            eng.submit(pending.pop(0))
+        # random mid-stream kill: expire an in-flight request NOW
+        if eng.active_slots and rng.random() < 0.3:
+            victims = [r for r in eng.slots if r is not None]
+            victim = victims[int(rng.integers(len(victims)))]
+            if victim.deadline_s is None:       # don't re-kill
+                victim.deadline_s = 0.0         # expires on the next step
+                killed.append(victim)
+        eng.step()
+    assert steps < 200, "fuzz run did not converge"
+    assert {r.rid for r in eng.dropped} == {r.rid for r in killed}
+    survivors = [r for r in reqs if not r.dropped]
+    assert len(survivors) + len(killed) == len(reqs)
+    for r in survivors:
+        assert tuple(r.out_tokens) == _solo_stream(r), \
+            f"rid {r.rid} diverged after slot reuse (seed {seed})"
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_evicted_slot_rows_zeroed_under_reset_on_evict(seed):
+    rng = np.random.default_rng([seed, 0xE71C])
+    eng = _engine(n_slots=2, reset_on_evict=True)
+    for i in range(4):
+        eng.submit(_req(i, rng))
+    eng.run_until_done()
+    fresh = init_cache(CFG, 2, 32, eng.cache_dtype, per_slot=True)
+    for slot in range(2):
+        for got, want in zip(_rows(eng.cache, slot), _rows(fresh, slot)):
+            np.testing.assert_array_equal(got, want)
+
+
+def test_kill_admit_kill_same_slot_repeatedly():
+    """Serial corpses through one slot: each successor's stream stays
+    exact even when its predecessor was cancelled mid-prefill budget."""
+    eng = _engine(n_slots=1, resilience=ResilienceConfig())
+    rng = np.random.default_rng(7)
+    outcomes = {}
+    for wave in range(3):
+        doomed = _req(100 + wave, rng, n_new=6)
+        eng.submit(doomed)
+        eng.step()                      # admitted, one token out
+        doomed.deadline_s = 0.0
+        eng.step()                      # cancelled, slot freed
+        assert doomed.dropped and doomed.drop_reason == "deadline"
+        clean = _req(200 + wave, rng, n_new=3)
+        eng.submit(clean)
+        for _ in range(20):
+            if clean in eng.step():
+                break
+        else:
+            pytest.fail(f"rid {clean.rid} never finished")
+        outcomes[clean.rid] = (tuple(clean.out_tokens), _solo_stream(clean))
+    for rid, (got, want) in outcomes.items():
+        assert got == want, f"rid {rid} diverged after kill-admit-kill"
