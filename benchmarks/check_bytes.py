@@ -53,7 +53,12 @@ def check_format(name, entry):
             raise SystemExit(f"{name}: unknown leaf format {rec['format']!r}"
                              f" at {rec['path']} — extend check_bytes.py")
         st, o, i = rec["stack"], rec["out"], rec["in"]
-        payload = st * PAYLOAD_BYTES[rec["format"]](o, i)
+        # k-sharded serving leaves (serve/sharded.py) pack each of the
+        # ``shards`` contiguous in-feature blocks on its own, so every
+        # shard pays the planar pad for its local width i/shards; ``in``
+        # is the padded global width (shards · k_loc, divisible).
+        sh = rec.get("shards", 1)
+        payload = st * sh * PAYLOAD_BYTES[rec["format"]](o, i // sh)
         scale = st * (i + o) * 4
         esc = st * rec["esc_capacity"] * 12
         for field, want in (("payload_bytes", payload),

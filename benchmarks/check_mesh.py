@@ -1,0 +1,108 @@
+"""CI mesh-serving gate: stream identity + per-shard byte accounting.
+
+Stdlib-only (no jax / no repro import) audit of the ``launch/serve.py
+--mesh --mesh-json`` artifact (DESIGN.md §13).  Asserts:
+
+1. **Stream identity** — the mesh engine's token streams are present,
+   non-empty, and BIT-identical to the single-device oracle run over the
+   same sharded tree (the tensor-parallel differential invariant).
+2. **No weight movement** — the compiled decode HLO contains zero
+   integer-typed all-gathers: weight payloads (u8/s8) never cross
+   devices; only fp activation partials and KV rows do.
+3. **Per-shard byte accounting** — every sharded inventory record's
+   payload/scale/escape bytes match the per-shard packing-layout
+   formulas (each shard pays the planar pad for its own k_loc block),
+   and the inventory sums exactly to the engine-reported weight bytes.
+
+    python benchmarks/check_mesh.py /tmp/mesh_serve.json [--min-shards 2]
+"""
+import argparse
+import json
+
+from check_bytes import PAYLOAD_BYTES
+
+
+def check_streams(data):
+    oracle, meshed = data["streams_oracle"], data["streams_mesh"]
+    if not data["identical"] or oracle != meshed:
+        raise SystemExit("mesh streams are NOT bit-identical to the "
+                         "single-device oracle")
+    if not oracle:
+        raise SystemExit("no requests served — the identity check is vacuous")
+    for rid, toks in oracle.items():
+        if not toks:
+            raise SystemExit(f"request {rid} produced no tokens")
+    return len(oracle)
+
+
+def check_collectives(data):
+    bad = data["integer_allgathers"]
+    if bad:
+        raise SystemExit("weight payload bytes crossed devices "
+                         f"({len(bad)} integer all-gathers):\n"
+                         + "\n".join(bad))
+
+
+def check_bytes_sharded(data):
+    shards = data["shards"]
+    reported = data["weight_bytes"]
+    total = 0
+    n_sharded = 0
+    for rec in data["inventory"]:
+        if rec["format"] == "raw":
+            total += rec["bytes"]
+            continue
+        st, o, i = rec["stack"], rec["out"], rec["in"]
+        sh = rec.get("shards", 1)
+        if sh > 1:
+            n_sharded += 1
+            if sh != shards:
+                raise SystemExit(f"{rec['path']}: leaf sharded {sh}-way on a "
+                                 f"{shards}-shard mesh")
+            if i % sh:
+                raise SystemExit(f"{rec['path']}: padded global width {i} "
+                                 f"not divisible by {sh} shards")
+        payload = st * sh * PAYLOAD_BYTES[rec["format"]](o, i // sh)
+        scale = st * (i + o) * 4
+        esc = st * rec["esc_capacity"] * 12
+        for field, want in (("payload_bytes", payload),
+                            ("scale_bytes", scale), ("esc_bytes", esc)):
+            if rec[field] != want:
+                raise SystemExit(
+                    f"{rec['path']} ({rec['format']}, {sh} shards) {field} "
+                    f"mismatch: reported {rec[field]}, accounting says "
+                    f"{want}")
+        total += rec["bytes"]
+    if total != reported:
+        raise SystemExit(f"inventory sums to {total} B but the engine "
+                         f"reported weight_bytes={reported}")
+    return n_sharded
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("summary", help="launch/serve.py --mesh-json output")
+    ap.add_argument("--min-shards", type=int, default=2,
+                    help="fail if the run sharded less than this wide "
+                         "(guards against a silently-degenerate 1-device "
+                         "mesh making every check vacuous)")
+    args = ap.parse_args()
+    with open(args.summary) as f:
+        data = json.load(f)
+    if data["shards"] < args.min_shards:
+        raise SystemExit(f"ran with {data['shards']} shard(s) < "
+                         f"{args.min_shards} — force more host devices "
+                         "(XLA_FLAGS=--xla_force_host_platform_device_count)")
+    n_req = check_streams(data)
+    check_collectives(data)
+    n_sharded = check_bytes_sharded(data)
+    if data["wbits"] != 16 and n_sharded == 0:
+        raise SystemExit("quantized run produced no sharded leaves — "
+                         "shard_params_tree did nothing")
+    print(f"check_mesh: OK ({data['shards']} shards, {n_req} streams "
+          f"bit-identical, {n_sharded} sharded leaves accounted, "
+          f"{data['allgather_lines']} fp all-gathers, 0 integer)")
+
+
+if __name__ == "__main__":
+    main()

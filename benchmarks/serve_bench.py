@@ -69,10 +69,12 @@ def _kernel_deltas(before, after):
             if v != before.get(k, 0.0)}
 
 
-def _engine_run(cfg, params, prompts, max_new, chunk):
+def _engine_run(cfg, params, prompts, max_new, chunk, decode_fns=None):
+    kw = {} if decode_fns is None else {"decode_fn": decode_fns[0],
+                                        "decode_chunk_fn": decode_fns[1]}
     eng = ServeEngine(cfg, params, n_slots=len(prompts),
                       max_len=prompts[0].size + max_new + 2,
-                      prefill_chunk=chunk)
+                      prefill_chunk=chunk, **kw)
     for i, p in enumerate(prompts):
         eng.submit(Request(rid=i, prompt=p.copy(), max_new_tokens=max_new))
     snap0 = obs.counters_snapshot("repro_kernel_")
@@ -95,6 +97,44 @@ def _engine_run(cfg, params, prompts, max_new, chunk):
             "dispatches": sum(s.prefill_calls + s.decode_calls
                               for s in eng.round_stats),
             "out": {r.rid: tuple(r.out_tokens) for r in done}}
+
+
+# ---------------------------------------------------------------------------
+# Part 1b — mesh ladder: k-sharded tensor-parallel serving (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+def mesh_compare(rows_out, cfg, trees, prompts, max_new, chunk):
+    """Serve every ladder format k-sharded over the full model axis and
+    assert the mesh engine's streams are BIT-identical to the single-
+    device oracle over the same sharded tree.  The ``mesh_*`` ladder
+    entries carry the sharded per-leaf inventory, so check_bytes.py's
+    per-shard pad accounting is exercised by the same gate as the
+    single-device layouts."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.serve import build_sharded_decode_fns, shard_params_tree
+
+    mesh = make_host_mesh(model_parallel=len(jax.devices()))
+    shards = int(mesh.shape["model"])
+    results = {}
+    for name, tree in trees.items():
+        sp = shard_params_tree(tree, shards)
+        base = _engine_run(cfg, sp, prompts, max_new, chunk)
+        fns = build_sharded_decode_fns(cfg, sp, mesh)
+        res = _engine_run(cfg, sp, prompts, max_new, chunk, decode_fns=fns)
+        assert res["out"] == base["out"], \
+            f"mesh_{name}: sharded streams diverged from the oracle"
+        res["inventory"] = leaf_inventory(sp)
+        res["shards"] = shards
+        _, fb = qweight_bytes(tree)             # logical (unpadded) bf16
+        res["bytes_per_w"] = res["weight_bytes"] / (fb / 2)
+        results[f"mesh_{name}"] = res
+        rows_out.append((
+            f"serve/mesh_{name}", res["tok_s"],
+            f"shards={shards};tokens={res['tokens']};"
+            f"hbm_bytes_per_w={res['bytes_per_w']:.3f};"
+            f"wall_s={res['wall_s']:.2f};oracle_identical=1"))
+    return results
 
 
 # ---------------------------------------------------------------------------
@@ -279,7 +319,7 @@ def resilience_bench(rows_out, cfg, params, quick=False):
                         "submitted": submitted}}
 
 
-def run(rows_out, quick=False):
+def run(rows_out, quick=False, mesh=False):
     cfg = ArchConfig(name="bench", family="dense",
                      n_layers=2 if quick else 4,
                      d_model=128 if quick else 256, n_heads=4, n_kv=4,
@@ -324,6 +364,9 @@ def run(rows_out, quick=False):
             < results["int3_packed"]["bytes_per_w"]
             < results["int4_packed"]["bytes_per_w"]
             < results["int8"]["bytes_per_w"] < 2.0)
+    if mesh:
+        results.update(mesh_compare(rows_out, cfg, trees, prompts, max_new,
+                                    chunk))
     results["sched"] = scheduler_compare(rows_out, cfg, params, quick=quick)
     results["resilience"] = resilience_bench(rows_out, cfg, params,
                                              quick=quick)
@@ -357,11 +400,15 @@ if __name__ == "__main__":
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write rows + per-format storage inventory as "
                          "JSON (CI artifact; input to check_bytes.py)")
+    ap.add_argument("--mesh", action="store_true",
+                    help="also serve every format k-sharded over the full "
+                         "model axis, asserted bit-identical to the "
+                         "single-device oracle (DESIGN.md §13)")
     add_obs_flags(ap)
     args = ap.parse_args()
     obs_setup(args)
     rows = []
-    results = run(rows, quick=args.quick)
+    results = run(rows, quick=args.quick, mesh=args.mesh)
     for r in rows:
         print(",".join(str(x) for x in r))
     if args.json:

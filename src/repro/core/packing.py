@@ -48,7 +48,8 @@ __all__ = ["pack_int4", "unpack_int4", "PackedCodes", "pack_codes",
            "unpack_codes", "escapes_to_coo", "pack_int4_planar_jnp",
            "unpack_int4_planar_jnp", "pack_codes_jnp",
            "pack_int3_planar_jnp", "unpack_int3_planar_jnp",
-           "pack_int2_planar_jnp", "unpack_int2_planar_jnp"]
+           "pack_int2_planar_jnp", "unpack_int2_planar_jnp",
+           "shard_pad_cols", "shard_planar_codes_jnp"]
 
 
 def pack_int4(z: np.ndarray) -> np.ndarray:
@@ -273,6 +274,63 @@ _RANGE = {2: (-2, 1), 3: (-4, 3), 4: (-8, 7), 8: (-128, 127)}
 _PAD_MULT = {2: 4, 3: 8, 4: 2, 8: 1}
 
 
+def shard_pad_cols(n: int, nbits: int, shards: int = 1) -> int:
+    """Total zero-filled pad columns when ``n`` in-features are split into
+    ``shards`` contiguous blocks and each block is planar-packed on its own.
+
+    Every shard holds ``k_loc = ceil(n/shards)`` columns (the last block's
+    ragged tail is zero-filled up to ``k_loc``), then pads ``k_loc`` up to
+    the format's planar group multiple.  With ``shards=1`` this reduces to
+    the classic ``(-n) % _PAD_MULT[nbits]``.  Pad columns carry code 0 and
+    scale 0, so they contribute nothing to the matmul — but they DO occupy
+    payload bytes, which is why byte accounting must know about them.
+    """
+    if shards < 1:
+        raise ValueError(f"shards must be >= 1, got {shards}")
+    k_loc = -(-n // shards)
+    mult = _PAD_MULT[nbits]
+    return shards * mult * (-(-k_loc // mult)) - n
+
+
+def shard_planar_codes_jnp(codes, shards: int, *, nbits: int) -> jnp.ndarray:
+    """Split integer codes (a, n) into per-shard planar payloads.
+
+    Each shard's contiguous in-feature block is zero-filled to the uniform
+    local width ``k_loc = ceil(n/shards)`` and THEN planar-packed, so pad
+    columns sit at the end of every shard's own payload — never mid-matrix
+    from a downstream shard's point of view (the ragged-tail accounting
+    bug this fixes).  Returns uint8 ``(shards, a, ...)`` where the
+    trailing dims are the per-shard single-device planar layout
+    (``ceil(k_loc/2)`` nibbles / ``(3, ceil(k_loc/8))`` bit-planes /
+    ``(1, ceil(k_loc/4))`` fields).  Lossless: unpacking each shard and
+    concatenating the first ``k_loc`` columns of each recovers the input.
+    """
+    z = jnp.asarray(codes)
+    a, n = z.shape
+    if nbits == 4:
+        packer = pack_int4_planar_jnp
+    elif nbits == 3:
+        packer = pack_int3_planar_jnp
+    elif nbits == 2:
+        packer = pack_int2_planar_jnp
+    else:
+        raise ValueError("nbits must be 2, 3 or 4")
+    k_loc = -(-n // shards)
+    mult = _PAD_MULT[nbits]
+    k_loc_padded = mult * (-(-k_loc // mult))
+    body = z.astype(jnp.int8)
+    total = shards * k_loc
+    if total > n:
+        body = jnp.concatenate(
+            [body, jnp.zeros((a, total - n), jnp.int8)], axis=1)
+    blocks = body.reshape(a, shards, k_loc).transpose(1, 0, 2)
+    if k_loc_padded > k_loc:
+        blocks = jnp.concatenate(
+            [blocks, jnp.zeros((shards, a, k_loc_padded - k_loc), jnp.int8)],
+            axis=-1)
+    return packer(blocks)
+
+
 @dataclass
 class PackedCodes:
     """Packed code matrix + escape list for out-of-range entries."""
@@ -283,15 +341,19 @@ class PackedCodes:
     escape_idx: np.ndarray       # flat indices of escapes (uint32 when the
                                  # matrix has < 2³² entries, else int64)
     escape_val: np.ndarray       # their true values (int32)
+    shards: int = 1              # in-feature shard count the payload was
+                                 # packed for (each shard padded on its own)
 
     @property
     def storage_bits_per_entry(self) -> float:
         """Exact bits/entry: excludes pad columns (odd-n nibble for int4,
         the up-to-7 zero columns of the int3 8-group, up-to-3 of the int2
-        4-group) and uses the actual escape-index width."""
+        4-group — per shard when the payload is k-sharded, since every
+        shard zero-fills its own tail) and uses the actual escape-index
+        width."""
         a, n = self.shape
         payload_bits = self.payload.size * 8
-        pad_cols = (-n) % _PAD_MULT[self.nbits]
+        pad_cols = shard_pad_cols(n, self.nbits, self.shards)
         payload_bits -= a * self.nbits * pad_cols    # pad is not payload
         idx_bits = self.escape_idx.dtype.itemsize * 8
         esc = self.escape_idx.size * (idx_bits + 32)

@@ -12,11 +12,13 @@ from .checkpoint import (cleanup_old, latest_step, list_steps,
 from .fault import (Heartbeat, RestartPolicy, StragglerMonitor,
                     run_with_restarts)
 from .sharding import (batch_spec, current_mesh, default_rules,
-                       logical_shard, shard_map, spec_for_axes, use_mesh)
+                       in_manual_axes, logical_shard, manual_axes,
+                       manual_axis_info, shard_map, spec_for_axes, use_mesh)
 
 __all__ = [
-    "batch_spec", "current_mesh", "default_rules", "logical_shard",
-    "shard_map", "spec_for_axes", "use_mesh",
+    "batch_spec", "current_mesh", "default_rules", "in_manual_axes",
+    "logical_shard", "manual_axes", "manual_axis_info", "shard_map",
+    "spec_for_axes", "use_mesh",
     "cleanup_old", "latest_step", "list_steps", "read_manifest",
     "restore_checkpoint", "save_checkpoint",
     "Heartbeat", "RestartPolicy", "StragglerMonitor", "run_with_restarts",

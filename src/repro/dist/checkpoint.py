@@ -43,6 +43,12 @@ __all__ = ["save_checkpoint", "restore_checkpoint", "read_manifest",
 
 _PREFIX = "step_"
 _MANIFEST = "manifest.json"
+#: read-protection marker: every manifest read records its step here so a
+#: concurrent retention pass never deletes the step a resume is loading
+_READ_MARKER = ".last_read"
+#: staging dirs / read markers older than this are considered abandoned
+#: (crashed writer, dead reader) and eligible for garbage collection
+_STALE_SECONDS = 3600.0
 
 
 def _step_dirname(step: int) -> str:
@@ -75,20 +81,75 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def _note_read(ckpt_dir: str, step: int) -> None:
+    """Record that ``step``'s manifest was just read (atomic marker write).
+
+    Retention (:func:`cleanup_old`) refuses to delete the recorded step or
+    anything newer, closing the race where ``save_checkpoint(keep=...)``
+    on one actor deletes the very step a concurrent resume is mid-way
+    through loading.  Best-effort: a read-only checkpoint dir must not
+    make restores fail."""
+    path = os.path.join(ckpt_dir, _READ_MARKER)
+    tmp = f"{path}.tmp.{uuid.uuid4().hex[:8]}"
+    try:
+        with open(tmp, "w") as f:
+            json.dump({"step": int(step), "time": time.time()}, f)
+        os.replace(tmp, path)
+    except OSError:
+        try:
+            os.remove(tmp)
+        except OSError:
+            pass
+
+
+def _read_protected_step(ckpt_dir: str) -> Optional[int]:
+    """The step floor retention must not cross, or None.  A marker older
+    than ``_STALE_SECONDS`` is a dead reader and stops pinning steps."""
+    try:
+        with open(os.path.join(ckpt_dir, _READ_MARKER)) as f:
+            marker = json.load(f)
+        if time.time() - float(marker.get("time", 0.0)) > _STALE_SECONDS:
+            return None
+        return int(marker["step"])
+    except (OSError, ValueError, KeyError):
+        return None
+
+
+def _gc_stale_staging(ckpt_dir: str) -> None:
+    """Remove ``.tmp.`` staging dirs whose mtime is older than
+    ``_STALE_SECONDS`` — crashed writers leak these forever otherwise.
+    Young staging dirs are left alone: they may belong to a live
+    concurrent writer."""
+    if not os.path.isdir(ckpt_dir):
+        return
+    now = time.time()
+    for name in os.listdir(ckpt_dir):
+        if not (name.startswith(_PREFIX) and ".tmp." in name):
+            continue
+        path = os.path.join(ckpt_dir, name)
+        try:
+            age = now - os.path.getmtime(path)
+        except OSError:
+            continue
+        if age > _STALE_SECONDS:
+            shutil.rmtree(path, ignore_errors=True)
+
+
 def cleanup_old(ckpt_dir: str, keep: int) -> List[int]:
     """Delete all but the ``keep`` newest committed checkpoints (and any
-    stale ``.tmp.`` staging directories).  Returns the deleted steps."""
+    stale ``.tmp.`` staging directories).  Steps at or above the latest
+    recorded manifest read (``.last_read`` marker) are never deleted —
+    a concurrent resume holds them.  Returns the deleted steps."""
     if keep < 1:
         raise ValueError(f"keep must be >= 1, got {keep}")
     removed = []
+    protected = _read_protected_step(ckpt_dir)
     for step in list_steps(ckpt_dir)[:-keep]:
+        if protected is not None and step >= protected:
+            continue
         shutil.rmtree(_step_path(ckpt_dir, step), ignore_errors=True)
         removed.append(step)
-    if os.path.isdir(ckpt_dir):
-        for name in os.listdir(ckpt_dir):
-            if name.startswith(_PREFIX) and ".tmp." in name:
-                shutil.rmtree(os.path.join(ckpt_dir, name),
-                              ignore_errors=True)
+    _gc_stale_staging(ckpt_dir)
     return removed
 
 
@@ -105,6 +166,7 @@ def save_checkpoint(ckpt_dir: str, step: int, state,
     committed directory.  ``keep`` applies :func:`cleanup_old` retention
     after the commit, so a retention pass can never eat the newest save."""
     os.makedirs(ckpt_dir, exist_ok=True)
+    _gc_stale_staging(ckpt_dir)
     final = _step_path(ckpt_dir, step)
     tmp = f"{final}.tmp.{uuid.uuid4().hex[:8]}"
     os.makedirs(tmp)
@@ -160,7 +222,9 @@ def read_manifest(ckpt_dir: str, step: Optional[int] = None
             raise FileNotFoundError(
                 f"no committed checkpoint under {ckpt_dir!r}")
     with open(os.path.join(_step_path(ckpt_dir, step), _MANIFEST)) as f:
-        return json.load(f)
+        manifest = json.load(f)
+    _note_read(ckpt_dir, step)
+    return manifest
 
 
 def _sharding_index(shardings) -> Dict[str, Any]:
@@ -170,11 +234,31 @@ def _sharding_index(shardings) -> Dict[str, Any]:
     return dict(keyed)
 
 
+def _intentional(sharding) -> bool:
+    """Whether a template leaf's sharding expresses a real layout choice.
+
+    Plain ``jnp`` arrays are committed to the default device as a side
+    effect of creation; reusing that accidental single-device sharding
+    used to pin restored multi-gigabyte caches to device 0 under a
+    multi-device mesh.  Only mesh-born layouts (``NamedSharding``) or
+    genuinely multi-device placements count as intentional — everything
+    else restores UNCOMMITTED so the first computation is free to lay it
+    out."""
+    if sharding is None:
+        return False
+    if isinstance(sharding, jax.sharding.NamedSharding):
+        return True
+    try:
+        return len(sharding.device_set) > 1
+    except (AttributeError, TypeError):
+        return False
+
+
 def _place(arr: np.ndarray, template_leaf, sharding):
     if sharding is not None:
         return jax.device_put(arr, sharding)
     tmpl_sharding = getattr(template_leaf, "sharding", None)
-    if tmpl_sharding is not None:
+    if _intentional(tmpl_sharding):
         try:
             return jax.device_put(arr, tmpl_sharding)
         except (ValueError, TypeError):
@@ -203,6 +287,7 @@ def restore_checkpoint(ckpt_dir: str, template, *,
     d = _step_path(ckpt_dir, step)
     with open(os.path.join(d, _MANIFEST)) as f:
         manifest = json.load(f)
+    _note_read(ckpt_dir, step)
     by_key = {leaf["key"]: leaf for leaf in manifest["leaves"]}
 
     keyed_paths, treedef = jax.tree_util.tree_flatten_with_path(template)

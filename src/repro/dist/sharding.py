@@ -38,6 +38,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 __all__ = [
     "Axis", "default_rules", "spec_for_axes", "batch_spec",
     "use_mesh", "current_mesh", "logical_shard", "shard_map",
+    "manual_axes", "in_manual_axes", "manual_axis_info",
 ]
 
 # A rule value: one mesh axis, a tuple of mesh axes, or None (replicate).
@@ -73,6 +74,10 @@ def default_rules(multi_pod: bool = False) -> Dict[str, Axis]:
         "experts": "model",
         "state": "model",
         "layers": None,
+        # the explicit shard axis of k-sharded serving payloads
+        # (serve/sharded.py): each entry is one contiguous in-feature
+        # block's planar repack, so the axis is pure tensor parallelism
+        "kshard": "model",
     }
 
 
@@ -164,6 +169,42 @@ def _axis_product(mesh, entry) -> int:
     return n
 
 
+@contextlib.contextmanager
+def manual_axes(**info):
+    """Mark that tracing is inside a ``shard_map`` body (per-device view).
+
+    ``with_sharding_constraint`` is a global-view annotation and is
+    invalid on the per-device values a shard_map body manipulates, so
+    while this context is active :func:`logical_shard` is a strict no-op
+    even under an active ``use_mesh``.  Thread-local and re-entrant, like
+    the mesh stack.
+
+    ``info`` is free-form metadata model code can read back with
+    :func:`manual_axis_info` — the k-sharded serving path stores the mesh
+    axis name, static shard count, and whether the KV cache arrives
+    shard-local (serve/sharded.py, DESIGN.md §13).
+    """
+    stack = getattr(_LOCAL, "manual_stack", None)
+    if stack is None:
+        stack = _LOCAL.manual_stack = []
+    stack.append(dict(info))
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+def in_manual_axes() -> bool:
+    """True while tracing inside a :func:`manual_axes` scope."""
+    return bool(getattr(_LOCAL, "manual_stack", None))
+
+
+def manual_axis_info() -> Optional[Dict[str, object]]:
+    """The innermost :func:`manual_axes` metadata dict, or None."""
+    stack = getattr(_LOCAL, "manual_stack", None)
+    return stack[-1] if stack else None
+
+
 def logical_shard(x, *axes: Optional[str]):
     """Pin ``x`` to the active mesh by logical axis names; no-op otherwise.
 
@@ -173,10 +214,11 @@ def logical_shard(x, *axes: Optional[str]):
     entries are dropped when (a) the named mesh axes are absent from the
     active mesh or (b) their size product does not divide the dim (e.g. a
     2-kv-head cache on a 4-way model axis — the kv_seq_shard fallback's
-    whole reason to exist).
+    whole reason to exist).  Inside a :func:`manual_axes` scope (tracing a
+    shard_map body) it is likewise the strict identity.
     """
     mesh = current_mesh()
-    if mesh is None:
+    if mesh is None or in_manual_axes():
         return x
     spec = spec_for_axes(axes)
     entries = []

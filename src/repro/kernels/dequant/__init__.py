@@ -2,8 +2,8 @@ from .dequant_matmul import dequant_matmul_packed_pallas, dequant_matmul_pallas
 from .ops import (dequant_matmul, dequant_matmul_packed,
                   dequant_matmul_packed2, dequant_matmul_packed2_xla,
                   dequant_matmul_packed3, dequant_matmul_packed3_xla,
-                  dequant_matmul_packed_xla, dequant_matmul_xla,
-                  payload_nbits)
+                  dequant_matmul_packed_xla, dequant_matmul_sharded,
+                  dequant_matmul_xla, payload_nbits)
 from .ref import (dequant_matmul_packed_ref, dequant_matmul_ref,
                   dequantize_ref, unpack_payload_ref)
 
@@ -12,5 +12,5 @@ __all__ = ["dequant_matmul_pallas", "dequant_matmul_packed_pallas",
            "dequant_matmul_packed2", "dequant_matmul_packed2_xla",
            "dequant_matmul_packed3", "dequant_matmul_packed3_xla",
            "dequant_matmul_packed_xla", "dequant_matmul_packed_ref",
-           "dequant_matmul_ref", "dequantize_ref", "unpack_payload_ref",
-           "payload_nbits"]
+           "dequant_matmul_ref", "dequant_matmul_sharded", "dequantize_ref",
+           "unpack_payload_ref", "payload_nbits"]

@@ -57,8 +57,8 @@ from .ref import dequant_matmul_packed_ref, dequant_matmul_ref
 __all__ = ["dequant_matmul", "dequant_matmul_packed", "dequant_matmul_xla",
            "dequant_matmul_packed_xla", "dequant_matmul_packed3",
            "dequant_matmul_packed3_xla", "dequant_matmul_packed2",
-           "dequant_matmul_packed2_xla", "payload_nbits",
-           "record_weight_traffic", "weight_format_bytes",
+           "dequant_matmul_packed2_xla", "dequant_matmul_sharded",
+           "payload_nbits", "record_weight_traffic", "weight_format_bytes",
            "payload_checksums", "verify_payloads"]
 
 #: payload nbits → the leaf-format label shared with quant.leaf_inventory
@@ -319,6 +319,112 @@ def dequant_matmul_xla(x, z, col_scale, row_scale):
                               (((1,), (1,)), ((), ())),
                               preferred_element_type=jnp.float32)
     return acc * row_scale.astype(jnp.float32)[None, :]
+
+
+def _chain_sum(stacked):
+    """Fixed-order chain sum over the leading axis: s0 + s1 + ... + s_{S-1}.
+
+    The k-sharded matmul's psum epilogue.  An explicit add chain (not
+    ``jnp.sum``) so BOTH the single-device oracle loop and the shard_map
+    all-gather path reduce the per-shard partials through the identical
+    op sequence — XLA never reassociates explicit float adds, which is
+    what makes sharded streams bit-identical to the single-device engine.
+    """
+    acc = stacked[0]
+    for i in range(1, stacked.shape[0]):
+        acc = acc + stacked[i]
+    return acc
+
+
+def _shard_partial(x_loc, z_s, s_s, t, *, nbits, esc_s, kw):
+    """One in-feature shard's (m, n) partial product.
+
+    Per-shard zero-fill happened at pack time (``shard_planar_codes_jnp``:
+    every shard's ragged tail carries code 0 / scale 0 at the END of its
+    own block), so the single-shard packed path's local padding is exact —
+    the global pad-to-``block_k_eff`` that put pad columns mid-matrix on
+    all but the last shard never happens.
+    """
+    if z_s.dtype == jnp.uint8:
+        return _dequant_matmul_packed(x_loc, z_s, s_s, t,
+                                      nbits=nbits, escapes=esc_s, **kw)
+    if z_s.dtype == jnp.int8:
+        # scale-the-activations int8 partial; the shared row scale t is
+        # applied once, after the chain sum (linear, so exactness holds)
+        return (x_loc * s_s.astype(x_loc.dtype)) @ z_s.astype(x_loc.dtype)
+    return x_loc @ z_s.astype(x_loc.dtype)   # raw fp shard (k_loc, n)
+
+
+def dequant_matmul_sharded(x, z, col_scale=None, row_scale=None, *,
+                           escapes=None, axis_name=None, shards=None,
+                           **kw):
+    """k-sharded matmul with an ordered psum epilogue (DESIGN.md §13).
+
+    ``z`` stacks per-shard weight blocks along a leading shard axis:
+    uint8 packed payloads ``(S, n, …kg_loc)`` (nbits read off the trailing
+    planar shape as usual), int8 code matrices ``(S, k_loc, n)``, or raw
+    fp blocks ``(S, k_loc, n)``.  ``col_scale`` is ``(S, k_loc)``,
+    ``row_scale`` ``(n,)``, and ``escapes`` an optional COO triple whose
+    arrays are ``(S, cap_loc)`` with *local* column indices.  ``x`` is the
+    full ``(m, k)`` activation, zero-padded here to ``S·k_loc`` and split
+    into contiguous per-shard blocks.
+
+    Two execution modes, bit-identical by construction:
+
+    * ``axis_name=None`` — the single-device oracle: loop the S shards
+      locally, stack the partials, chain-sum.
+    * ``axis_name="model"`` — inside a ``shard_map`` body: ``z`` et al.
+      arrive with a local shard axis of size 1, this device computes ONLY
+      its partial, then ``all_gather`` over the axis reproduces the same
+      ``(S, m, n)`` stack the oracle built and the same chain sum runs.
+      The gather moves the (m, n) *activation* partials — weights never
+      cross devices on the decode path.
+    """
+    if axis_name is None:
+        shards = z.shape[0]
+    elif shards is None:
+        raise ValueError("axis_name given but shards is None — the mesh "
+                         "path needs the static shard count (the local z "
+                         "block's shard axis is 1)")
+    nbits = payload_nbits(z) if z.dtype == jnp.uint8 else None
+    if z.dtype == jnp.uint8:
+        k_loc = col_scale.shape[-1]
+        _count_dispatch(FORMAT_OF_NBITS[nbits], "kshard")
+    elif z.dtype == jnp.int8:
+        k_loc = z.shape[-2]
+        _count_dispatch("int8", "kshard")
+    else:
+        k_loc = z.shape[-2]
+    m, k = x.shape
+    total = shards * k_loc
+    xp = _pad_to(x, total, 1) if k < total else x
+    xg = xp.reshape(m, shards, k_loc)
+
+    def esc_at(i):
+        if escapes is None:
+            return None
+        er, ec, ev = escapes
+        return (er[i], ec[i], ev[i])
+
+    if axis_name is None:
+        partials = [
+            _shard_partial(xg[:, s, :], z[s],
+                           None if col_scale is None else col_scale[s],
+                           row_scale, nbits=nbits, esc_s=esc_at(s), kw=kw)
+            for s in range(shards)]
+        stacked = jnp.stack(partials, axis=0)
+    else:
+        idx = jax.lax.axis_index(axis_name)
+        x_loc = jax.lax.dynamic_index_in_dim(xg, idx, 1, keepdims=False)
+        partial = _shard_partial(
+            x_loc, z[0], None if col_scale is None else col_scale[0],
+            row_scale, nbits=nbits, esc_s=esc_at(0), kw=kw)
+        stacked = jax.lax.all_gather(partial, axis_name, axis=0,
+                                     tiled=False)
+    out = _chain_sum(stacked)
+    if z.dtype == jnp.int8:
+        out = out * row_scale.astype(out.dtype)
+    return out
 
 
 def dequant_matmul_packed3(x, payload, col_scale, row_scale, *,

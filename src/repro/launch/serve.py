@@ -42,7 +42,9 @@ from repro.launch.mesh import make_host_mesh
 from repro.models import init_params, split_tree
 from repro.quant import quantize_params_tree, qweight_bytes
 from repro.serve import (ContinuousEngine, DegradePolicy, Request,
-                         ResilienceConfig, ServeEngine, build_bit_ladder)
+                         ResilienceConfig, ServeEngine, build_bit_ladder,
+                         build_sharded_decode_fns, integer_allgathers,
+                         lower_decode_hlo, shard_params_tree)
 
 
 def add_obs_flags(ap: argparse.ArgumentParser) -> None:
@@ -133,6 +135,119 @@ def resilience_from_args(args, params) -> ResilienceConfig | None:
         snapshot_every=args.snapshot_every if args.snapshot_dir else None)
 
 
+def _quantize_for_wbits(params, wbits: int):
+    if wbits == 8:
+        params = quantize_params_tree(params)
+        print("serving int8 WaterSIC-code weights")
+    elif wbits == 4:
+        params = quantize_params_tree(params, nbits=4, packed=True)
+        print("serving packed-int4 WaterSIC-code weights (planar nibble "
+              "payload, fused unpack kernel)")
+    elif wbits == 3:
+        params = quantize_params_tree(params, nbits=3)
+        print("serving int3 WaterSIC-code weights (bit-plane payload, "
+              "in-kernel plane unpack)")
+    elif wbits == 2:
+        params = quantize_params_tree(params, nbits=2)
+        print("serving int2 WaterSIC-code weights (planar 2-bit fields, "
+              "4 codes/byte, in-kernel shift/mask unpack)")
+    if wbits != 16:
+        qb, fb = qweight_bytes(params)
+        print(f"  param bytes {qb/1e6:.2f} MB vs bf16 {fb/1e6:.2f} MB "
+              f"({fb/max(qb,1):.2f}x HBM win)")
+    return params
+
+
+def main_mesh(args, cfg):
+    """Tensor-parallel k-sharded serving (DESIGN.md §13).
+
+    Shards the serving tree over the full ``model`` axis, runs the SAME
+    sharded tree through (a) the single-device oracle engine and (b) the
+    mesh engine (whole decode step under one shard_map), and asserts the
+    token streams are bit-identical.  ``--mesh-json`` dumps streams,
+    per-leaf storage inventory, and the decode HLO's collective audit for
+    the stdlib ``benchmarks/check_mesh.py`` gate.
+    """
+    import json
+
+    from repro.models.transformer import init_cache
+    from repro.quant import leaf_format_histogram, leaf_inventory
+
+    # NOTE: the oracle runs OUTSIDE any use_mesh context — a partitioned
+    # single-host graph could reassociate reductions; the oracle must be
+    # the plain single-device program over the sharded tree.
+    mesh = make_host_mesh(model_parallel=len(jax.devices()))
+    shards = int(mesh.shape["model"])
+    params, _ = split_tree(init_params(cfg, jax.random.PRNGKey(0)))
+    params = _quantize_for_wbits(params, args.wbits)
+    params = shard_params_tree(params, shards)
+    qb, _ = qweight_bytes(params)
+    print(f"mesh serving: {shards}-way in-feature sharding on {mesh} "
+          f"({qb/1e6:.2f} MB stored, per-shard pad included)")
+    max_len = args.prompt_len + args.max_new + 2
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, args.prompt_len).astype(np.int32)
+               for _ in range(args.requests)]
+
+    def serve(decode_fns, tag):
+        kw = {}
+        if decode_fns is not None:
+            kw = {"decode_fn": decode_fns[0],
+                  "decode_chunk_fn": decode_fns[1]}
+        cls = ContinuousEngine if args.continuous else ServeEngine
+        eng = cls(cfg, params, n_slots=args.slots, max_len=max_len,
+                  prefill_chunk=args.prefill_chunk or None,
+                  resilience=resilience_from_args(args, params), **kw)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p.copy(),
+                               max_new_tokens=args.max_new))
+        t0 = time.perf_counter()
+        done = eng.run_until_done()
+        dt = time.perf_counter() - t0
+        toks = sum(len(r.out_tokens) for r in done)
+        print(f"  {tag}: {len(done)} requests, {toks} tokens in {dt:.2f}s")
+        return {r.rid: list(r.out_tokens) for r in done}
+
+    oracle = serve(None, "single-device oracle")
+    fns = build_sharded_decode_fns(cfg, params, mesh)
+    meshed = serve(fns, f"{shards}-shard mesh")
+    identical = oracle == meshed
+    print(f"  streams bit-identical: {identical}")
+
+    # collective audit: NO integer (weight-payload) all-gather may appear
+    # on the compiled decode path — weights stay put, activations move
+    cache = init_cache(cfg, args.slots, max_len, jnp.float32,
+                       per_slot=args.continuous)
+    tok = jnp.zeros((args.slots, 1), jnp.int32)
+    hlo = lower_decode_hlo(cfg, params, mesh, cache, tok)
+    bad = integer_allgathers(hlo)
+    n_ag = sum("all-gather" in ln for ln in hlo.splitlines())
+    print(f"  decode HLO: {n_ag} all-gather lines, "
+          f"{len(bad)} integer-payload all-gathers")
+    if args.mesh_json:
+        payload = {
+            "shards": shards, "wbits": args.wbits,
+            "continuous": bool(args.continuous),
+            "weight_bytes": int(qb),
+            "weight_formats": leaf_format_histogram(params),
+            "inventory": leaf_inventory(params),
+            "streams_oracle": oracle, "streams_mesh": meshed,
+            "identical": identical,
+            "allgather_lines": int(n_ag),
+            "integer_allgathers": bad,
+        }
+        with open(args.mesh_json, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        print(f"wrote {args.mesh_json}")
+    obs_export(args)
+    if not identical:
+        raise SystemExit("mesh streams diverged from the oracle")
+    if bad:
+        raise SystemExit("weight payload bytes crossed devices:\n"
+                         + "\n".join(bad))
+    return meshed
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -147,6 +262,13 @@ def main(argv=None):
     ap.add_argument("--continuous", action="store_true",
                     help="continuous batching (per-slot decode streams, "
                          "in-flight admission) instead of static rounds")
+    ap.add_argument("--mesh", action="store_true",
+                    help="tensor-parallel k-sharded serving over the host "
+                         "mesh's model axis, differentially checked "
+                         "bit-identical against the single-device oracle")
+    ap.add_argument("--mesh-json", default=None, metavar="PATH",
+                    help="with --mesh: dump streams + storage inventory + "
+                         "collective audit (input to check_mesh.py)")
     add_obs_flags(ap)
     add_resilience_flags(ap)
     args = ap.parse_args(argv)
@@ -155,29 +277,13 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if args.mesh:
+        return main_mesh(args, cfg)
     mesh = make_host_mesh()
     rng = np.random.default_rng(0)
     with use_mesh(mesh):
         params, _ = split_tree(init_params(cfg, jax.random.PRNGKey(0)))
-        if args.wbits == 8:
-            params = quantize_params_tree(params)
-            print("serving int8 WaterSIC-code weights")
-        elif args.wbits == 4:
-            params = quantize_params_tree(params, nbits=4, packed=True)
-            print("serving packed-int4 WaterSIC-code weights (planar nibble "
-                  "payload, fused unpack kernel)")
-        elif args.wbits == 3:
-            params = quantize_params_tree(params, nbits=3)
-            print("serving int3 WaterSIC-code weights (bit-plane payload, "
-                  "in-kernel plane unpack)")
-        elif args.wbits == 2:
-            params = quantize_params_tree(params, nbits=2)
-            print("serving int2 WaterSIC-code weights (planar 2-bit fields, "
-                  "4 codes/byte, in-kernel shift/mask unpack)")
-        if args.wbits != 16:
-            qb, fb = qweight_bytes(params)
-            print(f"  param bytes {qb/1e6:.2f} MB vs bf16 {fb/1e6:.2f} MB "
-                  f"({fb/max(qb,1):.2f}x HBM win)")
+        params = _quantize_for_wbits(params, args.wbits)
         res = resilience_from_args(args, params)
         cls = ContinuousEngine if args.continuous else ServeEngine
         if args.resume:

@@ -127,7 +127,34 @@ def dense_init(key, in_dim, out_dim, *, axes, bias=False, scale=1.0,
 
 def dense(p, x):
     w = p["w"]
-    if isinstance(w, dict) and "codes" in w:
+    if isinstance(w, dict) and "kshard" in w:
+        # Tensor-parallel k-sharded serving leaf (DESIGN.md §13): the
+        # payload carries an explicit leading shard axis (one contiguous
+        # in-feature block per entry, re-packed planar per shard by
+        # serve/sharded.py).  Inside a shard_map body the manual-axes
+        # context names the mesh axis and each device computes its single
+        # partial; with no context (the single-device oracle) all shard
+        # partials are computed locally.  Either way the partials are
+        # combined by the same ordered chain-sum, so the two paths are
+        # bit-identical.
+        from repro.dist.sharding import manual_axis_info
+        from repro.kernels.dequant import dequant_matmul_sharded
+        ctx = manual_axis_info()
+        axis = ctx.get("axis") if ctx else None
+        shards = ctx.get("shards") if ctx else None
+        lead = x.shape[:-1]
+        xf = x.reshape(-1, x.shape[-1])
+        if "codes" in w:
+            esc = ((w["esc_row"], w["esc_col"], w["esc_dval"])
+                   if "esc_row" in w else None)
+            y = dequant_matmul_sharded(xf, w["codes"], w.get("s"), w.get("t"),
+                                       escapes=esc, axis_name=axis,
+                                       shards=shards)
+        else:
+            y = dequant_matmul_sharded(xf, w["wsh"], axis_name=axis,
+                                       shards=shards)
+        y = y.reshape(lead + (y.shape[-1],)).astype(x.dtype)
+    elif isinstance(w, dict) and "codes" in w:
         if w["codes"].dtype == jnp.uint8:
             # WaterSIC sub-byte serving paths (DESIGN.md §8/§10): the
             # planar int4 nibble payload (out, ceil(in/2)), int3
@@ -368,7 +395,16 @@ def attention_decode(p, x_t, cache: KVCache, pos, *, n_q, n_kv, head_dim,
     recency.
     """
     b = x_t.shape[0]
-    buf = cache.k.shape[1]
+    from repro.dist.sharding import manual_axis_info
+    _ctx = manual_axis_info()
+    # Sharded serving (DESIGN.md §13): inside the shard_map body each
+    # device holds a contiguous 1/S block of the KV ring buffer (buffer
+    # axis over "model").  Slot arithmetic and masking stay GLOBAL; only
+    # the scatter targets the local block, and K/V are re-assembled by an
+    # activation-sized all_gather before the scores.
+    kv_sharded = bool(_ctx and _ctx.get("cache_sharded"))
+    buf_loc = cache.k.shape[1]
+    buf = buf_loc * _ctx["shards"] if kv_sharded else buf_loc
     pos = jnp.asarray(pos)
     per_slot = pos.ndim == 1
     q = _split_heads(dense(p["wq"], x_t), n_q, head_dim)
@@ -379,7 +415,21 @@ def attention_decode(p, x_t, cache: KVCache, pos, *, n_q, n_kv, head_dim,
         q = rope(q, posv, rope_theta)
         k_t = rope(k_t, posv, rope_theta)
     slot = pos % buf if window is not None else pos
-    if per_slot:
+    if kv_sharded:
+        # every row scatters into the LOCAL block: global slot minus this
+        # device's base offset.  Negative python-style wrapping would alias
+        # live data, so non-owned rows are first mapped to the (OOB) local
+        # buffer length and then dropped by the scatter.
+        rows = jnp.arange(b)
+        slot_vec = slot if per_slot else jnp.full((b,), slot)
+        base = jax.lax.axis_index(_ctx["axis"]) * buf_loc
+        loc = slot_vec - base
+        loc = jnp.where((loc >= 0) & (loc < buf_loc), loc, buf_loc)
+
+        def upd(big, new):
+            return big.at[rows, loc].set(new[:, 0].astype(big.dtype),
+                                         mode="drop")
+    elif per_slot:
         # one scatter row per batch element, each at its own slot; a row
         # whose slot is out of range (an idle serving slot stepped past the
         # buffer) is dropped by the scatter, never clamped onto live data
@@ -421,8 +471,22 @@ def attention_decode(p, x_t, cache: KVCache, pos, *, n_q, n_kv, head_dim,
     else:
         k = logical_shard(k, "batch", None, "kv_heads", None)
         v = logical_shard(v, "batch", None, "kv_heads", None)
-    k_eff = (k.astype(q.dtype) * k_scale.astype(q.dtype)) if int8_kv else k
-    v_eff = (v.astype(q.dtype) * v_scale.astype(q.dtype)) if int8_kv else v
+    if kv_sharded:
+        # reassemble the global ring buffer for the scores — an
+        # activation-sized gather (this step's K/V), never weights; shard
+        # s holds global slots [s*buf_loc, (s+1)*buf_loc), so the tiled
+        # gather reproduces the oracle's buffer ordering exactly
+        def _gather(a):
+            return jax.lax.all_gather(a, _ctx["axis"], axis=1, tiled=True)
+        k_full, v_full = _gather(k), _gather(v)
+        ks_full = _gather(k_scale) if int8_kv else k_scale
+        vs_full = _gather(v_scale) if int8_kv else v_scale
+    else:
+        k_full, v_full, ks_full, vs_full = k, v, k_scale, v_scale
+    k_eff = (k_full.astype(q.dtype) * ks_full.astype(q.dtype)) \
+        if int8_kv else k_full
+    v_eff = (v_full.astype(q.dtype) * vs_full.astype(q.dtype)) \
+        if int8_kv else v_full
     scores = _attn_scores(q, k_eff, 1.0 / math.sqrt(head_dim))  # (B,nkv,G,1,buf)
     idx = jnp.arange(buf)
     if per_slot:
@@ -539,9 +603,12 @@ def moe(p, x, *, n_experts, top_k, capacity_factor=1.25, activation="silu",
     """
     from repro.opts import enabled as _opt
     if _opt("moe_a2a"):
-        from repro.dist.sharding import current_mesh
+        from repro.dist.sharding import current_mesh, in_manual_axes
         mesh = current_mesh()
-        if mesh is not None and "model" in mesh.axis_names \
+        # never nest the a2a shard_map inside another shard_map body
+        # (k-sharded serving traces this under manual_axes)
+        if mesh is not None and not in_manual_axes() \
+                and "model" in mesh.axis_names \
                 and n_experts % mesh.shape["model"] == 0 \
                 and x.shape[1] % mesh.shape["model"] == 0:
             return _moe_a2a(p, x, mesh, n_experts=n_experts, top_k=top_k,

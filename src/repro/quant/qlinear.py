@@ -53,9 +53,10 @@ from repro.core.packing import (pack_codes_jnp, pack_int2_planar_jnp,
                                 pack_int3_planar_jnp, pack_int4_planar_jnp)
 
 __all__ = ["quantize_params_tree", "is_qweight", "is_packed_qweight",
-           "is_packed3_qweight", "is_packed2_qweight", "from_watersic",
-           "qweight_bytes", "leaf_format", "leaf_format_histogram",
-           "leaf_inventory", "serving_formats_from_plan"]
+           "is_packed3_qweight", "is_packed2_qweight", "is_kshard_qweight",
+           "from_watersic", "qweight_bytes", "leaf_format",
+           "leaf_format_histogram", "leaf_inventory",
+           "serving_formats_from_plan"]
 
 #: param-dict keys eligible for weight quantization (the big matmuls)
 _WEIGHT_KEYS = ("w",)
@@ -86,6 +87,13 @@ def is_packed_qweight(x) -> bool:
     """Packed-int4 leaf: uint8 planar payload in (…, out, in/2) orientation."""
     return is_qweight(x) and x["codes"].dtype == jnp.uint8 \
         and not is_packed3_qweight(x) and not is_packed2_qweight(x)
+
+
+def is_kshard_qweight(x) -> bool:
+    """In-feature-sharded serving leaf (serve/sharded.py): the ``kshard``
+    marker tags leaves whose codes/scales/escapes carry an explicit shard
+    axis (each entry one contiguous in-feature block, per-shard packed)."""
+    return is_qweight(x) and "kshard" in x
 
 
 def leaf_format(node) -> str:
@@ -308,6 +316,8 @@ def qweight_bytes(tree) -> Tuple[int, int]:
     for path, leaf in flat:
         keys = tuple(str(getattr(p, "key", getattr(p, "idx", p)))
                      for p in path)
+        if keys and keys[-1] == "kshard":
+            continue    # shard-count marker: metadata, not stored weights
         if "codes" in keys:
             qb += leaf.size
             if leaf.dtype == jnp.uint8:
@@ -370,23 +380,41 @@ def leaf_inventory(tree) -> list:
         if isinstance(node, dict):
             if is_qweight(node):
                 fmt = leaf_format(node)
-                n_in = int(node["s"].shape[-1])
+                if is_kshard_qweight(node):
+                    # sharded leaf: s is (…, S, k_loc); report the padded
+                    # global width S·k_loc plus the shard count so the
+                    # stdlib audits can recompute per-shard payload bytes
+                    shards = int(node["s"].shape[-2])
+                    n_in = shards * int(node["s"].shape[-1])
+                    stack = int(np.prod(node["s"].shape[:-2],
+                                        dtype=np.int64))
+                    cap = (shards * int(node["esc_row"].shape[-1])
+                           if "esc_row" in node else 0)
+                else:
+                    shards = 1
+                    n_in = int(node["s"].shape[-1])
+                    stack = int(np.prod(node["s"].shape[:-1],
+                                        dtype=np.int64))
+                    cap = (int(node["esc_row"].shape[-1])
+                           if "esc_row" in node else 0)
                 n_out = int(node["t"].shape[-1])
-                stack = int(np.prod(node["s"].shape[:-1], dtype=np.int64))
-                cap = (int(node["esc_row"].shape[-1])
-                       if "esc_row" in node else 0)
                 payload = int(node["codes"].size)  # uint8/int8: 1 B each
                 scale = int(node["s"].nbytes + node["t"].nbytes)
                 esc = int(sum(node[k].nbytes for k in
                               ("esc_row", "esc_col", "esc_dval")
                               if k in node))
-                records.append({
+                rec = {
                     "path": "/".join(path), "format": fmt, "in": n_in,
                     "out": n_out, "stack": stack, "esc_capacity": cap,
                     "payload_bytes": payload, "scale_bytes": scale,
-                    "esc_bytes": esc, "bytes": payload + scale + esc})
+                    "esc_bytes": esc, "bytes": payload + scale + esc}
+                if shards > 1:
+                    rec["shards"] = shards
+                records.append(rec)
                 return
             for k, v in node.items():
+                if k == "kshard":
+                    continue    # marker: excluded like in qweight_bytes
                 walk(v, path + (k,))
         elif isinstance(node, (list, tuple)):
             for i, v in enumerate(node):

@@ -945,7 +945,8 @@ class ContinuousEngine(_EngineBase):
 
     @classmethod
     def resume(cls, ckpt_dir: str, cfg: ArchConfig, params, *,
-               step: Optional[int] = None, **kwargs) -> "ContinuousEngine":
+               step: Optional[int] = None, cache_shardings=None,
+               **kwargs) -> "ContinuousEngine":
         """Rebuild an engine from the latest (or ``step``-th) snapshot.
 
         ``params`` must be the same serving tree the snapshotting engine
@@ -956,6 +957,13 @@ class ContinuousEngine(_EngineBase):
         resume (``time.monotonic`` is process-local, and a revived
         request should not be instantly expired for time the engine
         spent dead).
+
+        ``cache_shardings`` (optional) is a ``{"cache": ..., "last": ...}``
+        pytree of shardings for the restored state — the sharded-serving
+        path passes its mesh layout here so the cache lands directly on
+        the mesh.  Without it the cache restores UNCOMMITTED (a fresh
+        ``init_cache``-like placement): ``dist.checkpoint._place`` ignores
+        the accidental single-device commitment of a plain template leaf.
         """
         from repro.dist.checkpoint import read_manifest, restore_checkpoint
         manifest = read_manifest(ckpt_dir, step=step)
@@ -971,17 +979,10 @@ class ContinuousEngine(_EngineBase):
                 f"snapshot geometry (n_slots={em['n_slots']}, "
                 f"max_len={em['max_len']}) does not match the engine "
                 f"(n_slots={eng.n_slots}, max_len={eng.max_len})")
-        # host-array template: restore_checkpoint places leaves with the
-        # template's sharding, and the fresh engine's cache is committed
-        # to the default device — resuming under a multi-device mesh
-        # would pin the cache there and conflict with mesh-committed
-        # dispatch outputs.  Numpy leaves make the restored cache
-        # UNCOMMITTED (like a fresh init_cache), so the first dispatch
-        # is free to move it to the params' layout.
-        template = {"cache": jax.tree.map(np.asarray, eng.cache),
-                    "last": np.asarray(eng._last)}
+        template = {"cache": eng.cache, "last": np.asarray(eng._last)}
         state, _ = restore_checkpoint(ckpt_dir, template,
-                                      step=manifest["step"])
+                                      step=manifest["step"],
+                                      shardings=cache_shardings)
         eng.cache = state["cache"]
         eng._last = np.asarray(state["last"]).astype(np.int32)
 
