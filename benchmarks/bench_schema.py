@@ -1,0 +1,63 @@
+"""Shared envelope for the bench ``--json`` payloads (DESIGN.md §14).
+
+Every bench (serve_bench / plan_bench / kernels_bench) wraps its
+payload-specific keys in one versioned envelope so the committed
+``BENCH_*.json`` baselines form a comparable trajectory across commits:
+
+    {"schema_version": 1, "bench": "serve", "git_rev": "...",
+     "host": {"device_count": N, "platform": "cpu"}, ...payload...}
+
+``benchmarks/check_quality.py`` (stdlib-only) validates the envelope and
+gates quality/perf regressions against the stored baseline.  This module
+must import without the jax stack (the gate runs it stdlib-only), so the
+device probe is guarded.
+"""
+import os
+import subprocess
+
+BENCH_SCHEMA_VERSION = 1
+
+
+def git_rev() -> str:
+    """Short git revision of the working tree, or "unknown" outside git."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10)
+        rev = out.stdout.strip()
+        return rev if out.returncode == 0 and rev else "unknown"
+    except OSError:
+        return "unknown"
+
+
+def host_info() -> dict:
+    """Device count + platform when jax is importable, else a stub."""
+    try:
+        import jax
+        devs = jax.devices()
+        return {"device_count": len(devs), "platform": devs[0].platform}
+    except Exception:
+        return {"device_count": 0, "platform": "none"}
+
+
+def envelope(bench: str) -> dict:
+    """The shared header every bench merges into its --json payload."""
+    return {"schema_version": BENCH_SCHEMA_VERSION, "bench": bench,
+            "git_rev": git_rev(), "host": host_info()}
+
+
+def validate_envelope(payload: dict, bench: str = None) -> list:
+    """Return a list of problems (empty = valid). Stdlib-only."""
+    probs = []
+    if payload.get("schema_version") != BENCH_SCHEMA_VERSION:
+        probs.append(f"schema_version={payload.get('schema_version')!r}, "
+                     f"expected {BENCH_SCHEMA_VERSION}")
+    if bench is not None and payload.get("bench") != bench:
+        probs.append(f"bench={payload.get('bench')!r}, expected {bench!r}")
+    if not isinstance(payload.get("git_rev"), str):
+        probs.append("missing git_rev")
+    host = payload.get("host")
+    if not (isinstance(host, dict) and "device_count" in host):
+        probs.append("missing host.device_count")
+    return probs

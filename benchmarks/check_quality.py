@@ -1,0 +1,181 @@
+"""CI quality gate: drift verdicts, probe reconciliation, and the
+bench-history trajectory (DESIGN.md §14).
+
+Stdlib-only (no jax / no repro import) audit of a ``serve_bench.py
+--quick --quality --json`` artifact, optionally against the committed
+``benchmarks/BENCH_serve.json`` baseline:
+
+1. **Envelope**: the payload carries the shared bench envelope
+   (``bench_schema.py``): schema_version, bench id, git rev, host block.
+   ``--validate`` re-checks the envelope of any other bench artifact
+   (plan/kernels) without quality gating.
+
+2. **Drift verdicts**: the clean quality cell flagged NOTHING; the
+   seeded-chaos cell flagged BOTH the ``step_s`` (slow-step sleep) and
+   ``integrity`` (corrupt-payload detection) series.  Both verdicts are
+   deterministic by construction (absolute-threshold detectors, seeded
+   fault schedule).
+
+3. **Probe reconciliation**: per matrix, the live probe-measured output
+   discrepancy  mean_t‖x_t(Ŵ−W)‖²/N  must sit within a generous band of
+   the plan-side prediction  tr((Ŵ−W)ᵀΣ_calib(Ŵ−W))/N  — live greedy
+   traffic is NOT the calibration distribution, so the band checks the
+   estimator wiring (units, orientation, normalization), not statistical
+   equality.
+
+4. **Bench history** (``--baseline``): deterministic quantities must not
+   regress vs the stored trajectory — bytes/weight per ladder format
+   exact, the strict sub-byte byte-ladder ordering, clean-cell drift
+   silence, reconciliation band, and logits-MSE within a cross-platform
+   float band.  Wall-clock rows are reported, never gated.
+
+    python benchmarks/check_quality.py --bench b.json \
+        [--baseline benchmarks/BENCH_serve.json] \
+        [--validate plan.json --validate kernels.json]
+"""
+import argparse
+import json
+import math
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from bench_schema import validate_envelope  # noqa: E402
+
+#: measured/predicted band — wiring check, not distributional equality
+RATIO_LO, RATIO_HI = 0.05, 20.0
+#: cross-platform band for the deterministic-seed logits MSE vs baseline
+LOGITS_BAND = 3.0
+
+
+def _fail(msg):
+    raise SystemExit(f"check_quality: FAIL: {msg}")
+
+
+def check_envelope(payload, path, bench=None):
+    probs = validate_envelope(payload, bench=bench)
+    if probs:
+        _fail(f"{path}: bad envelope: {'; '.join(probs)}")
+    print(f"  envelope: {path}: bench={payload['bench']} "
+          f"schema=v{payload['schema_version']} rev={payload['git_rev']} "
+          f"devices={payload['host']['device_count']}")
+
+
+def check_drift(quality):
+    clean, chaotic = quality["clean"], quality["chaos"]
+    if clean["drift"]["n_flags"] != 0:
+        _fail(f"clean cell flagged drift: {clean['drift']}")
+    flagged = chaotic["drift"]["series"]
+    if flagged.get("step_s", 0) < 1:
+        _fail(f"chaos cell never flagged step_s: {flagged}")
+    if flagged.get("integrity", 0) < 1:
+        _fail(f"chaos cell never flagged integrity: {flagged}")
+    print(f"  drift: clean silent, chaos flagged "
+          f"step_s x{flagged['step_s']} integrity x{flagged['integrity']}")
+
+
+def check_reconciliation(quality):
+    n = 0
+    for cell in ("clean", "chaos"):
+        for row in quality[cell]["matrices"]:
+            if row.get("expected") in (None, 0):
+                continue
+            r = row["ratio"]
+            if r is None or not math.isfinite(r) \
+                    or not (RATIO_LO <= r <= RATIO_HI):
+                _fail(f"{cell}/{row['matrix']}: measured/predicted "
+                      f"distortion ratio {r} outside "
+                      f"[{RATIO_LO}, {RATIO_HI}]")
+            n += 1
+    if n == 0:
+        _fail("no probe row carried a calibration-predicted distortion — "
+              "was the monitor built without calib stats?")
+    print(f"  probes: {n} matrix reconciliations inside "
+          f"[{RATIO_LO}, {RATIO_HI}]")
+
+
+def check_slo(quality):
+    rows = quality["clean"]["slo"]
+    if not rows:
+        _fail("clean cell evaluated no SLOs (slo_every never hit?)")
+    by_name = {r["slo"]: r for r in rows}
+    for r in rows:
+        if not math.isfinite(r["burn_rate"]):
+            _fail(f"slo {r['slo']}: non-finite burn rate")
+    drop = by_name.get("drop_rate")
+    if drop is not None and not drop["ok"]:
+        _fail(f"clean cell violated the drop-rate SLO: {drop}")
+    viol = [r["slo"] for r in rows if not r["ok"]]
+    print(f"  slo: {len(rows)} objectives evaluated"
+          + (f" (latency violations, not gated: {viol})" if viol else
+             ", all ok"))
+
+
+def check_baseline(payload, base):
+    if base.get("schema_version") != payload.get("schema_version"):
+        _fail(f"baseline schema v{base.get('schema_version')} != "
+              f"current v{payload.get('schema_version')} — migrate "
+              f"BENCH_serve.json")
+    cur_l, base_l = payload["ladder"], base["ladder"]
+    for fmt in sorted(set(cur_l) & set(base_l)):
+        c, b = cur_l[fmt]["bytes_per_w"], base_l[fmt]["bytes_per_w"]
+        if c > b + 1e-9:
+            _fail(f"ladder {fmt}: bytes/weight regressed "
+                  f"{b:.6f} -> {c:.6f}")
+    order = ["int2_packed", "int3_packed", "int4_packed", "int8", "bf16"]
+    present = [f for f in order if f in cur_l]
+    vals = [cur_l[f]["bytes_per_w"] for f in present]
+    if vals != sorted(vals) or len(set(vals)) != len(vals):
+        _fail(f"byte ladder ordering broke: "
+              f"{dict(zip(present, vals))}")
+    bq, cq = base.get("quality"), payload.get("quality")
+    if bq and cq:
+        b_mse = bq["clean"]["logits_mse_mean"]
+        c_mse = cq["clean"]["logits_mse_mean"]
+        if b_mse and c_mse:
+            lo, hi = b_mse / LOGITS_BAND, b_mse * LOGITS_BAND
+            if not (lo <= c_mse <= hi) and c_mse > 1e-12:
+                _fail(f"clean logits MSE left the trajectory band: "
+                      f"baseline {b_mse:.3e}, current {c_mse:.3e} "
+                      f"(band {LOGITS_BAND}x)")
+    # wall clock: reported for the record, never gated
+    for fmt in sorted(set(cur_l) & set(base_l)):
+        print(f"  history: {fmt}: tok/s {base_l[fmt]['tok_s']:.0f} -> "
+              f"{cur_l[fmt]['tok_s']:.0f}, bytes/w "
+              f"{cur_l[fmt]['bytes_per_w']:.4f} (== baseline)")
+    print(f"  history: trajectory ok vs rev {base.get('git_rev')}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", required=True,
+                    help="serve_bench.py --quality --json artifact")
+    ap.add_argument("--baseline", default=None,
+                    help="committed BENCH_serve.json to gate the "
+                         "trajectory against")
+    ap.add_argument("--validate", action="append", default=[],
+                    metavar="PATH",
+                    help="extra bench artifact whose envelope must "
+                         "validate (repeatable; no quality gating)")
+    args = ap.parse_args(argv)
+    with open(args.bench) as f:
+        payload = json.load(f)
+    check_envelope(payload, args.bench, bench="serve")
+    for path in args.validate:
+        with open(path) as f:
+            check_envelope(json.load(f), path)
+    quality = payload.get("quality")
+    if not quality:
+        _fail(f"{args.bench} has no quality block — run serve_bench "
+              f"with --quality")
+    check_drift(quality)
+    check_reconciliation(quality)
+    check_slo(quality)
+    if args.baseline:
+        with open(args.baseline) as f:
+            check_baseline(payload, json.load(f))
+    print("check_quality: OK")
+
+
+if __name__ == "__main__":
+    main()

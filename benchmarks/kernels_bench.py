@@ -122,8 +122,22 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="small shapes / few reps (CI smoke)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the result rows in the shared bench "
+                         "envelope (CI artifact; bench_schema.py)")
     args = ap.parse_args()
     rows = []
     run(rows, quick=args.quick)
     for r in rows:
         print(",".join(str(x) for x in r))
+    if args.json:
+        import json
+        import os
+        import sys
+        sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+        from bench_schema import envelope  # shared --json header
+        payload = envelope("kernels")
+        payload["rows"] = [list(r) for r in rows]
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True, default=float)
+        print(f"wrote {args.json}")

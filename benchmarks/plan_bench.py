@@ -141,9 +141,14 @@ def main():
     run(rows, quick=args.quick)
     if args.json:
         import json
+        import os
+        import sys
+        sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+        from bench_schema import envelope  # shared --json header
+        payload = envelope("plan")
+        payload["rows"] = rows
         with open(args.json, "w") as f:
-            json.dump({"rows": rows}, f, indent=1, sort_keys=True,
-                      default=float)
+            json.dump(payload, f, indent=1, sort_keys=True, default=float)
         print(f"wrote {args.json}")
     print("plan_bench OK")
 

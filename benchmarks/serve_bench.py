@@ -31,6 +31,12 @@ token, and its overhead ratio is reported; an overload burst must walk
 the degradation ladder down (rung history reported) with every submitted
 request accounted finished-or-dropped exactly.
 
+Part 4 (``--quality``, DESIGN.md §14): clean vs seeded-chaos serving
+cells with the quality observatory attached — streamed Σ_X divergence,
+online distortion probes against the fp twin, drift/SLO verdicts — whose
+summaries ``benchmarks/check_quality.py`` gates against the committed
+``BENCH_serve.json`` trajectory.
+
 CPU wall-clock is NOT the TPU story (the dry-run roofline is); the bytes
 model is the hardware-portable claim.  The scheduler comparison is
 dispatch-count-structural, so it survives the backend change.
@@ -47,20 +53,26 @@ against check_bytes.py's layout accounting exactly.
 """
 import argparse
 import json
+import os
+import sys
 import time
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro import obs
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from bench_schema import envelope  # noqa: E402  (shared --json header)
+
+from repro import chaos, obs
 from repro.configs.base import ArchConfig
 from repro.dist.fault import RestartPolicy
 from repro.launch.serve import add_obs_flags, obs_export, obs_setup
 from repro.models import decode_chunk, decode_step, init_params, split_tree
 from repro.quant import leaf_inventory, quantize_params_tree, qweight_bytes
-from repro.serve import (ContinuousEngine, DegradePolicy, Request,
-                         ResilienceConfig, ServeEngine, build_bit_ladder)
+from repro.serve import (ContinuousEngine, DegradePolicy, QualityConfig,
+                         QualityMonitor, Request, ResilienceConfig,
+                         ServeEngine, build_bit_ladder)
 
 
 def _kernel_deltas(before, after):
@@ -319,7 +331,113 @@ def resilience_bench(rows_out, cfg, params, quick=False):
                         "submitted": submitted}}
 
 
-def run(rows_out, quick=False, mesh=False):
+# ---------------------------------------------------------------------------
+# Part 4 — quality observatory (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+
+def quality_bench(rows_out, cfg, params, quick=False, events_out=None):
+    """Two obs-enabled serving cells over the SAME packed-int4 tree and
+    workload, each with a :class:`QualityMonitor` attached: a clean run
+    (zero drift flags allowed) and a chaos run with seeded slow-step +
+    corrupt-payload faults (the drift detectors MUST flag both the
+    ``step_s`` and ``integrity`` series).  Each cell's monitor summary —
+    probe-measured vs plan-predicted per-matrix distortion, drift
+    verdicts, SLO burn rates — lands in the JSON under ``quality``;
+    ``benchmarks/check_quality.py`` gates the verdicts and the
+    measured/predicted reconciliation band.
+
+    Runs inside ``obs.scoped`` so the always-on sampling cannot disturb
+    the surrounding run's counters (check_obs.py reconciles those
+    EXACTLY against the layout accounting).
+    """
+    from repro.obs.drift import Threshold
+    from repro.plan.sensitivity import collect_sigma_x
+
+    rng = np.random.default_rng(3)
+    n_req, plen, budget = 4, 8, (16 if quick else 24)
+    prompts = [rng.integers(0, cfg.vocab, plen).astype(np.int32)
+               for _ in range(n_req)]
+    calib = [jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)), jnp.int32)
+             for _ in range(2)]
+    acc = collect_sigma_x(cfg, params, calib)
+    qtree = quantize_params_tree(params, nbits=4, packed=True)
+    max_len = plen + budget + 2
+    # one shared pair of jitted decode fns: the warmup pass below absorbs
+    # every compile, so cell step times measure dispatch, not compiles —
+    # the margin the absolute step_s threshold detector relies on
+    shared = dict(
+        decode_fn=jax.jit(lambda p, c, t: decode_step(cfg, p, c, t)),
+        decode_chunk_fn=jax.jit(lambda p, c, tk: decode_chunk(cfg, p, c,
+                                                              tk)))
+    qcfg = QualityConfig(
+        sigma_every=2, probe_every=4, slo_every=8,
+        # absolute-threshold step detector: a clean warmed step on this
+        # model is O(ms); the chaos sleep is 0.5 s — two orders of margin
+        # on both sides keeps BOTH cell verdicts deterministic
+        detectors={"step_s": lambda: Threshold(limit=0.25),
+                   "integrity": lambda: Threshold(limit=0.0)},
+        track_sigma_drift=False)    # live traffic != calib tokens by design
+
+    def cell(plan):
+        with obs.scoped(enable_obs=True):
+            mon = QualityMonitor(cfg, params, calib=acc, config=qcfg)
+            eng = ContinuousEngine(
+                cfg, qtree, n_slots=n_req, max_len=max_len,
+                prefill_chunk=4, quality=mon,
+                resilience=ResilienceConfig(integrity_every=1), **shared)
+            for i, p in enumerate(prompts):
+                eng.submit(Request(rid=i, prompt=p.copy(),
+                                   max_new_tokens=budget))
+            if plan is not None:
+                with chaos.active(plan):
+                    done = eng.run_until_done()
+            else:
+                done = eng.run_until_done()
+            assert len(done) == n_req and not eng.dropped
+            summary = mon.summary()
+            summary["out"] = {r.rid: list(map(int, r.out_tokens))
+                              for r in done}
+            if plan is not None and events_out:
+                obs.write_jsonl(events_out)
+            return summary
+
+    # warm every decode/prefill shape fault-free before either timed cell
+    warm = ContinuousEngine(cfg, qtree, n_slots=n_req, max_len=max_len,
+                            prefill_chunk=4, **shared)
+    for i, p in enumerate(prompts):
+        warm.submit(Request(rid=i, prompt=p.copy(), max_new_tokens=budget))
+    warm.run_until_done()
+
+    clean = cell(None)
+    sp = chaos.seeded_plan("slow-step", seed=0, horizon=12, n_faults=2,
+                           first=2, delay_s=0.5)
+    cp = chaos.seeded_plan("corrupt-payload", seed=0, horizon=12,
+                           n_faults=2, first=2, n_bytes=3)
+    chaotic = cell(chaos.ChaosPlan(seed=0, specs=sp.specs + cp.specs))
+
+    # the chaos cell serves the same greedy streams (faults heal), the
+    # clean cell stays silent, and the chaos cell flags BOTH series
+    assert chaotic["out"] == clean["out"], \
+        "chaos cell changed token streams despite healing"
+    assert clean["drift"]["n_flags"] == 0, \
+        f"clean cell flagged drift: {clean['drift']}"
+    flagged = chaotic["drift"]["series"]
+    assert flagged.get("step_s", 0) >= 1, f"slow-step not flagged: {flagged}"
+    assert flagged.get("integrity", 0) >= 1, \
+        f"corrupt-payload not flagged: {flagged}"
+    rows_out.append(("quality/clean", clean["n_probes"],
+                     f"ticks={clean['ticks']};flags=0;"
+                     f"logits_mse={clean['logits_mse_mean']:.3e}"))
+    rows_out.append(("quality/chaos", chaotic["drift"]["n_flags"],
+                     f"ticks={chaotic['ticks']};"
+                     f"step_s_flags={flagged.get('step_s', 0)};"
+                     f"integrity_flags={flagged.get('integrity', 0)}"))
+    return {"clean": clean, "chaos": chaotic}
+
+
+def run(rows_out, quick=False, mesh=False, quality=False,
+        quality_events_out=None):
     cfg = ArchConfig(name="bench", family="dense",
                      n_layers=2 if quick else 4,
                      d_model=128 if quick else 256, n_heads=4, n_kv=4,
@@ -370,15 +488,21 @@ def run(rows_out, quick=False, mesh=False):
     results["sched"] = scheduler_compare(rows_out, cfg, params, quick=quick)
     results["resilience"] = resilience_bench(rows_out, cfg, params,
                                              quick=quick)
+    if quality:
+        results["quality"] = quality_bench(rows_out, cfg, params,
+                                           quick=quick,
+                                           events_out=quality_events_out)
     return results
 
 
 def _json_payload(rows, results):
-    """JSON-able snapshot: ladder formats carry the engine-reported bytes
-    and the per-leaf storage inventory check_bytes.py audits."""
+    """JSON-able snapshot in the shared bench envelope (bench_schema.py):
+    ladder formats carry the engine-reported bytes and the per-leaf
+    storage inventory check_bytes.py audits; an optional ``quality``
+    block carries the monitor summaries check_quality.py gates."""
     ladder = {}
     for name, res in results.items():
-        if name in ("sched", "resilience"):
+        if name in ("sched", "resilience", "quality"):
             continue
         ladder[name] = {
             "tok_s": res["tok_s"], "tokens": res["tokens"],
@@ -388,9 +512,13 @@ def _json_payload(rows, results):
             "obs_kernel": res["obs_kernel"],
             "dispatches": res["dispatches"],
             "inventory": res["inventory"]}
-    return {"rows": [list(r) for r in rows], "ladder": ladder,
-            "sched": {"n_slots": results["sched"]["n_slots"]},
-            "resilience": results["resilience"]}
+    payload = envelope("serve")
+    payload.update({"rows": [list(r) for r in rows], "ladder": ladder,
+                    "sched": {"n_slots": results["sched"]["n_slots"]},
+                    "resilience": results["resilience"]})
+    if "quality" in results:
+        payload["quality"] = results["quality"]
+    return payload
 
 
 if __name__ == "__main__":
@@ -404,16 +532,25 @@ if __name__ == "__main__":
                     help="also serve every format k-sharded over the full "
                          "model axis, asserted bit-identical to the "
                          "single-device oracle (DESIGN.md §13)")
+    ap.add_argument("--quality", action="store_true",
+                    help="also run the quality-observatory cells (clean + "
+                         "seeded-chaos, DESIGN.md §14) and embed the "
+                         "monitor summaries for check_quality.py")
+    ap.add_argument("--quality-events-out", metavar="PATH", default=None,
+                    help="JSONL metric log of the chaos quality cell "
+                         "(input to launch/summarize.py --metrics)")
     add_obs_flags(ap)
     args = ap.parse_args()
     obs_setup(args)
     rows = []
-    results = run(rows, quick=args.quick, mesh=args.mesh)
+    results = run(rows, quick=args.quick, mesh=args.mesh,
+                  quality=args.quality,
+                  quality_events_out=args.quality_events_out)
     for r in rows:
         print(",".join(str(x) for x in r))
     if args.json:
         with open(args.json, "w") as f:
             json.dump(_json_payload(rows, results), f, indent=1,
-                      sort_keys=True)
+                      sort_keys=True, default=float)
         print(f"wrote {args.json}")
     obs_export(args)

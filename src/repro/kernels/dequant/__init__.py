@@ -5,12 +5,13 @@ from .ops import (dequant_matmul, dequant_matmul_packed,
                   dequant_matmul_packed_xla, dequant_matmul_sharded,
                   dequant_matmul_xla, payload_nbits)
 from .ref import (dequant_matmul_packed_ref, dequant_matmul_ref,
-                  dequantize_ref, unpack_payload_ref)
+                  dequantize_leaf_ref, dequantize_ref, unpack_payload_ref)
 
 __all__ = ["dequant_matmul_pallas", "dequant_matmul_packed_pallas",
            "dequant_matmul", "dequant_matmul_packed", "dequant_matmul_xla",
            "dequant_matmul_packed2", "dequant_matmul_packed2_xla",
            "dequant_matmul_packed3", "dequant_matmul_packed3_xla",
            "dequant_matmul_packed_xla", "dequant_matmul_packed_ref",
-           "dequant_matmul_ref", "dequant_matmul_sharded", "dequantize_ref",
+           "dequant_matmul_ref", "dequant_matmul_sharded",
+           "dequantize_leaf_ref", "dequantize_ref",
            "unpack_payload_ref", "payload_nbits"]

@@ -21,7 +21,7 @@ from repro.core.packing import (unpack_int2_planar_jnp,
                                 unpack_int4_planar_jnp)
 
 __all__ = ["dequant_matmul_ref", "dequantize_ref", "unpack_payload_ref",
-           "dequant_matmul_packed_ref"]
+           "dequant_matmul_packed_ref", "dequantize_leaf_ref"]
 
 
 def dequantize_ref(z, col_scale, row_scale, dtype=jnp.float32):
@@ -46,6 +46,68 @@ def unpack_payload_ref(payload, nbits: int) -> jnp.ndarray:
     if nbits == 2:
         return unpack_int2_planar_jnp(payload)
     raise ValueError(f"no packed payload for nbits={nbits}")
+
+
+def _payload_nbits_ref(payload) -> int:
+    """nbits off the planar payload shape (ops.payload_nbits's logic,
+    duplicated locally: ops.py imports this module, not vice versa)."""
+    if payload.ndim >= 3 and payload.shape[-2] == 3:
+        return 3
+    if payload.ndim >= 3 and payload.shape[-2] == 1:
+        return 2
+    return 4
+
+
+def dequantize_leaf_ref(leaf, index=None):
+    """Materialize one served leaf's EFFECTIVE f32 weight as (in, out).
+
+    The quality observatory's probe twin (DESIGN.md §14): given any
+    serving-tree leaf — raw fp array, int8/int4 code matrix, or a planar
+    packed uint8 payload with escape-COO corrections — return the exact
+    dense weight the serving matmul realizes, so measured output
+    discrepancy ``‖x(Ŵ−W)‖²`` reconciles against the plan's predicted
+    per-matrix distortion.  ``index`` selects one matrix out of a
+    stacked leaf (the layer axis of a split tree).  k-sharded leaves are
+    refused: probe on the unsharded tree (the mesh serves the same codes
+    by construction — tests/test_mesh_serving.py pins bit-identity).
+
+    Orientation note: int8/int4 code matrices are stored (…, in, out)
+    with ``Ŵ[i,o] = s[i]·Z[i,o]·t[o]``; packed payloads store
+    (…, out, [plane,] kg) with escapes indexed (row=out, col=in) — both
+    normalize to the raw leaf's (in, out) here.
+    """
+    import numpy as np
+    if not (isinstance(leaf, dict) and "codes" in leaf):
+        w = np.asarray(jnp.asarray(leaf).astype(jnp.float32))
+        return w if index is None else w[index]
+    if "kshard" in leaf:
+        raise ValueError("dequantize_leaf_ref: probe the unsharded tree, "
+                         "not a k-sharded leaf")
+    codes, s, t = leaf["codes"], leaf["s"], leaf["t"]
+    esc = None
+    if "esc_row" in leaf:
+        esc = (leaf["esc_row"], leaf["esc_col"], leaf["esc_dval"])
+    if index is not None:
+        codes, s, t = codes[index], s[index], t[index]
+        if esc is not None:
+            esc = tuple(e[index] for e in esc)
+    s = np.asarray(s, np.float32)
+    t = np.asarray(t, np.float32)
+    if s.ndim != 1:
+        raise ValueError("dequantize_leaf_ref wants one matrix — pass "
+                         f"index for stacked leaves (s shape {s.shape})")
+    if codes.dtype == jnp.uint8:                       # packed planar
+        nbits = _payload_nbits_ref(codes)
+        z = np.asarray(unpack_payload_ref(jnp.asarray(codes), nbits),
+                       np.float32)[..., :s.shape[0]]   # (out, in)
+        if esc is not None and esc[0].shape[-1]:
+            er = np.asarray(esc[0], np.int64)
+            ec = np.asarray(esc[1], np.int64)
+            ev = np.asarray(esc[2], np.float32)
+            np.add.at(z, (er, ec), ev)                 # true − clipped code
+        return (t[:, None] * z * s[None, :]).T         # → (in, out)
+    zf = np.asarray(jnp.asarray(codes).astype(jnp.float32))  # (in, out)
+    return s[:, None] * zf * t[None, :]
 
 
 @functools.partial(jax.jit, static_argnames=("nbits",))

@@ -30,6 +30,7 @@ benchmarks/check_obs.py).
 """
 from __future__ import annotations
 
+import contextlib
 import os
 from typing import Dict
 
@@ -38,6 +39,7 @@ from .trace import NULL_SPAN, Tracer
 
 __all__ = ["Counter", "Gauge", "Histogram", "Registry", "Tracer",
            "enabled", "enable", "disable", "reset", "registry", "tracer",
+           "scoped",
            "span", "complete", "instant", "counter", "gauge", "histogram",
            "counters_snapshot", "prometheus_text", "jsonl_lines",
            "write_trace", "write_prometheus", "write_jsonl"]
@@ -92,6 +94,28 @@ def registry() -> Registry:
 
 def tracer() -> Tracer:
     return _tracer
+
+
+@contextlib.contextmanager
+def scoped(*, enable_obs: bool = False):
+    """Swap in a fresh registry + tracer for the body, restore on exit.
+
+    An isolated measurement scope: a benchmark section that must not
+    pollute the surrounding run's counters (e.g. serve_bench's quality
+    cells run obs-enabled even when the ladder runs obs-off, and the
+    obs-smoke gate's EXACT HBM reconciliation would otherwise see their
+    traffic).  The enabled flag is saved/restored too; ``enable_obs``
+    turns recording on inside the scope.  Yields ``(registry, tracer)``.
+    """
+    global _registry, _tracer, _enabled
+    saved = (_registry, _tracer, _enabled)
+    _registry, _tracer = Registry(), Tracer()
+    if enable_obs:
+        _enabled = True
+    try:
+        yield _registry, _tracer
+    finally:
+        _registry, _tracer, _enabled = saved
 
 
 # -- recording facade (each helper no-ops when disabled) --------------------

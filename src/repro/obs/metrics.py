@@ -153,6 +153,22 @@ class Histogram:
         idx = min(len(s) - 1, max(0, round(q * (len(s) - 1))))
         return s[idx]
 
+    def sample(self) -> List[float]:
+        """Copy of the current (exact or reservoir) sample buffer."""
+        with self._lock:
+            return list(self._sample)
+
+    def fraction_above(self, threshold: float) -> float:
+        """Estimated fraction of observations strictly above ``threshold``
+        (exact while in exact mode; reservoir-unbiased after).  0.0 on an
+        empty histogram — no traffic violates no objective (the SLO
+        burn-rate convention, obs/slo.py)."""
+        with self._lock:
+            if not self._sample:
+                return 0.0
+            over = sum(1 for v in self._sample if v > threshold)
+            return over / len(self._sample)
+
     def summary(self, quantiles=(0.5, 0.9, 0.99)) -> Dict[str, object]:
         return {
             "count": self.count, "sum": self.sum,

@@ -46,7 +46,7 @@ from .calibrate import (StatsAccumulator, accumulate_stats,
                         _attention_with_probs)
 from repro.models.transformer import _attn_kwargs
 
-__all__ = ["PTQConfig", "quantize_model", "model_ppl"]
+__all__ = ["PTQConfig", "quantize_model", "model_ppl", "matrix_tap_map"]
 
 _BLOCK_MATS = [  # (param path inside layer, tap key, is down-projection)
     (("attn", "wq"), "x_attn", False),
@@ -107,6 +107,28 @@ def _mats_for(cfg, params):
         # keep w_out last (depends on hidden tap)
         mats.sort(key=lambda m: m[0][1] == "w_out")
     return mats
+
+
+def matrix_tap_map(cfg, params) -> List[Dict]:
+    """Public matrix ↔ activation-tap vocabulary for one model.
+
+    One record per (layer, block matrix): the plan/budget ``name``
+    ("L{l}/attn/wq"), the param ``path`` inside a layer, the calibration
+    ``tap`` feeding that matrix (quant/calibrate's tap names), and the
+    ``sigma_key`` of its Σ_X in a StatsAccumulator.  This is the same
+    mapping the PTQ pipeline and plan/sensitivity use internally — made
+    public so live consumers (the serve-side quality observatory,
+    DESIGN.md §14) key streamed covariance and distortion probes in the
+    identical vocabulary.  Dense family only on the MLP side (MoE layers
+    expose per-expert buffers instead; attn matrices are still listed).
+    """
+    out: List[Dict] = []
+    for l in range(_layer_count(params)):
+        for path, tap, is_down in _mats_for(cfg, params):
+            out.append({"name": f"L{l}/{'/'.join(path)}", "layer": l,
+                        "path": path, "tap": tap,
+                        "sigma_key": f"L{l}/{tap}/xx", "down": is_down})
+    return out
 
 
 def _quantize_matrix(ptq: PTQConfig, w_alg, stats: CalibStats, target: float

@@ -1,5 +1,6 @@
 from .engine import (ContinuousEngine, Request, RoundStats, ServeEngine,
                      StepStats)
+from .quality import QualityConfig, QualityMonitor
 from .resilience import (DegradePolicy, EngineStalledError, PayloadGuard,
                          ResilienceConfig, SlowStepDetector, build_bit_ladder)
 from .sharded import (build_sharded_decode_fns, cache_pspecs,
@@ -7,7 +8,8 @@ from .sharded import (build_sharded_decode_fns, cache_pspecs,
                       shard_params_tree)
 
 __all__ = ["ContinuousEngine", "Request", "RoundStats", "ServeEngine",
-           "StepStats", "DegradePolicy", "EngineStalledError", "PayloadGuard",
+           "StepStats", "QualityConfig", "QualityMonitor",
+           "DegradePolicy", "EngineStalledError", "PayloadGuard",
            "ResilienceConfig", "SlowStepDetector", "build_bit_ladder",
            "build_sharded_decode_fns", "cache_pspecs", "integer_allgathers",
            "lower_decode_hlo", "params_pspecs", "shard_params_tree"]

@@ -459,13 +459,15 @@ class ServeEngine(_EngineBase):
                  decode_fn: Optional[Callable] = None,
                  prefill_chunk: Optional[int] = None,
                  decode_chunk_fn: Optional[Callable] = None,
-                 resilience: Optional[ResilienceConfig] = None):
+                 resilience: Optional[ResilienceConfig] = None,
+                 quality=None):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
         self.cache_dtype = cache_dtype
         self.prefill_chunk = prefill_chunk
+        self._quality = quality          # optional serve.quality monitor
         self.queue: deque[Request] = deque()
         self.round_stats: List[RoundStats] = []
         self._init_resilience(resilience)   # may swap params to rung 0
@@ -586,6 +588,11 @@ class ServeEngine(_EngineBase):
         for r in batch:
             r.done = True
         self._observe_step_time(t2 - t0)
+        if self._quality is not None and obs.enabled():
+            # quality observatory sampling (DESIGN.md §14) — reached only
+            # with obs on AND a monitor attached, so the default serving
+            # path stays byte-identical
+            self._quality.observe_step(self, t2 - t0, batch)
         return batch
 
     def run_until_done(self, max_rounds: int = 1000) -> List[Request]:
@@ -626,13 +633,15 @@ class ContinuousEngine(_EngineBase):
                  prefill_chunk: Optional[int] = None,
                  decode_chunk_fn: Optional[Callable] = None,
                  reset_on_evict: bool = False,
-                 resilience: Optional[ResilienceConfig] = None):
+                 resilience: Optional[ResilienceConfig] = None,
+                 quality=None):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
         self.cache_dtype = cache_dtype
         self.prefill_chunk = prefill_chunk
+        self._quality = quality          # optional serve.quality monitor
         self.reset_on_evict = reset_on_evict
         self.queue: deque[Request] = deque()
         self.step_stats: List[StepStats] = []
@@ -888,6 +897,11 @@ class ContinuousEngine(_EngineBase):
             if active:
                 record_weight_traffic(self._format_bytes(), 1)
         self._observe_step_time(t_end - t0)
+        if self._quality is not None and obs.enabled():
+            # quality observatory sampling (DESIGN.md §14) — reached only
+            # with obs on AND a monitor attached, so the default serving
+            # path stays byte-identical
+            self._quality.observe_step(self, t_end - t0, self.slots)
         res = self.resilience
         if (res is not None and res.snapshot_every and res.snapshot_dir
                 and self._tick % res.snapshot_every == 0):

@@ -42,11 +42,14 @@ from __future__ import annotations
 
 from typing import Any, Dict, List, Optional, Tuple
 
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import obs
 from repro.core.packing import (shard_planar_codes_jnp, unpack_int2_planar_jnp,
                                 unpack_int3_planar_jnp, unpack_int4_planar_jnp)
 from repro.dist.sharding import manual_axes, shard_map
@@ -302,6 +305,7 @@ def build_sharded_decode_fns(cfg, params, mesh, *, axis_name: str = "model"):
                    tok.shape)
             hit = compiled.get(key)
             if hit is None:
+                t0 = time.perf_counter()
                 cspecs, cache_sharded = cache_pspecs(
                     cache, axis_name=axis_name, shards=shards)
 
@@ -315,6 +319,18 @@ def build_sharded_decode_fns(cfg, params, mesh, *, axis_name: str = "model"):
                     in_specs=(pspecs, cspecs, P()),
                     out_specs=(P(), cspecs),
                     check_vma=False))
+                if obs.enabled():
+                    # mesh span/metric parity with the single-device
+                    # engines (DESIGN.md §14): trace-building cost on a
+                    # cache miss + a per-shape compile counter
+                    obs.complete("serve.mesh.compile", t0,
+                                 time.perf_counter(), tag=tag,
+                                 shards=shards, tok_shape=list(tok.shape))
+                    obs.counter("repro_serve_mesh_compile_total",
+                                tag=tag).inc()
+            if obs.enabled():
+                obs.counter("repro_serve_mesh_dispatch_total",
+                            tag=tag, shards=str(shards)).inc()
             return hit(p, cache, tok)
         return call
 

@@ -93,6 +93,39 @@ def test_histogram_reservoir_deterministic():
     assert fill() == fill()
 
 
+def test_histogram_quantile_empty_returns_none():
+    h = Registry().histogram("repro_empty_seconds")
+    assert h.quantile(0.5) is None
+    assert h.quantile(0.0) is None and h.quantile(1.0) is None
+    assert h.sample() == []
+    assert h.fraction_above(0.0) == 0.0
+
+
+def test_histogram_fraction_above():
+    h = Registry().histogram("repro_fa_seconds")
+    for v in (1.0, 2.0, 3.0, 4.0):
+        h.observe(v)
+    assert h.fraction_above(2.0) == 0.5       # strictly above
+    assert h.fraction_above(0.0) == 1.0
+    assert h.fraction_above(4.0) == 0.0
+
+
+def test_counters_snapshot_prefix_filtering():
+    reg = Registry()
+    reg.counter("repro_kernel_hbm_bytes_total", format="int8").inc(7)
+    reg.counter("repro_serve_finished_total").inc(2)
+    reg.gauge("repro_kernel_depth").set(9)    # gauges snapshot too
+    reg.histogram("repro_kernel_lat_seconds").observe(1.0)   # hists never
+    assert reg.counters_snapshot("repro_kernel_") == {
+        'repro_kernel_hbm_bytes_total{format="int8"}': 7.0,
+        "repro_kernel_depth": 9.0}
+    assert reg.counters_snapshot("repro_nope_") == {}
+    assert sorted(reg.counters_snapshot()) == [
+        "repro_kernel_depth",
+        'repro_kernel_hbm_bytes_total{format="int8"}',
+        "repro_serve_finished_total"]
+
+
 # ---------------------------------------------------------------------------
 # exporters
 # ---------------------------------------------------------------------------
@@ -181,6 +214,32 @@ def test_enable_records_then_reset_clears():
     obs.reset()
     assert obs.counters_snapshot() == {}
     assert not obs.tracer().to_chrome()["traceEvents"]
+
+
+def test_scoped_isolates_registry_and_restores():
+    obs.enable()
+    obs.counter("repro_outer_total").inc(3)
+    with obs.scoped(enable_obs=True) as (reg, tracer):
+        assert obs.enabled()
+        obs.counter("repro_inner_total").inc()
+        with obs.span("serve.scoped"):
+            pass
+        assert obs.counters_snapshot() == {"repro_inner_total": 1.0}
+        assert reg.counters_snapshot() == {"repro_inner_total": 1.0}
+        assert tracer.to_chrome()["traceEvents"]
+    # outer registry untouched by everything recorded inside the scope
+    assert obs.counters_snapshot() == {"repro_outer_total": 3.0}
+    names = [e["name"] for e in obs.tracer().to_chrome()["traceEvents"]]
+    assert "serve.scoped" not in names
+
+
+def test_scoped_enables_without_leaking_enabled_state():
+    assert not obs.enabled()
+    with obs.scoped(enable_obs=True):
+        assert obs.enabled()
+        obs.counter("repro_tmp_total").inc()
+    assert not obs.enabled()
+    assert obs.counters_snapshot() == {}
 
 
 def test_disabled_span_overhead_is_a_function_call():

@@ -1,0 +1,400 @@
+"""Quality observatory (DESIGN.md §14): drift detectors, SLO burn rates,
+streamed Σ_X estimators, the reference dequantizer, and the engine-side
+QualityMonitor integration.
+
+The serving-path contract mirrors tests/test_obs_integration.py: with
+obs disabled an engine with a monitor ATTACHED emits byte-identical
+streams and never calls into the monitor; with obs enabled the sampled
+shadow path records sigma-divergence gauges, distortion-probe
+histograms, and deterministic drift verdicts (a seeded corrupt-payload
+chaos run must flag the integrity series; a clean run must not flag any
+deterministic series).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro import chaos, obs
+from repro.configs.base import ArchConfig
+from repro.dist.fault import RestartPolicy
+from repro.kernels.dequant import dequantize_leaf_ref
+from repro.models import init_params, split_tree
+from repro.obs.drift import Cusum, DriftMonitor, PageHinkley, Threshold
+from repro.obs.metrics import Registry
+from repro.obs.slo import SloSpec, default_slos, evaluate_slos
+from repro.obs.streamsig import (SigmaTracker, StreamingSigma,
+                                 frobenius_shift, spectrum_shift,
+                                 top_eig_shift)
+from repro.quant import quantize_params_tree
+from repro.quant.pipeline import matrix_tap_map
+from repro.quant.qlinear import is_qweight
+from repro.serve import (ContinuousEngine, QualityConfig, QualityMonitor,
+                         Request, ResilienceConfig, ServeEngine)
+
+CFG = ArchConfig(name="q", family="dense", n_layers=2, d_model=32,
+                 n_heads=2, n_kv=2, d_ff=64, vocab=64, head_dim=16)
+
+
+@pytest.fixture(autouse=True)
+def _isolated_obs():
+    obs.disable()
+    obs.reset()
+    yield
+    obs.disable()
+    obs.reset()
+
+
+def _params(seed=0):
+    params, _ = split_tree(init_params(CFG, jax.random.PRNGKey(seed)))
+    return params
+
+
+def _prompts(n=3, plen=6, seed=2):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, CFG.vocab, plen).astype(np.int32)
+            for _ in range(n)]
+
+
+def _calib(seed=4, n=2):
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    from repro.plan.sensitivity import collect_sigma_x
+    batches = [jnp.asarray(rng.integers(0, CFG.vocab, (2, 12)), jnp.int32)
+               for _ in range(n)]
+    return collect_sigma_x(CFG, _params(), batches)
+
+
+# ---------------------------------------------------------------------------
+# drift detectors (obs/drift.py)
+# ---------------------------------------------------------------------------
+
+
+def test_page_hinkley_silent_on_stationary_flags_on_shift():
+    d = PageHinkley(delta=0.5, lam=8.0, burn_in=8)
+    assert not any(d.update(0.1) for _ in range(40))
+    flags = [d.update(1.0) for _ in range(10)]
+    assert any(flags), "10x sustained shift never flagged"
+
+
+def test_cusum_flags_sustained_shift_only():
+    d = Cusum(k=0.5, h=2.0, burn_in=4)
+    assert not any(d.update(1.0) for _ in range(20))
+    # a single outlier must not trip a CUSUM tuned for sustained shifts
+    assert not d.update(2.0)
+    assert not any(d.update(1.0) for _ in range(10))
+    assert any(d.update(2.0) for _ in range(10))
+
+
+def test_threshold_detector():
+    d = Threshold(limit=0.25)
+    assert not d.update(0.25)                  # strictly above
+    assert d.update(0.26)
+    assert d.n == 2
+
+
+def test_drift_monitor_series_keyed_and_deterministic():
+    def build():
+        m = DriftMonitor(detectors={"integrity": lambda: Threshold(0.0)},
+                         default=lambda: PageHinkley(delta=0.5, lam=4.0,
+                                                     burn_in=4))
+        for i in range(30):
+            m.observe("step_s", 0.01 if i < 20 else 0.5)
+            m.observe("integrity", 0.0 if i != 25 else 1.0)
+        return [(f.series, f.index, f.value) for f in m.flags]
+    a, b = build(), build()
+    assert a == b, "identical streams produced different flag records"
+    series = {s for s, _, _ in a}
+    assert series == {"step_s", "integrity"}
+    m = DriftMonitor(detectors={"integrity": lambda: Threshold(0.0)})
+    m.observe("integrity", 1.0)
+    assert m.flagged("integrity") and not m.flagged("other")
+    s = m.summary()
+    assert s["n_flags"] == 1 and s["series"] == {"integrity": 1}
+
+
+# ---------------------------------------------------------------------------
+# SLO burn rates (obs/slo.py)
+# ---------------------------------------------------------------------------
+
+
+def test_slo_quantile_burn_rate():
+    reg = Registry()
+    h = reg.histogram("repro_serve_ttft_seconds", engine="continuous")
+    for _ in range(98):
+        h.observe(0.1)
+    h.observe(0.9)
+    h.observe(0.9)
+    spec = SloSpec(name="ttft_p99", kind="quantile",
+                   metric="repro_serve_ttft_seconds", objective=0.5,
+                   quantile=0.99)
+    (row,) = evaluate_slos([spec], reg, emit=False)
+    # 2/100 over the objective against a 1% violation budget: burn 2.0
+    assert row["burn_rate"] == pytest.approx(2.0)
+    assert not row["ok"]
+
+
+def test_slo_ratio_burn_rate_and_empty_registry():
+    reg = Registry()
+    reg.counter("repro_serve_dropped_total").inc(2)
+    reg.counter("repro_serve_finished_total").inc(98)
+    spec = SloSpec(name="drop_rate", kind="ratio",
+                   metric="repro_serve_dropped_total",
+                   good_metric="repro_serve_finished_total",
+                   objective=0.01)
+    (row,) = evaluate_slos([spec], reg, emit=False)
+    assert row["actual"] == pytest.approx(0.02)
+    assert row["burn_rate"] == pytest.approx(2.0) and not row["ok"]
+    # an empty registry yields a vacuous ok verdict, never a crash
+    rows = evaluate_slos(default_slos(), Registry(), emit=False)
+    assert all(r["ok"] and r["actual"] is None for r in rows)
+
+
+def test_slo_emits_gauges_when_enabled():
+    obs.enable()
+    obs.histogram("repro_serve_ttft_seconds").observe(0.01)
+    rows = evaluate_slos(default_slos())
+    assert rows and all(r["ok"] for r in rows)
+    snap = obs.counters_snapshot("repro_slo_")
+    assert snap['repro_slo_ok{slo="ttft_p99"}'] == 1.0
+    assert 'repro_slo_burn_rate{slo="drop_rate"}' in snap
+
+
+# ---------------------------------------------------------------------------
+# streamed Σ_X (obs/streamsig.py)
+# ---------------------------------------------------------------------------
+
+
+def test_streaming_sigma_matches_batch_second_moment():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((500, 6))
+    est = StreamingSigma(6)
+    for chunk in np.array_split(x, 7):          # uneven chunk merges
+        est.update(chunk)
+    direct = x.T @ x / x.shape[0]               # uncentered E[xxᵀ]
+    assert est.n == 500
+    np.testing.assert_allclose(est.sigma, direct, rtol=1e-10, atol=1e-12)
+    assert frobenius_shift(est.sigma, direct) < 1e-10
+    assert top_eig_shift(est.spectrum(),
+                         np.linalg.eigvalsh(direct)) < 1e-8
+
+
+def test_streaming_sigma_chunking_invariance():
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((64, 4))
+    one = StreamingSigma(4)
+    one.update(x)
+    many = StreamingSigma(4)
+    for row in x:
+        many.update(row[None, :])
+    np.testing.assert_allclose(one.sigma, many.sigma, rtol=1e-9, atol=1e-12)
+
+
+def test_sigma_tracker_and_shift_metrics():
+    tr = SigmaTracker()
+    rng = np.random.default_rng(2)
+    a = tr.update("L0/x_attn", rng.standard_normal((32, 5)))
+    tr.update("L1/x_attn", rng.standard_normal((32, 5)))
+    assert sorted(tr.keys()) == ["L0/x_attn", "L1/x_attn"]
+    assert tr.get("L0/x_attn") is a
+    # doubling the signal quadruples Σ: a large, positive fro shift
+    big = tr.update("L0/x_attn", 10.0 * rng.standard_normal((500, 5)))
+    ref = np.eye(5)
+    assert frobenius_shift(big.sigma, ref) > 1.0
+    assert spectrum_shift(np.array([4.0, 1.0]), np.array([4.0, 1.0])) == 0.0
+    assert spectrum_shift(np.array([8.0, 1.0]), np.array([4.0, 1.0])) > 0.5
+
+
+# ---------------------------------------------------------------------------
+# reference dequantizer (kernels/dequant/ref.py)
+# ---------------------------------------------------------------------------
+
+
+def _dense_twin(qtree):
+    """Replace every qweight leaf with its dequantized fp stack."""
+    def walk(node):
+        if is_qweight(node):
+            n_stack = np.asarray(node["s"]).shape[0]
+            return np.stack([dequantize_leaf_ref(node, index=i)
+                             for i in range(n_stack)]).astype(np.float32)
+        if isinstance(node, dict):
+            return {k: walk(v) for k, v in node.items()}
+        return node
+    return walk(qtree)
+
+
+@pytest.mark.parametrize("kw", [dict(),                        # int8
+                                dict(nbits=4, packed=True),    # packed-int4
+                                dict(nbits=3),                 # packed-int3
+                                dict(nbits=2)])                # packed-int2
+def test_dequantize_leaf_ref_matches_served_forward(kw):
+    """The probe's materialized Ŵ must be the SAME weights the serving
+    graph dequantizes: forwarding the dense twin reproduces the
+    quantized forward's logits to float tolerance, for every format."""
+    from repro.quant.calibrate import forward_with_taps
+    qtree = quantize_params_tree(_params(), min_dim=16, **kw)
+    dense = _dense_twin(qtree)
+    toks = np.asarray(_prompts(n=2, plen=8)[:2])
+    logits_q, _ = forward_with_taps(CFG, qtree, toks)
+    logits_d, _ = forward_with_taps(CFG, dense, toks)
+    np.testing.assert_allclose(np.asarray(logits_q), np.asarray(logits_d),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_dequantize_leaf_ref_rejects_sharded_and_raw_roundtrip():
+    w = np.arange(12, dtype=np.float32).reshape(3, 4)
+    np.testing.assert_array_equal(dequantize_leaf_ref(w), w)
+    qtree = quantize_params_tree(_params(), min_dim=16)
+    leaf = qtree["layers"]["attn"]["wq"]["w"]
+    assert is_qweight(leaf)
+    with pytest.raises(ValueError, match="k-sharded"):
+        dequantize_leaf_ref({**leaf, "kshard": 2}, index=0)
+
+
+# ---------------------------------------------------------------------------
+# matrix↔tap vocabulary
+# ---------------------------------------------------------------------------
+
+
+def test_matrix_tap_map_names_align_with_calibration_keys():
+    params = _params()
+    mats = matrix_tap_map(CFG, params)
+    names = {m["name"] for m in mats}
+    assert {"L0/attn/wq", "L0/attn/wo", "L1/mlp/w_out",
+            "L1/mlp/w_gate"} <= names
+    acc = _calib()
+    for m in mats:
+        assert acc.has(m["sigma_key"]), m
+        node = params["layers"]
+        for k in m["path"]:
+            node = node[k]
+        assert node["w"].shape[0] == CFG.n_layers
+
+
+# ---------------------------------------------------------------------------
+# QualityMonitor ↔ engine integration
+# ---------------------------------------------------------------------------
+
+
+def _run(cls, params, prompts, max_new=4, quality=None, resilience=None,
+         plan=None):
+    eng = cls(CFG, params, n_slots=2,
+              max_len=max(len(p) for p in prompts) + max_new + 2,
+              prefill_chunk=4, quality=quality, resilience=resilience)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p.copy(), max_new_tokens=max_new))
+    if plan is not None:
+        with chaos.active(plan):
+            done = eng.run_until_done()
+    else:
+        done = eng.run_until_done()
+    return eng, {r.rid: tuple(r.out_tokens) for r in done}
+
+
+def _quiet_config(**kw):
+    """Fast cadence but an un-trippable step_s detector: wall-clock step
+    times are the ONE nondeterministic series, so tests pin it out."""
+    kw.setdefault("sigma_every", 2)
+    kw.setdefault("probe_every", 4)
+    kw.setdefault("slo_every", 4)
+    kw.setdefault("detectors", {"step_s": lambda: Threshold(float("inf")),
+                                "integrity": lambda: Threshold(0.0)})
+    kw.setdefault("track_sigma_drift", False)
+    return QualityConfig(**kw)
+
+
+@pytest.mark.parametrize("cls", [ServeEngine, ContinuousEngine])
+def test_disabled_obs_never_reaches_attached_monitor(cls):
+    params = _params()
+    qtree = quantize_params_tree(params, nbits=4, packed=True, min_dim=16)
+    prompts = _prompts()
+    _, base = _run(cls, qtree, prompts)
+    mon = QualityMonitor(CFG, params, config=_quiet_config())
+    _, out = _run(cls, qtree, prompts, quality=mon)
+    assert out == base                         # byte-identical streams
+    assert mon.tick == 0 and mon.probes == []  # monitor never invoked
+    assert obs.counters_snapshot() == {}
+
+
+def test_monitor_samples_sigma_probes_and_slo_when_enabled():
+    obs.enable()
+    params = _params()
+    qtree = quantize_params_tree(params, nbits=4, packed=True, min_dim=16)
+    mon = QualityMonitor(CFG, params, calib=_calib(),
+                         config=_quiet_config())
+    _, out = _run(ContinuousEngine, qtree, _prompts(n=4), max_new=6,
+                  quality=mon)
+    assert len(out) == 4
+    assert mon.tick > 0 and len(mon.probes) >= 1
+    assert mon.drift.summary()["n_flags"] == 0   # clean run stays silent
+    snap = obs.counters_snapshot("repro_quality_")
+    fro = {k: v for k, v in snap.items()
+           if k.startswith("repro_quality_sigma_fro_shift")}
+    assert fro and all(np.isfinite(v) for v in fro.values())
+    h = obs.registry().histogram("repro_quality_logits_mse",
+                                 engine="continuous")
+    assert h.count == len(mon.probes) and h.min >= 0.0
+    mats = mon.matrix_summary()
+    assert mats and all(m["format"] == "packed-int4" for m in mats)
+    # every probed matrix reconciles against its calibration prediction
+    for m in mats:
+        assert m["expected"] is not None and m["ratio"] is not None
+        assert 0.01 < m["ratio"] < 100.0, m
+    assert mon.slo_rows and {r["slo"] for r in mon.slo_rows} == \
+        {"ttft_p99", "tpot_p99", "drop_rate"}
+    names = {e["name"] for e in obs.tracer().to_chrome()["traceEvents"]}
+    assert {"quality.shadow", "quality.probe", "slo.evaluate"} <= names
+    summary = mon.summary()
+    assert summary["n_probes"] == len(mon.probes)
+    assert summary["logits_mse_mean"] > 0.0
+    assert summary["sigma_keys"], "no Σ_X estimators were fed"
+
+
+def test_monitor_flags_seeded_corrupt_payload_deterministically():
+    params = _params()
+    qtree = quantize_params_tree(params, nbits=4, packed=True, min_dim=16)
+
+    def cell():
+        with obs.scoped(enable_obs=True):
+            mon = QualityMonitor(CFG, params, config=_quiet_config())
+            plan = chaos.seeded_plan("corrupt-payload", seed=1, horizon=8,
+                                     n_faults=2, first=1, n_bytes=3)
+            _, out = _run(ContinuousEngine, qtree, _prompts(n=3),
+                          quality=mon,
+                          resilience=ResilienceConfig(
+                              retry=RestartPolicy(max_restarts=2),
+                              integrity_every=1),
+                          plan=plan)
+            snap = obs.counters_snapshot("repro_quality_drift_total")
+            events = [e for e in obs.tracer().to_chrome()["traceEvents"]
+                      if e["name"] == "quality.drift"]
+            return out, mon.drift.summary(), snap, len(events)
+
+    out_a, drift_a, snap_a, n_ev_a = cell()
+    out_b, drift_b, snap_b, _ = cell()
+    assert drift_a["series"].get("integrity", 0) >= 1, drift_a
+    assert snap_a['repro_quality_drift_total{series="integrity"}'] >= 1
+    assert n_ev_a == drift_a["n_flags"]
+    # seeded chaos + deterministic detectors: the verdict replays exactly
+    assert (out_a, drift_a, snap_a) == (out_b, drift_b, snap_b)
+
+
+def test_monitor_with_sensitivities_uses_plan_spectra():
+    from repro.plan.sensitivity import model_sensitivities
+    import jax.numpy as jnp
+    params = _params()
+    rng = np.random.default_rng(6)
+    batches = [jnp.asarray(rng.integers(0, CFG.vocab, (2, 12)), jnp.int32)]
+    sens = model_sensitivities(CFG, params, batches, weighting="uniform")
+    qtree = quantize_params_tree(params, nbits=4, packed=True, min_dim=16)
+    obs.enable()
+    mon = QualityMonitor(CFG, params, sensitivities=sens,
+                         config=_quiet_config())
+    _run(ContinuousEngine, qtree, _prompts(n=3), quality=mon)
+    assert len(mon.probes) >= 1
+    snap = obs.counters_snapshot("repro_quality_")
+    spec = [k for k in snap if k.startswith("repro_quality_spectrum_shift")]
+    assert spec, "no Σ-free spectrum divergence was published"
+    # the plan's reverse-waterfilling curve bounds live 4-bit distortion
+    for p in mon.probes:
+        for row in p["mats"]:
+            assert row["bound"] is not None and row["bound"] >= 0.0
