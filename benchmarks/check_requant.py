@@ -1,0 +1,154 @@
+"""CI requant gate: the live sense→decide→act loop closed correctly
+(DESIGN.md §15).
+
+Stdlib-only (no jax / no repro import) audit of a ``serve_bench.py
+--quick --requant --json`` artifact:
+
+1. **Envelope**: the payload carries the shared bench envelope
+   (``bench_schema.py``).
+
+2. **Actuation**: under the injected covariance drift the detector fired
+   and the actuator ran EXACTLY once (the cooldown/max-actuation
+   hysteresis held), re-planning at least one matrix from the streamed Σ
+   snapshots.
+
+3. **Zero serving gap**: the hot-swap landed at the step boundary right
+   after the actuation tick, and every busy scheduler step — including
+   the swap-window steps — emitted at least one token; no request was
+   dropped or stalled.
+
+4. **Bit identity**: the bench re-ran the pure re-plan offline from the
+   recorded Σ snapshots and compared trees byte-for-byte; the verdict
+   must be true (the actuation is a pure function of its snapshots).
+
+5. **Reconciliation**: post-swap, each re-planned matrix's executor-
+   realized distortion sits within the §14 measured/predicted band of
+   the new plan's prediction — the swap restored the quality contract.
+
+    python benchmarks/check_requant.py --bench b.json \
+        [--baseline benchmarks/BENCH_serve.json]
+"""
+import argparse
+import json
+import math
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from bench_schema import validate_envelope  # noqa: E402
+
+#: realized/predicted band — same wiring band check_quality.py uses
+RATIO_LO, RATIO_HI = 0.05, 20.0
+
+
+def _fail(msg):
+    raise SystemExit(f"check_requant: FAIL: {msg}")
+
+
+def check_envelope(payload, path, bench=None):
+    probs = validate_envelope(payload, bench=bench)
+    if probs:
+        _fail(f"{path}: bad envelope: {'; '.join(probs)}")
+    print(f"  envelope: {path}: bench={payload['bench']} "
+          f"schema=v{payload['schema_version']} rev={payload['git_rev']}")
+
+
+def check_actuation(rq):
+    if rq["actuations"] != 1:
+        _fail(f"expected exactly 1 actuation, got {rq['actuations']}")
+    if not rq["taps"] or not rq["matrices"]:
+        _fail(f"actuation re-planned nothing: taps={rq['taps']} "
+              f"matrices={rq['matrices']}")
+    missing = [m for m in rq["matrices"]
+               if m not in rq["payload_before"]
+               or m not in rq["payload_after"]]
+    if missing:
+        _fail(f"payload accounting missing for {missing}")
+    print(f"  actuation: fired once at tick {rq['tick']} "
+          f"({len(rq['matrices'])} matrices from taps "
+          f"{','.join(rq['taps'])}, re-plan {rq['replan_wall_s']:.2f}s)")
+
+
+def check_zero_gap(rq):
+    if rq["swap_tick"] != rq["tick"] + 1:
+        _fail(f"swap landed at tick {rq['swap_tick']}, expected the step "
+              f"boundary right after actuation tick {rq['tick']}")
+    if rq["stalled_steps"]:
+        _fail(f"busy steps emitted no token during the run "
+              f"(ticks {rq['stalled_steps']}) — the swap stalled serving")
+    if rq["dropped"] != 0:
+        _fail(f"{rq['dropped']} requests dropped during the requant run")
+    if rq["busy_steps"] <= 0 or rq["finished"] <= 0:
+        _fail(f"degenerate run: busy_steps={rq['busy_steps']} "
+              f"finished={rq['finished']}")
+    print(f"  zero-gap: swap at step boundary {rq['swap_tick']}, "
+          f"{rq['busy_steps']} busy steps all emitting, "
+          f"{rq['finished']} finished / 0 dropped")
+
+
+def check_bit_identity(rq):
+    if rq["bit_identical"] is not True:
+        _fail("swapped tree is NOT bit-identical to the offline re-plan "
+              "from the same Σ snapshots")
+    print("  bit-identity: online swap == offline re-plan, byte-for-byte")
+
+
+def check_reconciliation(rq):
+    ratios = rq["realized_over_pred"]
+    if not ratios:
+        _fail("no re-planned matrix carried a realized/predicted "
+              "distortion ratio — was the executor run without "
+              "compute_distortion?")
+    for name, r in ratios.items():
+        if r is None or not math.isfinite(r) \
+                or not (RATIO_LO <= r <= RATIO_HI):
+            _fail(f"{name}: post-swap realized/predicted distortion "
+                  f"ratio {r} outside [{RATIO_LO}, {RATIO_HI}]")
+    print(f"  reconciliation: {len(ratios)} matrices inside "
+          f"[{RATIO_LO}, {RATIO_HI}]")
+
+
+def check_baseline(payload, base):
+    if base.get("schema_version") != payload.get("schema_version"):
+        _fail(f"baseline schema v{base.get('schema_version')} != "
+              f"current v{payload.get('schema_version')} — migrate "
+              f"BENCH_serve.json")
+    brq = base.get("requant")
+    if not brq:
+        print("  history: baseline has no requant block yet (first run)")
+        return
+    rq = payload["requant"]
+    for key in ("actuations", "bit_identical"):
+        if rq[key] != brq[key]:
+            _fail(f"requant {key} left the trajectory: baseline "
+                  f"{brq[key]}, current {rq[key]}")
+    print(f"  history: trajectory ok vs rev {base.get('git_rev')}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", required=True,
+                    help="serve_bench.py --requant --json artifact")
+    ap.add_argument("--baseline", default=None,
+                    help="committed BENCH_serve.json to gate the "
+                         "trajectory against")
+    args = ap.parse_args(argv)
+    with open(args.bench) as f:
+        payload = json.load(f)
+    check_envelope(payload, args.bench, bench="serve")
+    rq = payload.get("requant")
+    if not rq:
+        _fail(f"{args.bench} has no requant block — run serve_bench "
+              f"with --requant")
+    check_actuation(rq)
+    check_zero_gap(rq)
+    check_bit_identity(rq)
+    check_reconciliation(rq)
+    if args.baseline:
+        with open(args.baseline) as f:
+            check_baseline(payload, json.load(f))
+    print("check_requant: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -37,6 +37,12 @@ online distortion probes against the fp twin, drift/SLO verdicts — whose
 summaries ``benchmarks/check_quality.py`` gates against the committed
 ``BENCH_serve.json`` trajectory.
 
+Part 5 (``--requant``, DESIGN.md §15): a drift-injection cell with the
+live requantization loop armed — the detector must fire exactly once,
+the hot-swap must land at a step boundary with zero serving gap, and
+the swapped tree must be bit-identical to an offline re-plan from the
+recorded Σ snapshots; ``benchmarks/check_requant.py`` gates the summary.
+
 CPU wall-clock is NOT the TPU story (the dry-run roofline is); the bytes
 model is the hardware-portable claim.  The scheduler comparison is
 dispatch-count-structural, so it survives the backend change.
@@ -70,9 +76,9 @@ from repro.dist.fault import RestartPolicy
 from repro.launch.serve import add_obs_flags, obs_export, obs_setup
 from repro.models import decode_chunk, decode_step, init_params, split_tree
 from repro.quant import leaf_inventory, quantize_params_tree, qweight_bytes
-from repro.serve import (ContinuousEngine, DegradePolicy, QualityConfig,
-                         QualityMonitor, Request, ResilienceConfig,
-                         ServeEngine, build_bit_ladder)
+from repro.serve import (ContinuousEngine, DegradePolicy, EngineConfig,
+                         QualityConfig, QualityMonitor, Request,
+                         ResilienceConfig, ServeEngine, build_bit_ladder)
 
 
 def _kernel_deltas(before, after):
@@ -82,11 +88,12 @@ def _kernel_deltas(before, after):
 
 
 def _engine_run(cfg, params, prompts, max_new, chunk, decode_fns=None):
-    kw = {} if decode_fns is None else {"decode_fn": decode_fns[0],
-                                        "decode_chunk_fn": decode_fns[1]}
-    eng = ServeEngine(cfg, params, n_slots=len(prompts),
+    ec = EngineConfig(n_slots=len(prompts),
                       max_len=prompts[0].size + max_new + 2,
-                      prefill_chunk=chunk, **kw)
+                      prefill_chunk=chunk,
+                      decode_fn=decode_fns[0] if decode_fns else None,
+                      decode_chunk_fn=decode_fns[1] if decode_fns else None)
+    eng = ServeEngine(cfg, params, config=ec)
     for i, p in enumerate(prompts):
         eng.submit(Request(rid=i, prompt=p.copy(), max_new_tokens=max_new))
     snap0 = obs.counters_snapshot("repro_kernel_")
@@ -228,9 +235,11 @@ def scheduler_compare(rows_out, cfg, params, quick=False):
         decode_chunk_fn=jax.jit(
             lambda p, c, tk: decode_chunk(cfg, p, c, tk)))
 
+    ec = EngineConfig(n_slots=n_slots, max_len=max_len,
+                      prefill_chunk=chunk, **shared)
+
     def make(cls):
-        return cls(cfg, params, n_slots=n_slots, max_len=max_len,
-                   prefill_chunk=chunk, **shared)
+        return cls(cfg, params, config=ec)
 
     results = {}
     for name, cls in (("static", ServeEngine),
@@ -277,8 +286,9 @@ def resilience_bench(rows_out, cfg, params, quick=False):
     max_len = 6 + budget + 2
 
     def serve(resilience):
-        eng = ContinuousEngine(cfg, params, n_slots=4, max_len=max_len,
-                               prefill_chunk=4, resilience=resilience)
+        eng = ContinuousEngine(cfg, params, config=EngineConfig(
+            n_slots=4, max_len=max_len, prefill_chunk=4,
+            resilience=resilience))
         for i, p in enumerate(prompts):
             eng.submit(Request(rid=i, prompt=p.copy(),
                                max_new_tokens=budget))
@@ -304,9 +314,9 @@ def resilience_bench(rows_out, cfg, params, quick=False):
     ladder = build_bit_ladder(params, (None, 3, 2))
     pol = DegradePolicy(ladder=ladder, high_watermark=4, low_watermark=1,
                         streak=1, cooldown_steps=2)
-    eng = ContinuousEngine(
-        cfg, params, n_slots=2, max_len=max_len, prefill_chunk=4,
-        resilience=ResilienceConfig(degrade=pol, queue_cap=4 * n_req))
+    eng = ContinuousEngine(cfg, params, config=EngineConfig(
+        n_slots=2, max_len=max_len, prefill_chunk=4,
+        resilience=ResilienceConfig(degrade=pol, queue_cap=4 * n_req)))
     burst = 2 * n_req
     submitted = sum(
         1 for i in range(burst)
@@ -382,10 +392,10 @@ def quality_bench(rows_out, cfg, params, quick=False, events_out=None):
     def cell(plan):
         with obs.scoped(enable_obs=True):
             mon = QualityMonitor(cfg, params, calib=acc, config=qcfg)
-            eng = ContinuousEngine(
-                cfg, qtree, n_slots=n_req, max_len=max_len,
-                prefill_chunk=4, quality=mon,
-                resilience=ResilienceConfig(integrity_every=1), **shared)
+            eng = ContinuousEngine(cfg, qtree, config=EngineConfig(
+                n_slots=n_req, max_len=max_len, prefill_chunk=4,
+                quality=mon,
+                resilience=ResilienceConfig(integrity_every=1), **shared))
             for i, p in enumerate(prompts):
                 eng.submit(Request(rid=i, prompt=p.copy(),
                                    max_new_tokens=budget))
@@ -403,8 +413,8 @@ def quality_bench(rows_out, cfg, params, quick=False, events_out=None):
             return summary
 
     # warm every decode/prefill shape fault-free before either timed cell
-    warm = ContinuousEngine(cfg, qtree, n_slots=n_req, max_len=max_len,
-                            prefill_chunk=4, **shared)
+    warm = ContinuousEngine(cfg, qtree, config=EngineConfig(
+        n_slots=n_req, max_len=max_len, prefill_chunk=4, **shared))
     for i, p in enumerate(prompts):
         warm.submit(Request(rid=i, prompt=p.copy(), max_new_tokens=budget))
     warm.run_until_done()
@@ -436,8 +446,109 @@ def quality_bench(rows_out, cfg, params, quick=False, events_out=None):
     return {"clean": clean, "chaos": chaotic}
 
 
+# ---------------------------------------------------------------------------
+# Part 5 — live requantization under drift (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+
+def requant_bench(rows_out, cfg, params, quick=False):
+    """One obs-enabled serving cell with the full sense→decide→act loop
+    armed: clean traffic, then a rank-collapsing repeated-token phase
+    that trips the streamed-Σ frobenius detectors.  The actuator must
+    fire EXACTLY once, re-solve the affected matrices over the residual
+    budget, and hot-swap at a step boundary with zero serving gap (every
+    busy scheduler step emits tokens, asserted per-step).  The summary
+    carries the per-step emission log, the offline bit-identity verdict
+    (re-running the pure re-plan from the recorded Σ snapshots must land
+    the byte-identical tree), and the post-swap realized/predicted
+    distortion ratios — ``benchmarks/check_requant.py`` gates all of it.
+    """
+    from repro.plan import build_plan, collect_sigma_x, model_sensitivities
+    from repro.quant.pipeline import matrix_tap_map
+    from repro.serve import (EngineConfig, RequantConfig, engine_from_plan,
+                             replan_from_sigma, sigma_threshold_detectors)
+
+    rng = np.random.default_rng(9)
+    plen, budget = 8, 8
+    calib = [rng.integers(0, cfg.vocab, (2, 16)).astype(np.int32)
+             for _ in range(2)]
+    sens = model_sensitivities(cfg, params, calib, weighting="output")
+    plan = build_plan(sens, 4.0, weighting="output")
+    acc = collect_sigma_x(cfg, params, calib)
+    # threshold calibrated on this workload: steady-state clean shift sits
+    # near 1.0 (serving traffic != calib tokens), the repeated-token phase
+    # pushes every tap past 2.3 once its samples dominate the stream
+    qcfg = QualityConfig(
+        sigma_every=1, probe_every=10_000, slo_every=10_000,
+        detectors=sigma_threshold_detectors(matrix_tap_map(cfg, params),
+                                            limit=2.0))
+    with obs.scoped(enable_obs=True):
+        eng = engine_from_plan(
+            cfg, params, plan, calib=acc, sensitivities=sens,
+            quality_config=qcfg,
+            config=EngineConfig(
+                n_slots=2, max_len=plen + budget + 2,
+                requant=RequantConfig(min_samples=8, cooldown_steps=8,
+                                      max_actuations=1)))
+        rid = 0
+
+        def drive(prompt_fn, n_req, n_steps):
+            nonlocal rid
+            for _ in range(n_req):
+                eng.submit(Request(rid=rid, prompt=prompt_fn(),
+                                   max_new_tokens=budget))
+                rid += 1
+            for _ in range(n_steps):
+                eng.step()
+
+        drive(lambda: rng.integers(0, cfg.vocab, plen).astype(np.int32),
+              6, 40)
+        drive(lambda: np.full(plen, 7, np.int32), 10, 80)
+    # per-step emission log (ticks are 1-based and sequential)
+    steps = [{"tick": i + 1, "active": st.active, "admitted": st.admitted,
+              "new_tokens": st.new_tokens}
+             for i, st in enumerate(eng.step_stats)]
+    acts = eng.requant.actuations
+    assert len(acts) == 1, f"expected exactly 1 actuation, got {len(acts)}"
+    a = acts[0]
+    # offline replay of the pure re-plan from the recorded snapshots —
+    # the served tree after the swap must be BYTE-identical to it
+    _, tree, _, _, _ = replan_from_sigma(cfg, params, a["plan_before"],
+                                         a["snapshots"])
+    bit_identical = all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(jax.tree.leaves(eng.params), jax.tree.leaves(tree)))
+    swap_tick = next(t for t, why in eng.swap_history if why == "requant")
+    ratios = {}
+    for name in a["matrices"]:
+        e = a["plan_after"].entry(name)
+        if e.realized_distortion and e.pred_distortion:
+            ratios[name] = e.realized_distortion / e.pred_distortion
+    busy = [s for s in steps if s["active"] or s["admitted"]]
+    stalled = [s["tick"] for s in busy if s["new_tokens"] < 1]
+    dropped = sum(1 for r in eng.finished if r.dropped)
+    summary = {
+        "actuations": len(acts),
+        "tick": a["tick"], "swap_tick": swap_tick,
+        "taps": list(a["taps"]), "matrices": list(a["matrices"]),
+        "payload_before": a["payload_before"],
+        "payload_after": a["payload_after"],
+        "bit_identical": bool(bit_identical),
+        "busy_steps": len(busy), "stalled_steps": stalled,
+        "finished": len(eng.finished), "dropped": dropped,
+        "realized_over_pred": ratios,
+        "replan_wall_s": a["wall_s"],
+        "weight_formats_after": dict(eng.weight_formats)}
+    rows_out.append(("requant/actuation", len(acts),
+                     f"tick={a['tick']};swap_tick={swap_tick};"
+                     f"matrices={len(a['matrices'])};"
+                     f"bit_identical={int(bit_identical)};"
+                     f"stalled={len(stalled)};dropped={dropped}"))
+    return summary
+
+
 def run(rows_out, quick=False, mesh=False, quality=False,
-        quality_events_out=None):
+        quality_events_out=None, requant=False):
     cfg = ArchConfig(name="bench", family="dense",
                      n_layers=2 if quick else 4,
                      d_model=128 if quick else 256, n_heads=4, n_kv=4,
@@ -492,6 +603,9 @@ def run(rows_out, quick=False, mesh=False, quality=False,
         results["quality"] = quality_bench(rows_out, cfg, params,
                                            quick=quick,
                                            events_out=quality_events_out)
+    if requant:
+        results["requant"] = requant_bench(rows_out, cfg, params,
+                                           quick=quick)
     return results
 
 
@@ -502,7 +616,7 @@ def _json_payload(rows, results):
     block carries the monitor summaries check_quality.py gates."""
     ladder = {}
     for name, res in results.items():
-        if name in ("sched", "resilience", "quality"):
+        if name in ("sched", "resilience", "quality", "requant"):
             continue
         ladder[name] = {
             "tok_s": res["tok_s"], "tokens": res["tokens"],
@@ -518,6 +632,8 @@ def _json_payload(rows, results):
                     "resilience": results["resilience"]})
     if "quality" in results:
         payload["quality"] = results["quality"]
+    if "requant" in results:
+        payload["requant"] = results["requant"]
     return payload
 
 
@@ -539,13 +655,18 @@ if __name__ == "__main__":
     ap.add_argument("--quality-events-out", metavar="PATH", default=None,
                     help="JSONL metric log of the chaos quality cell "
                          "(input to launch/summarize.py --metrics)")
+    ap.add_argument("--requant", action="store_true",
+                    help="also run the live-requantization drift cell "
+                         "(DESIGN.md §15) and embed its summary for "
+                         "check_requant.py")
     add_obs_flags(ap)
     args = ap.parse_args()
     obs_setup(args)
     rows = []
     results = run(rows, quick=args.quick, mesh=args.mesh,
                   quality=args.quality,
-                  quality_events_out=args.quality_events_out)
+                  quality_events_out=args.quality_events_out,
+                  requant=args.requant)
     for r in rows:
         print(",".join(str(x) for x in r))
     if args.json:

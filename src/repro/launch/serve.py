@@ -21,6 +21,18 @@ retry, ``--integrity-every`` checksums+heals the quantized payloads,
 ``--snapshot-dir``/``--snapshot-every`` write crash-recoverable engine
 snapshots (``--resume`` restarts from the latest one).
 
+``--requant`` (DESIGN.md §15) serves from a waterfilled plan instead of
+``--wbits`` and arms the live sense→decide→act loop: the quality
+observatory streams Σ_X from traffic, and when divergence crosses
+``--requant-limit`` the actuator re-solves the affected matrices over
+the residual budget and hot-swaps the tree at a step boundary.  The
+driver sends a drifted second traffic phase (repeated-token prompts) so
+the loop demonstrably closes.  Requires ``--continuous``; incompatible
+with ``--degrade`` (both subsystems hot-swap the served tree).
+
+All engines are built from ONE :class:`repro.serve.EngineConfig` —
+this driver is the reference for the config-first construction API.
+
     PYTHONPATH=src python -m repro.launch.serve --arch minicpm-2b --reduced \
         --requests 6 --wbits 4 --prefill-chunk 8 --continuous \
         --trace-out /tmp/serve_trace.json --metrics-out /tmp/serve.prom
@@ -28,6 +40,7 @@ snapshots (``--resume`` restarts from the latest one).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -41,10 +54,12 @@ from repro.dist.sharding import use_mesh
 from repro.launch.mesh import make_host_mesh
 from repro.models import init_params, split_tree
 from repro.quant import quantize_params_tree, qweight_bytes
-from repro.serve import (ContinuousEngine, DegradePolicy, Request,
+from repro.serve import (ContinuousEngine, DegradePolicy, EngineConfig,
+                         QualityConfig, Request, RequantConfig,
                          ResilienceConfig, ServeEngine, build_bit_ladder,
-                         build_sharded_decode_fns, integer_allgathers,
-                         lower_decode_hlo, shard_params_tree)
+                         build_sharded_decode_fns, engine_from_plan,
+                         integer_allgathers, lower_decode_hlo,
+                         shard_params_tree, sigma_threshold_detectors)
 
 
 def add_obs_flags(ap: argparse.ArgumentParser) -> None:
@@ -135,6 +150,62 @@ def resilience_from_args(args, params) -> ResilienceConfig | None:
         snapshot_every=args.snapshot_every if args.snapshot_dir else None)
 
 
+def add_requant_flags(ap: argparse.ArgumentParser) -> None:
+    """Live-requantization knobs (DESIGN.md §15)."""
+    g = ap.add_argument_group("requant")
+    g.add_argument("--requant", action="store_true",
+                   help="serve from a waterfilled plan and re-plan + "
+                        "hot-swap live when traffic Σ drifts (needs "
+                        "--continuous; incompatible with --degrade)")
+    g.add_argument("--requant-budget", type=float, default=4.0,
+                   help="global bit budget per param for the plan")
+    g.add_argument("--requant-calib", type=int, default=2, metavar="N",
+                   help="synthetic calibration batches for the initial plan")
+    g.add_argument("--requant-limit", type=float, default=2.0,
+                   help="sigma_fro divergence threshold arming the drift "
+                        "detectors (relative Frobenius shift)")
+    g.add_argument("--requant-min-samples", type=int, default=32)
+    g.add_argument("--requant-cooldown", type=int, default=8)
+    g.add_argument("--requant-max", type=int, default=None, metavar="K",
+                   help="cap on actuations (default unbounded)")
+    g.add_argument("--requant-sigma-every", type=int, default=2,
+                   help="shadow Σ_X sampling period (engine ticks)")
+
+
+def requant_from_args(args) -> RequantConfig | None:
+    if not args.requant:
+        return None
+    return RequantConfig(min_samples=args.requant_min_samples,
+                         cooldown_steps=args.requant_cooldown,
+                         max_actuations=args.requant_max)
+
+
+def _requant_engine(args, cfg, params, econfig):
+    """Plan-driven engine with the live requant loop armed (§15)."""
+    from repro.plan import build_plan, collect_sigma_x, model_sensitivities
+    from repro.quant.pipeline import matrix_tap_map
+
+    rng = np.random.default_rng(1)
+    calib = [rng.integers(0, cfg.vocab,
+                          (2, max(args.prompt_len, 8))).astype(np.int32)
+             for _ in range(args.requant_calib)]
+    sens = model_sensitivities(cfg, params, calib, weighting="output")
+    plan = build_plan(sens, args.requant_budget, weighting="output")
+    acc = collect_sigma_x(cfg, params, calib)
+    qc = QualityConfig(
+        sigma_every=args.requant_sigma_every,
+        detectors=sigma_threshold_detectors(
+            matrix_tap_map(cfg, params), limit=args.requant_limit))
+    eng = engine_from_plan(cfg, params, plan, calib=acc,
+                           sensitivities=sens, config=econfig,
+                           continuous=True, quality_config=qc)
+    print(f"requant armed: {plan.planned_bits_per_param:.2f} b/param plan, "
+          f"limit={args.requant_limit} "
+          f"cooldown={args.requant_cooldown} "
+          f"min_samples={args.requant_min_samples}")
+    return eng, plan
+
+
 def _quantize_for_wbits(params, wbits: int):
     if wbits == 8:
         params = quantize_params_tree(params)
@@ -189,15 +260,17 @@ def main_mesh(args, cfg):
     prompts = [rng.integers(0, cfg.vocab, args.prompt_len).astype(np.int32)
                for _ in range(args.requests)]
 
+    base = EngineConfig(n_slots=args.slots, max_len=max_len,
+                        prefill_chunk=args.prefill_chunk or None,
+                        resilience=resilience_from_args(args, params))
+
     def serve(decode_fns, tag):
-        kw = {}
+        econfig = base
         if decode_fns is not None:
-            kw = {"decode_fn": decode_fns[0],
-                  "decode_chunk_fn": decode_fns[1]}
+            econfig = dataclasses.replace(base, decode_fn=decode_fns[0],
+                                          decode_chunk_fn=decode_fns[1])
         cls = ContinuousEngine if args.continuous else ServeEngine
-        eng = cls(cfg, params, n_slots=args.slots, max_len=max_len,
-                  prefill_chunk=args.prefill_chunk or None,
-                  resilience=resilience_from_args(args, params), **kw)
+        eng = cls(cfg, params, config=econfig)
         for i, p in enumerate(prompts):
             eng.submit(Request(rid=i, prompt=p.copy(),
                                max_new_tokens=args.max_new))
@@ -271,8 +344,20 @@ def main(argv=None):
                          "collective audit (input to check_mesh.py)")
     add_obs_flags(ap)
     add_resilience_flags(ap)
+    add_requant_flags(ap)
     args = ap.parse_args(argv)
-    obs_setup(args)
+    if args.requant:
+        if not args.continuous:
+            ap.error("--requant requires --continuous")
+        if args.degrade:
+            ap.error("--requant is incompatible with --degrade (both "
+                     "hot-swap the served tree)")
+        if args.mesh:
+            ap.error("--requant does not support --mesh yet")
+        if not obs_setup(args):
+            obs.enable()   # the sense→act loop samples behind repro.obs
+    else:
+        obs_setup(args)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -283,23 +368,29 @@ def main(argv=None):
     rng = np.random.default_rng(0)
     with use_mesh(mesh):
         params, _ = split_tree(init_params(cfg, jax.random.PRNGKey(0)))
-        params = _quantize_for_wbits(params, args.wbits)
-        res = resilience_from_args(args, params)
+        if not args.requant:
+            params = _quantize_for_wbits(params, args.wbits)
+        # the driver builds exactly ONE EngineConfig; every construction
+        # path below (fresh, resumed, plan-driven) consumes it
+        econfig = EngineConfig(
+            n_slots=args.slots,
+            max_len=args.prompt_len + args.max_new + 2,
+            prefill_chunk=args.prefill_chunk or None,
+            resilience=resilience_from_args(args, params),
+            requant=requant_from_args(args))
         cls = ContinuousEngine if args.continuous else ServeEngine
         if args.resume:
             if not (args.continuous and args.snapshot_dir):
                 ap.error("--resume needs --continuous and --snapshot-dir")
-            eng = ContinuousEngine.resume(
-                args.snapshot_dir, cfg, params,
-                prefill_chunk=args.prefill_chunk or None, resilience=res)
+            eng = ContinuousEngine.resume(args.snapshot_dir, cfg, params,
+                                          config=econfig)
             print(f"resumed from snapshot at tick {eng._tick} "
                   f"({eng.active_slots} slots live, "
                   f"{len(eng.queue)} queued)")
+        elif args.requant:
+            eng, _plan = _requant_engine(args, cfg, params, econfig)
         else:
-            eng = cls(cfg, params, n_slots=args.slots,
-                      max_len=args.prompt_len + args.max_new + 2,
-                      prefill_chunk=args.prefill_chunk or None,
-                      resilience=res)
+            eng = cls(cfg, params, config=econfig)
         for i in range(args.requests):
             eng.submit(Request(
                 rid=i,
@@ -308,6 +399,17 @@ def main(argv=None):
                 max_new_tokens=args.max_new))
         t0 = time.perf_counter()
         done = eng.run_until_done()
+        if args.requant:
+            # drifted second phase: repeated-token prompts collapse the
+            # live Σ toward rank one; 2x the clean traffic so the drifted
+            # samples dominate the streamed estimate and trip the
+            # frobenius detectors
+            for i in range(2 * args.requests):
+                eng.submit(Request(
+                    rid=args.requests + i,
+                    prompt=np.full(args.prompt_len, 7, np.int32),
+                    max_new_tokens=args.max_new))
+            done += eng.run_until_done()
         dt = time.perf_counter() - t0
         total_tokens = sum(len(r.out_tokens) for r in done)
         sched = "continuous" if args.continuous else "static"
@@ -330,12 +432,23 @@ def main(argv=None):
         if ttfts:
             p50 = ttfts[len(ttfts) // 2]
             print(f"  TTFT p50={p50*1e3:.0f}ms max={ttfts[-1]*1e3:.0f}ms")
-        if res is not None:
+        if eng.resilience is not None:
             for r in eng.dropped:
                 print(f"  dropped rid={r.rid} ({r.drop_reason})")
             if eng.rung_history:
                 print("  rungs: " + " -> ".join(
                     f"{name}@{tick}" for tick, name, _ in eng.rung_history))
+        if args.requant:
+            acts = eng.requant.actuations if eng.requant else []
+            print(f"  requant actuations: {len(acts)}")
+            for a in acts:
+                moved = {n: (a['payload_before'][n], a['payload_after'][n])
+                         for n in a['matrices']
+                         if a['payload_before'][n] != a['payload_after'][n]}
+                print(f"    tick={a['tick']} taps={','.join(a['taps'])} "
+                      f"matrices={len(a['matrices'])} "
+                      f"moved={moved or 'none'} "
+                      f"replan={a['wall_s']*1e3:.0f}ms")
         for r in done[:4]:
             print(f"  rid={r.rid} out={r.out_tokens[:8]}")
         obs_export(args)

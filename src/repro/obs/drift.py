@@ -161,6 +161,12 @@ class DriftMonitor:
             self._live[series] = d
         return d
 
+    def reset(self, series: str) -> None:
+        """Drop a series' live detector; the next observation re-creates
+        it fresh — re-arming burn-in at a new operating point (e.g.
+        after a requant actuation re-anchors the divergence reference)."""
+        self._live.pop(series, None)
+
     def observe(self, series: str, value: float) -> bool:
         """Feed one sample; True (and a logged flag) on detection."""
         d = self.detector(series)
@@ -169,6 +175,18 @@ class DriftMonitor:
             self.flags.append(DriftFlag(series=series, index=d.n,
                                         value=float(value)))
         return fired
+
+    def flags_since(self, index: int, *,
+                    prefix: Optional[str] = None) -> List[DriftFlag]:
+        """Flags logged at or after flag-log position ``index`` (a cursor
+        into ``self.flags``, NOT a sample index), optionally restricted
+        to series whose name starts with ``prefix``.  The requant
+        actuator polls this with a persistent cursor so each flag is
+        consumed exactly once."""
+        out = self.flags[index:]
+        if prefix is not None:
+            out = [f for f in out if f.series.startswith(prefix)]
+        return list(out)
 
     def flagged(self, series: Optional[str] = None) -> List[DriftFlag]:
         if series is None:

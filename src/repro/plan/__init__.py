@@ -17,10 +17,10 @@ from .executor import (ExecutorReport, execute_plan, plan_inputs_for_model,
 from .sensitivity import (MatrixSensitivity, apply_constraints,
                           collect_sigma_x, distortion_at_rate,
                           model_sensitivities, rd_curve,
-                          sensitivity_from_matrix)
+                          sensitivity_from_matrix, sensitivity_from_streamed)
 from .waterfill import (SERVING_FORMATS, allocation_distortion, build_plan,
                         even_plan, even_spread_target, payload_bits_for,
-                        snap_bits, waterfill_bits)
+                        rewaterfill_subset, snap_bits, waterfill_bits)
 
 __all__ = [
     "PLAN_SCHEMA_VERSION", "PlanEntry", "QuantPlan",
@@ -28,7 +28,8 @@ __all__ = [
     "quantize_model_with_plan",
     "MatrixSensitivity", "apply_constraints", "collect_sigma_x",
     "distortion_at_rate", "model_sensitivities", "rd_curve",
-    "sensitivity_from_matrix",
+    "sensitivity_from_matrix", "sensitivity_from_streamed",
     "SERVING_FORMATS", "allocation_distortion", "build_plan", "even_plan",
-    "even_spread_target", "payload_bits_for", "snap_bits", "waterfill_bits",
+    "even_spread_target", "payload_bits_for", "rewaterfill_subset",
+    "snap_bits", "waterfill_bits",
 ]

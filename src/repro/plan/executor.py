@@ -38,7 +38,7 @@ import dataclasses
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -94,6 +94,7 @@ def execute_plan(plan: QuantPlan,
                  heartbeat: Optional[Heartbeat] = None,
                  compute_distortion: bool = True,
                  quantize_kwargs: Optional[Dict[str, Any]] = None,
+                 subset: Optional[Sequence[str]] = None,
                  ) -> Tuple[Dict[str, QuantizedLinear], ExecutorReport]:
     """Quantize every plan entry at its snapped target, in parallel.
 
@@ -102,9 +103,24 @@ def execute_plan(plan: QuantPlan,
     Fills ``entry.achieved_bits`` (entropy) and, when
     ``compute_distortion``, ``entry.realized_distortion`` in place.
     Returns ``(qlinears, report)``.
+
+    ``subset`` restricts execution to those entry names (incremental
+    mode, the requant actuator's path — DESIGN.md §15): only the named
+    matrices are quantized, ``weights``/``stats`` need cover only them,
+    and only their entries get achieved/realized fields filled; the
+    returned ``qlinears`` contains exactly the executed names.
     """
     import jax
-    missing = [e.name for e in plan if e.name not in weights
+    if subset is None:
+        entries = list(plan.entries)
+    else:
+        sub = set(subset)
+        unknown = sorted(n for n in sub if n not in plan)
+        if unknown:
+            raise KeyError(f"subset names not in plan: {unknown[:5]}"
+                           f"{'...' if len(unknown) > 5 else ''}")
+        entries = [e for e in plan.entries if e.name in sub]
+    missing = [e.name for e in entries if e.name not in weights
                or e.name not in stats]
     if missing:
         raise KeyError(f"plan entries without weights/stats: {missing[:5]}"
@@ -118,7 +134,7 @@ def execute_plan(plan: QuantPlan,
     results: Dict[str, QuantizedLinear] = {}
 
     # LPT: largest matrices first so the pool's makespan stays balanced
-    order = sorted(plan.entries, key=lambda e: -e.n_params)
+    order = sorted(entries, key=lambda e: -e.n_params)
 
     def run_one(task_idx: int, entry) -> Tuple[str, QuantizedLinear, float,
                                                str]:
@@ -188,7 +204,7 @@ def execute_plan(plan: QuantPlan,
         if stragglers:
             obs.counter("repro_plan_stragglers_total").inc(len(stragglers))
 
-    for e in plan:
+    for e in entries:
         q = results[e.name]
         e.achieved_bits = float(q.entropy_bits)
         if compute_distortion:

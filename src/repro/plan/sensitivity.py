@@ -54,6 +54,7 @@ __all__ = [
     "distortion_at_rate",
     "rd_curve",
     "sensitivity_from_matrix",
+    "sensitivity_from_streamed",
     "apply_constraints",
     "collect_sigma_x",
     "model_sensitivities",
@@ -162,6 +163,39 @@ def sensitivity_from_matrix(name: str, w, sigma_x, *, weight: float = 1.0,
         sigma_w2=float(np.mean(w * w)) + 1e-30, lambdas=lam,
         weight=float(weight), floor_bits=floor_bits, ceil_bits=ceil_bits,
         provenance=provenance)
+
+
+def sensitivity_from_streamed(name: str, w, est, *,
+                              weight: Optional[float] = None,
+                              floor_bits: float = 0.0,
+                              ceil_bits: float = 16.0,
+                              min_samples: int = 1,
+                              provenance: str = "",
+                              ) -> MatrixSensitivity:
+    """Curve inputs from a LIVE streamed-Σ estimator (DESIGN.md §15).
+
+    ``est`` is anything exposing ``.sigma`` (the uncentered second moment
+    E[xxᵀ], what calib.collect_sigma accumulates) and ``.n`` (samples) —
+    an ``obs.streamsig.StreamingSigma`` or a frozen requant
+    ``SigmaSnapshot``.  ``weight=None`` recomputes the linearity-theorem
+    output weighting 1/tr(WΣWᵀ) against the live Σ, so a drifted
+    covariance re-weights the matrix as well as re-shaping its curve;
+    pass an explicit weight to keep the calibration-time coefficient.
+    ``min_samples`` guards against acting on a barely-warmed estimator.
+    """
+    n = float(getattr(est, "n"))
+    if n < min_samples:
+        raise ValueError(f"{name}: streamed Σ has {n:.0f} samples "
+                         f"< min_samples={min_samples}")
+    w = np.asarray(w, np.float64)
+    sigma = np.asarray(getattr(est, "sigma"), np.float64)
+    if weight is None:
+        tr = float(np.einsum("ij,jk,ik->", w, sigma, w))
+        weight = 1.0 / max(tr, 1e-30)
+    return sensitivity_from_matrix(
+        name, w, sigma, weight=float(weight), floor_bits=floor_bits,
+        ceil_bits=ceil_bits,
+        provenance=provenance or f"streamed:{n:.0f}t")
 
 
 def apply_constraints(sens: List[MatrixSensitivity],

@@ -52,6 +52,7 @@ __all__ = [
     "payload_bits_for",
     "build_plan",
     "even_plan",
+    "rewaterfill_subset",
 ]
 
 #: integer target-bit grid the serving formats realize.  Every rung has a
@@ -311,6 +312,66 @@ def build_plan(sens: Sequence[MatrixSensitivity],
         assert e.name == c[0]
         e.target_bits = float(c[1])
     return plan
+
+
+def rewaterfill_subset(plan, new_sens: Sequence[MatrixSensitivity], *,
+                       formats: Sequence[int] = SERVING_FORMATS):
+    """Partial re-solve: refresh a subset's allocation, budget held fixed.
+
+    ``new_sens`` carries refreshed distortion-rate curves (streamed-Σ)
+    for the drifted matrices; every name must already be in ``plan``.
+    Unaffected entries keep their snapped allocation (and any achieved/
+    realized execution fields) verbatim; the subset is waterfilled over
+    the RESIDUAL budget — the global bit budget minus what the
+    unaffected entries already spend — so the model total never grows.
+    When the subset is the whole plan this degenerates to
+    :func:`build_plan` and yields identical allocations.
+
+    Returns ``(new_plan, overrun)`` — a fresh :class:`QuantPlan` (the
+    input plan is not mutated) and the snap-overrun flag for the subset.
+    """
+    import dataclasses as _dc
+
+    from .artifact import PlanEntry, QuantPlan
+    new_sens = list(new_sens)
+    names = [s.name for s in new_sens]
+    if len(set(names)) != len(names):
+        raise ValueError("duplicate names in new_sens")
+    unknown = sorted(n for n in names if n not in plan)
+    if unknown:
+        raise KeyError(f"new_sens names not in plan: {unknown[:5]}"
+                       f"{'...' if len(unknown) > 5 else ''}")
+    affected = set(names)
+    n_total = plan.n_params_total
+    budget_total = plan.budget_bits_per_param * n_total
+    kept = [e for e in plan.entries if e.name not in affected]
+    spent_kept = sum(e.snapped_bits * e.n_params for e in kept)
+    sub_params = sum(s.n_params for s in new_sens)
+    if sub_params <= 0:
+        raise ValueError("empty subset")
+    sub_budget = max(budget_total - spent_kept, 0.0) / sub_params
+    cont = waterfill_bits(new_sens, sub_budget)
+    snapped, overrun = snap_bits(new_sens, cont,
+                                 budget_bits_per_param=sub_budget,
+                                 formats=formats)
+    entries = [_dc.replace(e) for e in kept]
+    for s, c, b in zip(new_sens, cont, snapped):
+        entries.append(PlanEntry(
+            name=s.name, out_features=int(s.out_features),
+            in_features=int(s.in_features), weight=float(s.weight),
+            target_bits=float(c), snapped_bits=float(b),
+            payload_bits=payload_bits_for(float(b)),
+            pred_distortion=float(distortion_at_rate(s, float(b))),
+            floor_bits=float(s.floor_bits), ceil_bits=float(s.ceil_bits),
+            provenance=s.provenance))
+    prov = dict(plan.provenance)
+    prov["requant"] = {"affected": sorted(affected),
+                       "sub_budget_bits_per_param": float(sub_budget)}
+    new_plan = QuantPlan(
+        budget_bits_per_param=float(plan.budget_bits_per_param),
+        weighting=plan.weighting, entries=entries, provenance=prov,
+        budget_overrun=bool(plan.budget_overrun or overrun))
+    return new_plan, overrun
 
 
 def even_plan(sens: Sequence[MatrixSensitivity],

@@ -1,15 +1,40 @@
+"""repro.serve — batched serving engines + serving-side subsystems.
+
+Public surface (DESIGN.md §15): construct engines from ONE
+:class:`EngineConfig` (``ServeEngine``/``ContinuousEngine``/
+``build_sharded_engine`` all take ``config=``), or go straight from a
+:class:`~repro.plan.QuantPlan` to a served engine with the live
+sense→decide→act requant loop attached via :func:`engine_from_plan`.
+Import from here, not the private modules.
+"""
+from .config import EngineConfig, resolve_engine_config
 from .engine import (ContinuousEngine, Request, RoundStats, ServeEngine,
                      StepStats)
 from .quality import QualityConfig, QualityMonitor
+from .requant import (RequantActuator, RequantConfig, SigmaSnapshot,
+                      engine_from_plan, replan_from_sigma,
+                      sigma_threshold_detectors)
 from .resilience import (DegradePolicy, EngineStalledError, PayloadGuard,
                          ResilienceConfig, SlowStepDetector, build_bit_ladder)
-from .sharded import (build_sharded_decode_fns, cache_pspecs,
-                      integer_allgathers, lower_decode_hlo, params_pspecs,
-                      shard_params_tree)
+from .sharded import (build_sharded_decode_fns, build_sharded_engine,
+                      cache_pspecs, integer_allgathers, lower_decode_hlo,
+                      params_pspecs, shard_params_tree)
 
-__all__ = ["ContinuousEngine", "Request", "RoundStats", "ServeEngine",
-           "StepStats", "QualityConfig", "QualityMonitor",
-           "DegradePolicy", "EngineStalledError", "PayloadGuard",
-           "ResilienceConfig", "SlowStepDetector", "build_bit_ladder",
-           "build_sharded_decode_fns", "cache_pspecs", "integer_allgathers",
-           "lower_decode_hlo", "params_pspecs", "shard_params_tree"]
+__all__ = [
+    # construction API
+    "EngineConfig", "resolve_engine_config", "engine_from_plan",
+    # engines + request types
+    "ServeEngine", "ContinuousEngine", "Request", "RoundStats", "StepStats",
+    # quality observatory (§14)
+    "QualityConfig", "QualityMonitor",
+    # live requantization (§15)
+    "RequantActuator", "RequantConfig", "SigmaSnapshot",
+    "replan_from_sigma", "sigma_threshold_detectors",
+    # resilience (§12)
+    "DegradePolicy", "EngineStalledError", "PayloadGuard",
+    "ResilienceConfig", "SlowStepDetector", "build_bit_ladder",
+    # tensor-parallel serving (§13)
+    "build_sharded_decode_fns", "build_sharded_engine", "cache_pspecs",
+    "integer_allgathers", "lower_decode_hlo", "params_pspecs",
+    "shard_params_tree",
+]

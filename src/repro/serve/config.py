@@ -1,0 +1,85 @@
+"""Unified engine-construction API (DESIGN.md §15).
+
+The engines accreted nine per-option constructor kwargs, duplicated
+across :class:`ServeEngine`, :class:`ContinuousEngine`, and the sharded
+factory.  :class:`EngineConfig` is the single typed surface replacing
+them: one frozen dataclass carrying the scheduler geometry, decode-fn
+injection, and the optional resilience / quality / requant subsystem
+configs.  Every engine constructor accepts ``config=``; legacy kwargs
+keep working through ONE deprecation shim (:func:`resolve_engine_config`)
+that converts them to a config with a ``DeprecationWarning`` — there is
+exactly one migration path and one place it is implemented.
+
+The config is frozen so an engine's construction parameters are
+immutable facts (``engine.config``) — variations are expressed with
+``dataclasses.replace`` (how the sharded factory injects its mesh
+decode fns), never by mutation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Callable, Optional
+
+import jax.numpy as jnp
+
+from .quality import QualityMonitor
+from .requant import RequantConfig
+from .resilience import ResilienceConfig
+
+__all__ = ["EngineConfig", "resolve_engine_config"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Construction parameters for either serving engine.
+
+    ``decode_fn``/``decode_chunk_fn`` inject pre-built (e.g. mesh-
+    sharded) dispatch functions; None builds the default single-device
+    jits.  ``reset_on_evict`` is continuous-engine only (ignored by the
+    static oracle).  The three subsystem fields carry fully-constructed
+    configs/monitors — None disables each subsystem with zero hot-path
+    cost (one ``is None`` test).
+    """
+
+    n_slots: int = 4
+    max_len: int = 256
+    cache_dtype: Any = jnp.float32
+    prefill_chunk: Optional[int] = None
+    decode_fn: Optional[Callable] = None
+    decode_chunk_fn: Optional[Callable] = None
+    reset_on_evict: bool = False
+    resilience: Optional[ResilienceConfig] = None
+    quality: Optional[QualityMonitor] = None
+    requant: Optional[RequantConfig] = None
+
+
+_CONFIG_KEYS = frozenset(f.name for f in dataclasses.fields(EngineConfig))
+
+
+def resolve_engine_config(config: Optional[EngineConfig], kwargs: dict, *,
+                          where: str = "engine") -> EngineConfig:
+    """The single legacy-kwarg deprecation shim.
+
+    ``config=`` alone passes through; legacy kwargs alone convert to an
+    :class:`EngineConfig` under a ``DeprecationWarning``; mixing the two
+    or passing an unknown option is a ``TypeError`` (not a warning — a
+    typo'd option silently ignored is how misconfigured fleets ship).
+    """
+    unknown = sorted(set(kwargs) - _CONFIG_KEYS)
+    if unknown:
+        raise TypeError(f"{where}: unknown engine option(s) {unknown}; "
+                        f"valid: {sorted(_CONFIG_KEYS)}")
+    if config is not None:
+        if kwargs:
+            raise TypeError(
+                f"{where}: pass either config=EngineConfig(...) or legacy "
+                f"kwargs, not both (got {sorted(kwargs)})")
+        return config
+    if kwargs:
+        warnings.warn(
+            f"{where}: per-option engine kwargs are deprecated; pass "
+            f"config=EngineConfig(...) instead", DeprecationWarning,
+            stacklevel=3)
+        return EngineConfig(**kwargs)
+    return EngineConfig()

@@ -109,11 +109,13 @@ from repro.kernels.dequant.ops import (record_weight_traffic,
 from repro.models import (cache_reset_slot, cache_write_slot, decode_chunk,
                           decode_step, init_cache)
 from repro.quant import leaf_format_histogram, qweight_bytes
+from repro.serve.config import EngineConfig, resolve_engine_config
 from repro.serve.resilience import (EngineStalledError, PayloadGuard,
                                     ResilienceConfig)
 
 __all__ = ["Request", "RoundStats", "StepStats", "ServeEngine",
-           "ContinuousEngine", "EngineStalledError", "ResilienceConfig"]
+           "ContinuousEngine", "EngineStalledError", "EngineConfig",
+           "ResilienceConfig"]
 
 
 @dataclasses.dataclass
@@ -244,6 +246,11 @@ class _EngineBase:
         self._streak_under = 0
         self._degrade_cooldown = 0
         self.rung_history: List[tuple] = []  # [(tick, rung name, direction)]
+        # hot-swap state (DESIGN.md §15): staged tree applied at the next
+        # step boundary + optional requant actuator bound after construction
+        self._pending_swap: Optional[tuple] = None     # (tree, reason)
+        self.swap_history: List[tuple] = []            # [(tick, reason)]
+        self.requant = None
         if resilience is None:
             return
         self._detector = resilience.make_detector()
@@ -402,12 +409,7 @@ class _EngineBase:
         pol = self.resilience.degrade
         name, tree = pol.ladder[rung]
         self._rung = rung
-        self.params = tree
-        self._fmt_bytes = None
-        self.weight_bytes, self.weight_bytes_bf16 = qweight_bytes(tree)
-        self.weight_formats = leaf_format_histogram(tree)
-        if self._guard is not None:
-            self._guard = PayloadGuard(tree)
+        self._swap_tree(tree, reason=f"degrade:{name}")
         self._degrade_cooldown = pol.cooldown_steps
         self._streak_over = self._streak_under = 0
         self.rung_history.append((self._tick, name, direction))
@@ -416,6 +418,61 @@ class _EngineBase:
                         rung=name, direction=direction, queue_depth=depth)
             obs.counter("repro_serve_degrade_total", engine=self._obs_engine,
                         direction=direction).inc()
+
+    # -- generic hot-swap (DESIGN.md §15) -----------------------------------
+
+    def request_swap(self, tree, *, reason: str = "requant") -> None:
+        """Stage a new served tree, applied at the NEXT step boundary —
+        never mid-step: the in-flight dispatch finishes on the old tree,
+        and the KV cache is weight-format-independent, so slots drain
+        and refill across the swap with no serving gap.  A second
+        request before the boundary replaces the first (last writer
+        wins — both trees are whole-model artifacts)."""
+        self._pending_swap = (tree, reason)
+
+    def _apply_pending_swap(self) -> None:
+        if self._pending_swap is None:
+            return
+        tree, reason = self._pending_swap
+        self._pending_swap = None
+        self._swap_tree(tree, reason=reason)
+
+    def _swap_tree(self, tree, *, reason: str) -> None:
+        """Swap the served param tree — the generalized form of the
+        degrade-ladder rung swap, shared by degradation and requant.
+
+        Refreshes byte/format accounting, REBASELINES the integrity
+        guard on the new pristine payloads (a guard keyed to the old
+        tree would flag a legitimate swap as corruption and "heal" back
+        to stale bytes), and notifies the quality monitor so cached
+        expected-distortion entries for the old codes drop.
+        """
+        self.params = tree
+        self._fmt_bytes = None
+        self.weight_bytes, self.weight_bytes_bf16 = qweight_bytes(tree)
+        self.weight_formats = leaf_format_histogram(tree)
+        if self._guard is not None:
+            self._guard = PayloadGuard(tree)
+        self.swap_history.append((self._tick, reason))
+        if self._quality is not None:
+            hook = getattr(self._quality, "on_swap", None)
+            if hook is not None:
+                hook(reason=reason)
+        if obs.enabled():
+            obs.instant("serve.swap", engine=self._obs_engine, reason=reason,
+                        tick=self._tick)
+            obs.counter("repro_serve_swaps_total",
+                        engine=self._obs_engine).inc()
+
+    def attach_requant(self, actuator) -> None:
+        """Bind a ``serve.requant`` actuator; the engine polls it once
+        per step after quality sampling, behind the same obs gate."""
+        self.requant = actuator
+
+    def _poll_requant(self) -> None:
+        if self.requant is not None and self._quality is not None \
+                and obs.enabled():
+            self.requant.poll(self)
 
     def _observe_step_time(self, dt: float) -> None:
         if self._detector is not None and self._detector.observe(dt):
@@ -454,30 +511,27 @@ class ServeEngine(_EngineBase):
 
     _obs_engine = "static"
 
-    def __init__(self, cfg: ArchConfig, params, *, n_slots: int = 4,
-                 max_len: int = 256, cache_dtype=jnp.float32,
-                 decode_fn: Optional[Callable] = None,
-                 prefill_chunk: Optional[int] = None,
-                 decode_chunk_fn: Optional[Callable] = None,
-                 resilience: Optional[ResilienceConfig] = None,
-                 quality=None):
+    def __init__(self, cfg: ArchConfig, params, *,
+                 config: Optional[EngineConfig] = None, **kwargs):
+        config = resolve_engine_config(config, kwargs, where="ServeEngine")
+        self.config = config
         self.cfg = cfg
         self.params = params
-        self.n_slots = n_slots
-        self.max_len = max_len
-        self.cache_dtype = cache_dtype
-        self.prefill_chunk = prefill_chunk
-        self._quality = quality          # optional serve.quality monitor
+        self.n_slots = config.n_slots
+        self.max_len = config.max_len
+        self.cache_dtype = config.cache_dtype
+        self.prefill_chunk = config.prefill_chunk
+        self._quality = config.quality   # optional serve.quality monitor
         self.queue: deque[Request] = deque()
         self.round_stats: List[RoundStats] = []
-        self._init_resilience(resilience)   # may swap params to rung 0
+        self._init_resilience(config.resilience)  # may swap params to rung 0
         # mixed-rate serving visibility (DESIGN.md §10): realized weight
         # HBM bytes vs bf16 and the per-leaf format mix of this engine
         self.weight_bytes, self.weight_bytes_bf16 = qweight_bytes(self.params)
         self.weight_formats = leaf_format_histogram(self.params)
-        self._decode = decode_fn or jax.jit(
+        self._decode = config.decode_fn or jax.jit(
             lambda params, cache, tok: decode_step(cfg, params, cache, tok))
-        self._decode_chunk = decode_chunk_fn or jax.jit(
+        self._decode_chunk = config.decode_chunk_fn or jax.jit(
             lambda params, cache, toks: decode_chunk(cfg, params, cache,
                                                      toks))
 
@@ -511,6 +565,7 @@ class ServeEngine(_EngineBase):
     def run_round(self) -> List[Request]:
         """One static-batching round; returns the finished requests."""
         self._tick += 1
+        self._apply_pending_swap()      # round boundary: staged tree lands
         if chaos.enabled():
             # the one static-engine hook site; raising faults are retried
             # (nothing has been admitted yet, so a retry is trivially safe)
@@ -593,6 +648,7 @@ class ServeEngine(_EngineBase):
             # with obs on AND a monitor attached, so the default serving
             # path stays byte-identical
             self._quality.observe_step(self, t2 - t0, batch)
+        self._poll_requant()
         return batch
 
     def run_until_done(self, max_rounds: int = 1000) -> List[Request]:
@@ -627,41 +683,38 @@ class ContinuousEngine(_EngineBase):
 
     _obs_engine = "continuous"
 
-    def __init__(self, cfg: ArchConfig, params, *, n_slots: int = 4,
-                 max_len: int = 256, cache_dtype=jnp.float32,
-                 decode_fn: Optional[Callable] = None,
-                 prefill_chunk: Optional[int] = None,
-                 decode_chunk_fn: Optional[Callable] = None,
-                 reset_on_evict: bool = False,
-                 resilience: Optional[ResilienceConfig] = None,
-                 quality=None):
+    def __init__(self, cfg: ArchConfig, params, *,
+                 config: Optional[EngineConfig] = None, **kwargs):
+        config = resolve_engine_config(config, kwargs,
+                                       where="ContinuousEngine")
+        self.config = config
         self.cfg = cfg
         self.params = params
-        self.n_slots = n_slots
-        self.max_len = max_len
-        self.cache_dtype = cache_dtype
-        self.prefill_chunk = prefill_chunk
-        self._quality = quality          # optional serve.quality monitor
-        self.reset_on_evict = reset_on_evict
+        self.n_slots = config.n_slots
+        self.max_len = config.max_len
+        self.cache_dtype = config.cache_dtype
+        self.prefill_chunk = config.prefill_chunk
+        self._quality = config.quality   # optional serve.quality monitor
+        self.reset_on_evict = config.reset_on_evict
         self.queue: deque[Request] = deque()
         self.step_stats: List[StepStats] = []
         self.finished: List[Request] = []
-        self._init_resilience(resilience)   # may swap params to rung 0
+        self._init_resilience(config.resilience)  # may swap params to rung 0
         self.weight_bytes, self.weight_bytes_bf16 = qweight_bytes(self.params)
         self.weight_formats = leaf_format_histogram(self.params)
-        self._decode = decode_fn or jax.jit(
+        self._decode = config.decode_fn or jax.jit(
             lambda params, cache, tok: decode_step(cfg, params, cache, tok))
-        self._decode_chunk = decode_chunk_fn or jax.jit(
+        self._decode_chunk = config.decode_chunk_fn or jax.jit(
             lambda params, cache, toks: decode_chunk(cfg, params, cache,
                                                      toks))
         # the engine is the sole owner of the slot cache, so graft/reset can
         # donate it — in-place row updates instead of a full cache copy
         self._write_slot = jax.jit(cache_write_slot, donate_argnums=(0,))
         self._reset_slot = jax.jit(cache_reset_slot, donate_argnums=(0,))
-        self.cache = init_cache(cfg, n_slots, max_len, cache_dtype,
-                                per_slot=True)
-        self.slots: List[Optional[Request]] = [None] * n_slots
-        self._last = np.zeros((n_slots,), np.int32)   # next input token
+        self.cache = init_cache(cfg, self.n_slots, self.max_len,
+                                self.cache_dtype, per_slot=True)
+        self.slots: List[Optional[Request]] = [None] * self.n_slots
+        self._last = np.zeros((self.n_slots,), np.int32)  # next input token
         # aggregate dispatch/wall accounting (serve_bench reads these)
         self.prefill_calls = 0
         self.prefill_s = 0.0
@@ -827,6 +880,7 @@ class ContinuousEngine(_EngineBase):
         """
         finished: List[Request] = []
         self._tick += 1
+        self._apply_pending_swap()      # step boundary: staged tree lands
         t0 = self._now()
         if chaos.enabled():
             chaos.fire("serve.step", engine=self)
@@ -902,6 +956,7 @@ class ContinuousEngine(_EngineBase):
             # with obs on AND a monitor attached, so the default serving
             # path stays byte-identical
             self._quality.observe_step(self, t_end - t0, self.slots)
+        self._poll_requant()
         res = self.resilience
         if (res is not None and res.snapshot_every and res.snapshot_dir
                 and self._tick % res.snapshot_every == 0):
@@ -960,6 +1015,7 @@ class ContinuousEngine(_EngineBase):
     @classmethod
     def resume(cls, ckpt_dir: str, cfg: ArchConfig, params, *,
                step: Optional[int] = None, cache_shardings=None,
+               config: Optional[EngineConfig] = None,
                **kwargs) -> "ContinuousEngine":
         """Rebuild an engine from the latest (or ``step``-th) snapshot.
 
@@ -983,11 +1039,22 @@ class ContinuousEngine(_EngineBase):
         manifest = read_manifest(ckpt_dir, step=step)
         meta = manifest["meta"]
         em = meta["engine"]
-        kwargs.setdefault("n_slots", em["n_slots"])
-        kwargs.setdefault("max_len", em["max_len"])
-        kwargs.setdefault("prefill_chunk", em.get("prefill_chunk"))
-        kwargs.setdefault("reset_on_evict", em.get("reset_on_evict", False))
-        eng = cls(cfg, params, **kwargs)
+        if config is not None:
+            if kwargs:
+                raise TypeError("resume: pass either config=EngineConfig"
+                                "(...) or legacy kwargs, not both "
+                                f"(got {sorted(kwargs)})")
+        else:
+            # legacy-kwarg path: snapshot geometry fills the gaps, then
+            # one config is built here (resume IS the shim layer — the
+            # constructor sees config= and never double-warns)
+            kwargs.setdefault("n_slots", em["n_slots"])
+            kwargs.setdefault("max_len", em["max_len"])
+            kwargs.setdefault("prefill_chunk", em.get("prefill_chunk"))
+            kwargs.setdefault("reset_on_evict",
+                              em.get("reset_on_evict", False))
+            config = EngineConfig(**kwargs)
+        eng = cls(cfg, params, config=config)
         if eng.n_slots != em["n_slots"] or eng.max_len != em["max_len"]:
             raise ValueError(
                 f"snapshot geometry (n_slots={em['n_slots']}, "

@@ -161,6 +161,44 @@ class QualityMonitor:
         if c.slo_every and self.tick % c.slo_every == 0:
             self.slo_rows = evaluate_slos(self.slos)
 
+    # -- swap/requant hooks (DESIGN.md §15) ---------------------------------
+
+    def on_swap(self, *, reason: str = "") -> None:
+        """The engine hot-swapped its served tree (degrade or requant):
+        drop every cached expected distortion.  The cache is keyed
+        (matrix, format), but the CODES changed even where the format
+        did not — a stale entry would reconcile the new tree against the
+        old tree's quantization error."""
+        self._expected.clear()
+
+    def rebase_sigma(self, sigma_by_tap: Dict[str, Any]) -> None:
+        """Re-anchor the divergence reference after a requant actuation.
+
+        ``sigma_by_tap`` maps tap ids (``"L{l}/{tap}"``) to the
+        uncentered Σ the new plan was solved from.  The matching
+        calibration-side references, the drift detectors over those
+        series, and the cached attribution weights of the affected
+        matrices (all functions of Σ) are replaced, so post-swap
+        divergence gauges and drift series measure movement from the
+        NEW operating point — otherwise the detector would keep firing
+        on the very drift the actuator just absorbed.
+        """
+        rebased = set()
+        for rec in self.mats:
+            tap_id = f"L{rec['layer']}/{rec['tap']}"
+            if tap_id not in sigma_by_tap:
+                continue
+            key = rec["sigma_key"]
+            if key not in rebased:
+                sig = np.asarray(sigma_by_tap[tap_id], np.float64)
+                self._ref_sigma[key] = sig
+                lam = np.linalg.eigvalsh(0.5 * (sig + sig.T))
+                self._ref_spec[key] = np.maximum(lam, 0.0)
+                self.drift.reset(f"sigma_fro:{tap_id}")
+                rebased.add(key)
+            self._attrib_w.pop(rec["name"], None)
+        self._expected.clear()
+
     # -- internals ----------------------------------------------------------
 
     def _series(self, name: str, value: float) -> None:

@@ -57,8 +57,8 @@ from repro.models.transformer import decode_chunk, decode_step
 from repro.quant.qlinear import _eligible, is_kshard_qweight, is_qweight
 
 __all__ = ["shard_params_tree", "params_pspecs", "cache_pspecs",
-           "build_sharded_decode_fns", "lower_decode_hlo",
-           "integer_allgathers"]
+           "build_sharded_decode_fns", "build_sharded_engine",
+           "lower_decode_hlo", "integer_allgathers"]
 
 _UNPACK = {2: unpack_int2_planar_jnp, 3: unpack_int3_planar_jnp,
            4: unpack_int4_planar_jnp}
@@ -335,6 +335,27 @@ def build_sharded_decode_fns(cfg, params, mesh, *, axis_name: str = "model"):
         return call
 
     return make(decode_step, "step"), make(decode_chunk, "chunk")
+
+
+def build_sharded_engine(cfg, params, mesh, *, config=None,
+                         continuous: bool = True,
+                         axis_name: str = "model"):
+    """Mesh engine through the unified config surface (DESIGN.md §15):
+    builds the shard_map decode dispatches and injects them into ONE
+    :class:`EngineConfig` via ``dataclasses.replace`` — any
+    resilience/quality/requant wiring on the caller's config rides
+    along unchanged.  ``params`` must already be sharded
+    (:func:`shard_params_tree`)."""
+    import dataclasses
+
+    from .config import EngineConfig
+    from .engine import ContinuousEngine, ServeEngine
+    step_fn, chunk_fn = build_sharded_decode_fns(cfg, params, mesh,
+                                                 axis_name=axis_name)
+    config = dataclasses.replace(config or EngineConfig(),
+                                 decode_fn=step_fn, decode_chunk_fn=chunk_fn)
+    cls = ContinuousEngine if continuous else ServeEngine
+    return cls(cfg, params, config=config)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,136 @@
+"""Unified engine-construction API (DESIGN.md §15).
+
+Golden equivalence: an engine built from one ``EngineConfig`` must emit
+BYTE-identical token streams to one built through the legacy per-option
+kwargs (which now funnel through the single deprecation shim), across
+the static, continuous, and mesh construction paths.  Plus the shim's
+contract: kwargs warn, config+kwargs and unknown options raise.
+"""
+import dataclasses
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.launch.mesh import make_host_mesh
+from repro.models import init_params, split_tree
+from repro.quant import quantize_params_tree
+from repro.serve import (ContinuousEngine, EngineConfig, Request,
+                         ResilienceConfig, ServeEngine,
+                         build_sharded_decode_fns, build_sharded_engine,
+                         resolve_engine_config, shard_params_tree)
+
+CFG = ArchConfig(name="ec", family="dense", n_layers=2, d_model=32,
+                 n_heads=2, n_kv=2, d_ff=64, vocab=64, head_dim=16)
+
+
+def _params(seed=0):
+    params, _ = split_tree(init_params(CFG, jax.random.PRNGKey(seed)))
+    return quantize_params_tree(params)
+
+
+def _requests(n=3, plen=6, new=4, seed=2):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, CFG.vocab, plen).astype(np.int32),
+                    max_new_tokens=new) for i in range(n)]
+
+
+def _streams(eng, reqs):
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run_until_done()
+    return {r.rid: list(r.out_tokens) for r in done}
+
+
+# ---------------------------------------------------------------------------
+# the shim contract
+# ---------------------------------------------------------------------------
+
+
+def test_config_is_frozen():
+    ec = EngineConfig(n_slots=2)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        ec.n_slots = 3
+
+
+def test_legacy_kwargs_warn_once_through_the_shim():
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        ec = resolve_engine_config(None, {"n_slots": 2, "max_len": 32},
+                                   where="test")
+    assert ec.n_slots == 2 and ec.max_len == 32
+
+
+def test_config_alone_passes_through_silently():
+    ec = EngineConfig(n_slots=2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert resolve_engine_config(ec, {}, where="test") is ec
+
+
+def test_config_plus_kwargs_is_an_error():
+    with pytest.raises(TypeError, match="not both"):
+        resolve_engine_config(EngineConfig(), {"n_slots": 2}, where="test")
+
+
+def test_unknown_option_is_an_error_not_a_warning():
+    with pytest.raises(TypeError, match="n_slot"):
+        resolve_engine_config(None, {"n_slot": 2}, where="test")
+
+
+def test_engine_constructors_route_through_the_shim():
+    params = _params()
+    with pytest.warns(DeprecationWarning):
+        ServeEngine(CFG, params, n_slots=2, max_len=16)
+    with pytest.warns(DeprecationWarning):
+        ContinuousEngine(CFG, params, n_slots=2, max_len=16)
+    with pytest.raises(TypeError):
+        ServeEngine(CFG, params, config=EngineConfig(), n_slots=2)
+
+
+# ---------------------------------------------------------------------------
+# golden equivalence: config-built == kwarg-built, byte-identical streams
+# ---------------------------------------------------------------------------
+
+
+def test_golden_equivalence_static():
+    params = _params()
+    ec = EngineConfig(n_slots=2, max_len=16, prefill_chunk=4)
+    a = _streams(ServeEngine(CFG, params, config=ec), _requests())
+    with pytest.warns(DeprecationWarning):
+        legacy = ServeEngine(CFG, params, n_slots=2, max_len=16,
+                             prefill_chunk=4)
+    b = _streams(legacy, _requests())
+    assert a == b and a
+
+
+def test_golden_equivalence_continuous():
+    params = _params()
+    ec = EngineConfig(n_slots=2, max_len=16, prefill_chunk=4,
+                      resilience=ResilienceConfig(queue_cap=8))
+    a = _streams(ContinuousEngine(CFG, params, config=ec), _requests())
+    with pytest.warns(DeprecationWarning):
+        legacy = ContinuousEngine(
+            CFG, params, n_slots=2, max_len=16, prefill_chunk=4,
+            resilience=ResilienceConfig(queue_cap=8))
+    b = _streams(legacy, _requests())
+    assert a == b and a
+
+
+def test_golden_equivalence_mesh():
+    mesh = make_host_mesh(model_parallel=len(jax.devices()))
+    params = shard_params_tree(_params(), int(mesh.shape["model"]))
+    ec = EngineConfig(n_slots=2, max_len=16, prefill_chunk=4)
+    eng = build_sharded_engine(CFG, params, mesh, config=ec,
+                               continuous=True)
+    assert eng.config.decode_fn is not None   # mesh fns were injected
+    a = _streams(eng, _requests())
+    fns = build_sharded_decode_fns(CFG, params, mesh)
+    with pytest.warns(DeprecationWarning):
+        legacy = ContinuousEngine(CFG, params, n_slots=2, max_len=16,
+                                  prefill_chunk=4, decode_fn=fns[0],
+                                  decode_chunk_fn=fns[1])
+    b = _streams(legacy, _requests())
+    assert a == b and a

@@ -1,0 +1,311 @@
+"""Live requantization under drift (DESIGN.md §15).
+
+Plan-layer units: streamed-Σ sensitivities, subset re-waterfill with
+the global budget held fixed, executor subset mode, drift-flag cursor.
+Engine integration: the drift-injection end-to-end (detector fires →
+actuator re-plans → step-boundary hot-swap, stream never stalls), the
+offline bit-identity audit, the PayloadGuard rebaseline regression, and
+device-loss chaos during the re-plan recovering bit-identically.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import chaos, obs
+from repro.chaos import ChaosPlan, FaultSpec
+from repro.configs.base import ArchConfig
+from repro.core.watersic import CalibStats
+from repro.dist.fault import RestartPolicy
+from repro.models import init_params, split_tree
+from repro.obs.drift import DriftMonitor, Threshold
+from repro.plan import (build_plan, collect_sigma_x, execute_plan,
+                        model_sensitivities, rewaterfill_subset,
+                        sensitivity_from_matrix, sensitivity_from_streamed)
+from repro.quant import quantize_params_tree
+from repro.quant.pipeline import matrix_tap_map
+from repro.serve import (ContinuousEngine, EngineConfig, QualityConfig,
+                         Request, RequantConfig, ResilienceConfig,
+                         SigmaSnapshot, engine_from_plan, replan_from_sigma,
+                         sigma_threshold_detectors)
+
+CFG = ArchConfig(name="rq", family="dense", n_layers=2, d_model=32,
+                 n_heads=2, n_kv=2, d_ff=64, vocab=64, head_dim=16)
+
+
+@pytest.fixture(autouse=True)
+def _isolated_obs():
+    obs.disable()
+    obs.reset()
+    yield
+    obs.disable()
+    obs.reset()
+
+
+def _params(seed=0):
+    params, _ = split_tree(init_params(CFG, jax.random.PRNGKey(seed)))
+    return params
+
+
+def _plan_fixture(budget=4.0):
+    params = _params()
+    rng = np.random.default_rng(1)
+    calib = [rng.integers(0, CFG.vocab, (2, 12)).astype(np.int32)
+             for _ in range(2)]
+    sens = model_sensitivities(CFG, params, calib, weighting="output")
+    plan = build_plan(sens, budget, weighting="output")
+    acc = collect_sigma_x(CFG, params, calib)
+    return params, calib, sens, plan, acc
+
+
+# ---------------------------------------------------------------------------
+# plan layer: streamed sensitivities + subset re-waterfill + subset execute
+# ---------------------------------------------------------------------------
+
+
+class _FakeStream:
+    def __init__(self, sigma, n):
+        self.sigma, self.n = sigma, n
+
+
+def test_sensitivity_from_streamed_matches_matrix_on_same_sigma():
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(8, 6))
+    x = rng.normal(size=(40, 6))
+    sigma = x.T @ x / len(x)
+    a = sensitivity_from_matrix("m", w, sigma, weight=2.0)
+    b = sensitivity_from_streamed("m", w, _FakeStream(sigma, 40.0),
+                                  weight=2.0)
+    assert np.allclose(a.lambdas, b.lambdas)
+    assert a.sigma_w2 == b.sigma_w2
+    assert (a.out_features, a.in_features) == (b.out_features, b.in_features)
+    assert b.weight == 2.0
+
+
+def test_sensitivity_from_streamed_recomputes_output_weight():
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(8, 6))
+    sigma = np.eye(6)
+    s = sensitivity_from_streamed("m", w, _FakeStream(sigma, 10.0))
+    tr = float(np.einsum("ij,jk,ik->", w, sigma, w))
+    assert s.weight == pytest.approx(1.0 / tr)
+
+
+def test_sensitivity_from_streamed_rejects_cold_stream():
+    with pytest.raises(ValueError, match="min_samples"):
+        sensitivity_from_streamed("m", np.eye(4), _FakeStream(np.eye(4), 2.0),
+                                  min_samples=8)
+
+
+def test_rewaterfill_subset_holds_global_budget_fixed():
+    _, _, sens, plan, _ = _plan_fixture(budget=4.0)
+    sub = [s for s in sens if s.name.startswith("L0/")]
+    new_plan, _ = rewaterfill_subset(plan, sub)
+    # kept entries byte-for-byte; total planned payload unchanged-or-less
+    for e in plan:
+        if not e.name.startswith("L0/"):
+            assert new_plan.entry(e.name) == e
+    before = sum(e.snapped_bits * e.n_params for e in plan)
+    after = sum(e.snapped_bits * e.n_params for e in new_plan)
+    budget_total = plan.budget_bits_per_param * plan.n_params_total
+    assert after <= max(before, budget_total) + 1e-6
+    assert sorted(new_plan.provenance["requant"]["affected"]) == \
+        sorted(s.name for s in sub)
+
+
+def test_rewaterfill_full_subset_reproduces_build_plan():
+    _, _, sens, plan, _ = _plan_fixture(budget=4.0)
+    new_plan, _ = rewaterfill_subset(plan, sens)
+    assert [e.name for e in new_plan] == [e.name for e in plan]
+    for a, b in zip(plan, new_plan):
+        assert a.snapped_bits == b.snapped_bits, a.name
+
+
+def test_rewaterfill_unknown_name_raises():
+    _, _, sens, plan, _ = _plan_fixture()
+    bogus = dataclasses.replace(sens[0], name="L9/not/there")
+    with pytest.raises(KeyError, match="not in plan"):
+        rewaterfill_subset(plan, [bogus])
+
+
+def test_execute_plan_subset_mode():
+    params, calib, sens, plan, acc = _plan_fixture()
+    from repro.plan import plan_inputs_for_model
+    weights, stats = plan_inputs_for_model(CFG, params, calib)
+    names = sorted(e.name for e in plan)[:2]
+    qlinears, report = execute_plan(plan, weights, stats, subset=names,
+                                    compute_distortion=False)
+    assert sorted(qlinears) == names
+    assert sorted(report.task_s) == names
+    with pytest.raises(KeyError, match="not in plan"):
+        execute_plan(plan, weights, stats, subset=["L9/nope"])
+
+
+def test_drift_monitor_cursor_and_reset():
+    mon = DriftMonitor(detectors={"sigma_fro:a": lambda: Threshold(1.0)},
+                       default=lambda: Threshold(1e9))
+    mon.observe("other", 5.0)          # default detector, huge limit
+    mon.observe("sigma_fro:a", 2.0)    # flags
+    got = mon.flags_since(0, prefix="sigma_fro:")
+    assert [f.series for f in got] == ["sigma_fro:a"]
+    cursor = len(mon.flags)
+    assert mon.flags_since(cursor, prefix="sigma_fro:") == []
+    mon.reset("sigma_fro:a")           # fresh detector at the new anchor
+    assert mon.observe("sigma_fro:a", 0.5) is False
+    assert mon.observe("sigma_fro:a", 2.0) is True
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+
+
+def _drive(eng, rid0, prompts, steps, per_step=None):
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=rid0 + i, prompt=p, max_new_tokens=6))
+    for _ in range(steps):
+        st = eng.step()
+        if per_step is not None:
+            per_step(st)
+
+
+def _requant_engine(params, sens, plan, acc, *, limit=2.0, resilience=None,
+                    max_actuations=1):
+    qc = QualityConfig(sigma_every=1, probe_every=10_000, slo_every=10_000,
+                       detectors=sigma_threshold_detectors(
+                           matrix_tap_map(CFG, params), limit=limit))
+    ec = EngineConfig(n_slots=2, max_len=32, resilience=resilience,
+                      requant=RequantConfig(min_samples=8, cooldown_steps=4,
+                                            max_actuations=max_actuations))
+    # min_dim below the tiny model's dims so the tree is actually served
+    # quantized (and the rebuilt swap tree rides the same kwargs)
+    return engine_from_plan(CFG, params, plan, calib=acc,
+                            sensitivities=sens, quality_config=qc, config=ec,
+                            quantize_kwargs={"min_dim": 16})
+
+
+def _run_drift_scenario(params, sens, plan, acc, *, resilience=None):
+    """Clean phase then rank-collapsed (repeated-token) phase; returns
+    the engine after the drift loop has had every chance to close."""
+    rng = np.random.default_rng(3)
+    eng = _requant_engine(params, sens, plan, acc, resilience=resilience)
+    clean = [rng.integers(0, CFG.vocab, 8).astype(np.int32)
+             for _ in range(4)]
+    drift = [np.full(8, 7, np.int32) for _ in range(10)]
+    _drive(eng, 0, clean, 30)
+    _drive(eng, 100, drift, 70)
+    return eng
+
+
+def test_drift_fires_actuator_and_stream_never_stalls():
+    params, _, sens, plan, acc = _plan_fixture()
+    with obs.scoped(enable_obs=True):
+        eng = _run_drift_scenario(params, sens, plan, acc)
+    acts = eng.requant.actuations
+    assert len(acts) == 1, "detector never fired the actuator"
+    a = acts[0]
+    assert a["taps"] and a["matrices"]
+    # the swap landed at the NEXT step boundary after the actuation tick
+    swap_ticks = [t for t, why in eng.swap_history if why == "requant"]
+    assert swap_ticks == [a["tick"] + 1]
+    # zero serving gap: every scheduler step with work emitted tokens —
+    # including the swap-window steps themselves
+    busy = [st for st in eng.step_stats if st.active or st.admitted]
+    assert busy and all(st.new_tokens >= 1 for st in busy)
+    assert all(not r.dropped for r in eng.finished)
+    # detectors were re-anchored: the actuator consumed its flags and the
+    # monitor's reference Σ now matches the snapshot it re-planned from
+    for t in a["taps"]:
+        np.testing.assert_array_equal(
+            eng.requant.monitor._ref_sigma[f"{t}/xx"],
+            a["snapshots"][t].sigma)
+
+
+def test_swap_is_bit_identical_to_offline_replan():
+    params, _, sens, plan, acc = _plan_fixture()
+    with obs.scoped(enable_obs=True):
+        eng = _run_drift_scenario(params, sens, plan, acc)
+    [a] = eng.requant.actuations
+    new_plan, tree, _, _, affected = replan_from_sigma(
+        CFG, params, a["plan_before"], a["snapshots"],
+        quantize_kwargs={"min_dim": 16})
+    assert affected == a["matrices"]
+    live, off = jax.tree.leaves(eng.params), jax.tree.leaves(tree)
+    assert len(live) == len(off)
+    for x, y in zip(live, off):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert new_plan.entries == a["plan_after"].entries
+
+
+def test_chaos_device_loss_during_requant_recovers_bit_identically():
+    params, _, sens, plan, acc = _plan_fixture()
+    res = ResilienceConfig(retry=RestartPolicy(max_restarts=2,
+                                               backoff_base_s=0.0,
+                                               backoff_max_s=0.0))
+    fault = ChaosPlan(seed=0, specs=(
+        FaultSpec(kind="device-loss", site="requant.execute", at=(0,),
+                  args=()),))
+    with obs.scoped(enable_obs=True):
+        clean = _run_drift_scenario(params, sens, plan, acc, resilience=res)
+    with obs.scoped(enable_obs=True), chaos.active(fault):
+        faulty = _run_drift_scenario(params, sens, plan, acc, resilience=res)
+    assert len(clean.requant.actuations) == 1
+    assert len(faulty.requant.actuations) == 1, \
+        "faulted actuation was not retried to completion"
+    for x, y in zip(jax.tree.leaves(clean.params),
+                    jax.tree.leaves(faulty.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_chaos_without_retry_propagates():
+    params, _, sens, plan, acc = _plan_fixture()
+    fault = ChaosPlan(seed=0, specs=(
+        FaultSpec(kind="device-loss", site="requant.execute", at=(0,),
+                  args=()),))
+    from repro.chaos import InjectedFault
+    with obs.scoped(enable_obs=True), chaos.active(fault):
+        with pytest.raises(InjectedFault):
+            _run_drift_scenario(params, sens, plan, acc)
+
+
+def test_payload_guard_rebaselines_after_hot_swap():
+    """Regression: a legitimate hot-swap must re-snapshot the pristine
+    payload bytes — without the rebaseline the integrity guard reads the
+    new tree as corruption and 'heals' it back to the pre-swap weights."""
+    params = _params()
+    tree_a = quantize_params_tree(params, min_dim=16)
+    tree_b = quantize_params_tree(params, nbits=4, packed=True, min_dim=16)
+    ec = EngineConfig(n_slots=2, max_len=32,
+                      resilience=ResilienceConfig(integrity_every=1))
+    eng = ContinuousEngine(CFG, tree_a, config=ec)
+    rng = np.random.default_rng(5)
+    _drive(eng, 0, [rng.integers(0, CFG.vocab, 8).astype(np.int32)], 3)
+    baseline_before = dict(eng._guard.checksums)
+    eng.request_swap(tree_b, reason="test")
+    with obs.scoped(enable_obs=True):
+        _drive(eng, 1, [rng.integers(0, CFG.vocab, 8).astype(np.int32)], 6)
+        healed = obs.counters_snapshot("repro_serve_integrity")
+    # served tree IS tree_b (not healed back to tree_a's payloads)
+    for x, y in zip(jax.tree.leaves(eng.params), jax.tree.leaves(tree_b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert eng._guard.checksums != baseline_before
+    assert eng._guard.verify(eng.params) == []
+    assert not healed, "swap was healed as corruption"
+
+
+def test_quality_monitor_on_swap_invalidates_expected_cache():
+    params, _, sens, plan, acc = _plan_fixture()
+    qc = QualityConfig(sigma_every=2, probe_every=2, slo_every=10_000)
+    ec = EngineConfig(n_slots=2, max_len=32)
+    with obs.scoped(enable_obs=True):
+        eng = engine_from_plan(CFG, params, plan, calib=acc,
+                               sensitivities=sens, quality_config=qc,
+                               config=ec, quantize_kwargs={"min_dim": 16})
+        mon = eng._quality
+        rng = np.random.default_rng(6)
+        _drive(eng, 0, [rng.integers(0, CFG.vocab, 8).astype(np.int32)
+                        for _ in range(3)], 20)
+        assert mon._expected, "probe never filled the expected-D cache"
+        mon.on_swap(reason="test")
+        assert not mon._expected
